@@ -1,0 +1,71 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_tables [--dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def render(d: Path) -> str:
+    cells = {}
+    for f in d.glob("*.json"):
+        j = json.loads(f.read_text())
+        cells[(j["arch"], j["shape"], j["mesh"])] = j
+    archs = sorted({k[0] for k in cells})
+    out = []
+    out.append("### Single-pod (16x16 = 256 chips) baseline roofline table\n")
+    out.append("| arch | shape | kind | compute_s | memory_s | collective_s "
+               "| dominant | MODEL_FLOPS/HLO | fraction | fits HBM* |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPES:
+            j = cells.get((a, s, "single"))
+            if j is None:
+                continue
+            if j["status"] == "skip":
+                out.append(f"| {a} | {s} | — | — | — | — | SKIP "
+                           "(full attention @512k) | — | — | — |")
+                continue
+            m = j["memory"]
+            out.append(
+                f"| {a} | {s} | {j['kind']} | {j['compute_s']:.3f} | "
+                f"{j['memory_s']:.3f} | {j['collective_s']:.3f} | "
+                f"{j['dominant'].replace('_s','')} | "
+                f"{j['useful_flops_ratio']:.2f} | "
+                f"{j['roofline_fraction']:.4f} | "
+                f"{'yes' if m['fits_hbm_tpu_adjusted'] else 'NO'} "
+                f"({m['peak_bytes_tpu_adjusted']/1e9:.1f} GB) |")
+    out.append("")
+    out.append("### Multi-pod (2x16x16 = 512 chips) — compile proof + terms\n")
+    out.append("| arch | shape | status | dominant | bound_s | fraction |")
+    out.append("|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPES:
+            j = cells.get((a, s, "multi"))
+            if j is None:
+                continue
+            if j["status"] == "skip":
+                out.append(f"| {a} | {s} | skip | — | — | — |")
+            else:
+                out.append(f"| {a} | {s} | ok | "
+                           f"{j['dominant'].replace('_s','')} | "
+                           f"{j['bound_s']:.3f} | "
+                           f"{j['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun_final")
+    args = ap.parse_args()
+    print(render(Path(args.dir)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Checkpointing: atomic, optionally async, mesh-independent restore.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        arrays.npz          flattened param/opt/state tree
+        meta.json           treedef paths, dtypes, logical specs, step, extras
+    <dir>/step_000042.tmp   (during write; atomic rename on commit)
+    <dir>/LATEST            text file with the newest committed step
+
+Restore reshards automatically: arrays are loaded host-side and
+``jax.device_put`` with the *target* mesh's shardings — a checkpoint written
+on a (16,16) mesh restores onto (8,16) after losing a pod row (elastic
+scaling; see runtime/elastic.py).
+
+Async mode hands the host copy to a commit thread so the train loop only
+blocks for the device→host transfer, not the disk write (overlap trick).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extras: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic synchronous save. Returns the committed path."""
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    final = d / f"step_{step:08d}"
+    tmp = d / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat}
+    np.savez(tmp / "arrays.npz", **arrays)
+    meta = {
+        "step": int(step),
+        "keys": [k for k, _ in flat],
+        "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat},
+        "extras": extras or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic commit
+    (d / "LATEST").write_text(str(step))
+    return str(final)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = Path(directory) / "LATEST"
+    if not p.exists():
+        return None
+    try:
+        step = int(p.read_text().strip())
+    except ValueError:
+        return None
+    if (Path(directory) / f"step_{step:08d}").exists():
+        return step
+    # LATEST points at a missing dir (crash between rename and pointer):
+    # fall back to newest committed dir
+    steps = sorted(int(q.name.split("_")[1]) for q in Path(directory).glob(
+        "step_*") if q.is_dir() and not q.name.endswith(".tmp"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       shardings: Any = None,
+                       step: Optional[int] = None
+                       ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``tree_like``; device_put with
+    ``shardings`` (same treedef) if given — this is where cross-mesh
+    resharding happens."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+
+    flat_like = _flatten_with_paths(tree_like)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves = []
+    for key, like in flat_like:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        want = np.dtype(jax.numpy.asarray(like).dtype
+                        if not hasattr(like, "dtype") else like.dtype)
+        leaves.append(arr.astype(want, copy=False))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        flat_t, td = jax.tree_util.tree_flatten(tree)
+        flat_s = td.flatten_up_to(shardings)
+        tree = td.unflatten([jax.device_put(a, s)
+                             for a, s in zip(flat_t, flat_s)])
+    return tree, step, meta.get("extras", {})
+
+
+class AsyncCheckpointer:
+    """Overlapped checkpointing: device→host copy on the caller thread,
+    serialization + atomic commit on a background thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[int] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any,
+             extras: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def commit():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extras)
+                self.last_committed = step
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=commit, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        d = Path(self.directory)
+        steps = sorted(int(q.name.split("_")[1]) for q in d.glob("step_*")
+                       if q.is_dir() and not q.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(d / f"step_{s:08d}", ignore_errors=True)

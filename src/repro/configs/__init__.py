@@ -1,0 +1,15 @@
+"""repro.configs — one pinned config per assigned architecture (+ reduced
+smoke twins).  Use ``get_config("<arch>")`` / ``--arch <id>`` in launchers."""
+
+from repro.configs.base import (
+    SHAPES,
+    ShapeSpec,
+    applicable,
+    cells,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+
+__all__ = ["SHAPES", "ShapeSpec", "applicable", "cells", "get_config",
+           "get_smoke_config", "list_archs"]

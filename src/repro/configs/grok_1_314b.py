@@ -1,0 +1,47 @@
+"""grok-1-314b — 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]
+
+Sharding note: 8 experts < 16-way model axis, but each expert's d_ff=32768 is
+huge — so experts stay unsharded and every expert FFN is TP-sharded over
+"model" (the per-arch override below).  Optimizer: Adafactor (314B params;
+AdamW's 12 bytes/param does not fit 16 GB/chip on a 256-chip v5e pod).
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    experts_per_token=2,
+    moe_cap_headroom=1.2,    # §Perf: 1.6 costs 33% extra expert FLOPs
+    rope_theta=1e4,
+    optimizer="adafactor",
+    sharding_overrides=(("experts", None), ("mlp", "model")),
+)
+
+SMOKE = ModelConfig(
+    name="grok-1-314b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    num_experts=4,
+    experts_per_token=2,
+    rope_theta=1e4,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "hf:xai-org/grok-1; unverified")

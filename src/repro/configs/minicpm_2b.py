@@ -1,0 +1,42 @@
+"""minicpm-2b — 40L d_model=2304 36H (MHA: kv=36) d_ff=5760 vocab=122753;
+llama-like arch trained with the WSD (warmup-stable-decay) LR schedule,
+which repro/optim/schedules.py implements.  [arXiv:2404.06395; hf]
+
+MiniCPM ties input/output embeddings.  36 heads do not divide the 16-way
+model axis — GSPMD shards unevenly (padded); noted in EXPERIMENTS.md.
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    pad_vocab_multiple=256,   # -> 122880: shards 16-way (§Perf note; the
+                              # unpadded table cannot shard and its CE
+                              # all-reduces dominate prefill at 187 s)
+    tie_embeddings=True,
+    rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm-2b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=72,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=128,
+    vocab_size=257,          # odd vocab on purpose (uneven-shard coverage)
+    tie_embeddings=True,
+    rope_theta=1e4,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "arXiv:2404.06395; hf")

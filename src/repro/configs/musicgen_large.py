@@ -1,0 +1,43 @@
+"""musicgen-large — 48L d_model=2048 32H (MHA kv=32) d_ff=8192 vocab=2048;
+decoder-only over EnCodec tokens.  [arXiv:2306.05284; hf]
+
+Backbone only, per the assignment: the EnCodec/text-conditioning frontend is
+a stub — ``input_specs()`` feeds precomputed frame embeddings (B,S,D).
+MusicGen uses GELU MLP + sinusoidal positions (not RoPE/SwiGLU); the
+4-codebook delay-pattern head is collapsed to a single vocab-2048 head
+(documented in DESIGN.md).
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    mlp="gelu",
+    positional="sinusoidal",
+    frontend="audio",
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=64,
+    mlp="gelu",
+    positional="sinusoidal",
+    frontend="audio",
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "arXiv:2306.05284; hf")

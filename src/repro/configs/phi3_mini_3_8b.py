@@ -1,0 +1,33 @@
+"""phi3-mini-3.8b — 32L d_model=3072 32H (MHA: kv=32) d_ff=8192 vocab=32064;
+RoPE + SwiGLU.  [arXiv:2404.14219; unverified]
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="phi3-mini-3.8b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    rope_theta=1e4,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "arXiv:2404.14219; unverified")

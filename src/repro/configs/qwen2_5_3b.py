@@ -1,0 +1,35 @@
+"""qwen2.5-3b — 36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936;
+GQA with QKV bias.  [hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-3b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    qkv_bias=True,
+    rope_theta=1e6,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "hf:Qwen/Qwen2.5-0.5B; hf")

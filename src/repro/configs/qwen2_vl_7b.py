@@ -1,0 +1,49 @@
+"""qwen2-vl-7b — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064;
+M-RoPE (3-D rotary: temporal/height/width), dynamic resolution.
+[arXiv:2409.12191; hf]
+
+Backbone only: the ViT frontend is a stub — ``input_specs()`` feeds merged
+text+vision embeddings (B,S,D) plus the 3-D M-RoPE position ids (3,B,S).
+M-RoPE sections (16,24,24) over half-dim 64 (head_dim 128).
+
+UDS tie-in: dynamic-resolution images yield variable-length patch streams —
+the classic irregular-iteration workload the packing scheduler balances.
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+    frontend="vision",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-7b-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    qkv_bias=True,
+    mrope_sections=(2, 3, 3),
+    rope_theta=1e6,
+    frontend="vision",
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "arXiv:2409.12191; hf")

@@ -1,0 +1,37 @@
+"""qwen3-32b — 64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936;
+qk-norm, GQA, head_dim=128 (qwen3 family).  [hf:Qwen/Qwen3-8B; hf]
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-32b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    qk_norm=True,
+    rope_theta=1e6,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "hf:Qwen/Qwen3-8B; hf")

@@ -1,0 +1,47 @@
+"""qwen3-moe-235b-a22b — 94L d_model=4096 64H (GQA kv=4) d_ff=1536 (per
+expert) vocab=151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B; hf]
+
+Qwen3 family: head_dim=128, qk-norm, no qkv bias.  128 experts shard evenly
+over the 16-way model axis (8 experts/chip) — the headline expert-parallel
+case for the WF2 capacity scheduler.  Optimizer: Adafactor (235B params).
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    num_experts=128,
+    experts_per_token=8,
+    moe_cap_headroom=1.2,    # §Perf: 1.6 costs 33% extra expert FLOPs
+    qk_norm=True,
+    rope_theta=1e6,
+    optimizer="adafactor",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-235b-a22b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=256,
+    num_experts=8,
+    experts_per_token=2,
+    qk_norm=True,
+    rope_theta=1e6,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "hf:Qwen/Qwen3-30B-A3B; hf")

@@ -1,0 +1,40 @@
+"""rwkv6-3b "Finch" — 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536; data-dependent decay.  [arXiv:2404.05892; hf]
+
+Attention-free: O(1) state per token -> runs the long_500k cell.
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # wkv heads: d_model / wkv_head_dim
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    wkv_head_dim=64,
+    attention="none",
+    positional="none",
+    scan_chunk=32,
+)
+
+SMOKE = ModelConfig(
+    name="rwkv6-3b-smoke",
+    family="ssm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    wkv_head_dim=16,
+    attention="none",
+    positional="none",
+    scan_chunk=8,
+)
+
+register(CONFIG, SMOKE, "arXiv:2404.05892; hf")

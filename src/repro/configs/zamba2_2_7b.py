@@ -1,0 +1,49 @@
+"""zamba2-2.7b — 54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000,
+ssm_state=64; Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]
+
+Hybrid: O(1) SSM state + periodic shared attention -> runs long_500k.
+One shared attn+MLP block applied after every 6th Mamba2 layer (9
+applications), on concat(hidden, embedding); per-application LoRA omitted
+(DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import ModelConfig
+from repro.configs.base import register
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    shared_attention_every=6,
+    attention="hybrid",
+    scan_chunk=32,
+    rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-2.7b-smoke",
+    family="hybrid",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    ssm_state=16,
+    shared_attention_every=2,
+    attention="hybrid",
+    scan_chunk=8,
+    rope_theta=1e4,
+    flash_threshold=64,
+)
+
+register(CONFIG, SMOKE, "arXiv:2411.15242; hf")

@@ -1,0 +1,38 @@
+"""repro.core — the paper's primary contribution.
+
+A standard interface for user-defined scheduling (UDS), reproduced from
+"Toward a Standard Interface for User-Defined Scheduling in OpenMP"
+(Kale, Iwainsky, Klemm, Müller Korndörfer, Ciorba; 2019), adapted to a
+JAX/TPU training & inference framework:
+
+* ``interface``    — the six-op / reduced three-op UDS protocol
+* ``declare``      — declare-style specification (paper §4.2)
+* ``lambda_style`` — lambda-style specification (paper §4.1)
+* ``history``      — cross-invocation measurement store (paper §3)
+* ``executor``     — host-side OpenMP-semantics team executor
+* ``wave``         — SPMD batched dequeue → static schedule plans
+* ``schedulers``   — STATIC/SS/GSS/TSS/FAC/FAC2/WF2/AWF*/AF/RAND/FSC/steal
+"""
+
+from repro.core.interface import (
+    Chunk,
+    LoopSpec,
+    SchedulerContext,
+    SixOpSchedule,
+    UserDefinedSchedule,
+    chunks_cover,
+    three_op_from_six,
+)
+from repro.core.history import ChunkRecord, InvocationRecord, LoopHistory
+from repro.core.executor import LoopResult, run_loop, simulate_loop
+from repro.core.wave import SchedulePlan, plan_schedule, plan_waves
+from repro.core.schedulers import SCHEDULER_FACTORIES, make_scheduler
+
+__all__ = [
+    "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
+    "SixOpSchedule", "three_op_from_six", "chunks_cover",
+    "ChunkRecord", "InvocationRecord", "LoopHistory",
+    "LoopResult", "run_loop", "simulate_loop",
+    "SchedulePlan", "plan_schedule", "plan_waves",
+    "SCHEDULER_FACTORIES", "make_scheduler",
+]

@@ -1,0 +1,226 @@
+"""Declare-style UDS specification (paper §4.2).
+
+Mirrors the proposed OpenMP syntax::
+
+    #pragma omp declare schedule(mystatic) arguments(2) \
+        init(my_init(omp_lb, omp_ub, omp_inc, omp_arg0, omp_arg1)) \
+        next(my_next(omp_lb_chunk, omp_ub_chunk, omp_arg0, omp_arg1)) \
+        fini(my_fini(omp_arg1))
+
+in Python::
+
+    declare_schedule(
+        "mystatic", arguments=2,
+        init=call(my_init, OMP_LB, OMP_UB, OMP_INCR, OMP_CHUNKSZ, ARG(0), ARG(1)),
+        next=call(my_next, OMP_LB_CHUNK, OMP_UB_CHUNK, OMP_CHUNK_INCR, ARG(0), ARG(1)),
+        fini=call(my_fini, ARG(1)),
+    )
+    sched = use_schedule("mystatic", lr0, lr1)   # schedule(mystatic(&lr...))
+
+The ``OMP_*`` sentinels are the paper's reserved positional markers: "the
+reserved keywords omp_lb, omp_ub, omp_inc, omp_lb_chunk, and omp_ub_chunk
+serve as markers for the compiler what information about the loop iteration
+space to pass to the UDS".  ``OMP_LB_CHUNK``/``OMP_UB_CHUNK``/
+``OMP_CHUNK_INCR`` are *out*-parameters (C ``int *``), modelled as ``Ref``
+cells.  The user ``next`` function must return non-zero while chunks remain
+and zero when the loop is complete — exactly the paper's contract.
+
+``omp_get_thread_num()`` is provided so user functions can be written as in
+the paper's Fig. 2 (thread identity comes from the runtime, not from an
+argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.interface import Chunk, LoopSpec, SchedulerContext
+
+__all__ = [
+    "OMP_LB", "OMP_UB", "OMP_INCR", "OMP_CHUNKSZ", "OMP_NUM_WORKERS",
+    "OMP_LB_CHUNK", "OMP_UB_CHUNK", "OMP_CHUNK_INCR", "ARG", "Ref",
+    "call", "declare_schedule", "use_schedule", "omp_get_thread_num",
+    "registered_schedules",
+]
+
+
+class _Marker:
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:
+        return self.name
+
+
+# Reserved positional markers (paper §4.2).
+OMP_LB = _Marker("omp_lb")
+OMP_UB = _Marker("omp_ub")
+OMP_INCR = _Marker("omp_inc")
+OMP_CHUNKSZ = _Marker("omp_chunksz")
+OMP_NUM_WORKERS = _Marker("omp_num_workers")
+OMP_LB_CHUNK = _Marker("omp_lb_chunk")     # int* out
+OMP_UB_CHUNK = _Marker("omp_ub_chunk")     # int* out
+OMP_CHUNK_INCR = _Marker("omp_chunk_incr")  # int* out
+
+
+class _UserArg(_Marker):
+    def __init__(self, index: int):
+        super().__init__(f"omp_arg{index}")
+        self.index = index
+
+
+def ARG(index: int) -> _UserArg:
+    """The compiler-generated ``omp_argN`` user-argument markers."""
+    return _UserArg(index)
+
+
+class Ref:
+    """Models a C out-parameter (``int *``)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: int = 0):
+        self.value = value
+
+    def set(self, value: int) -> None:
+        self.value = int(value)
+
+
+@dataclasses.dataclass
+class _BoundCall:
+    fn: Callable
+    markers: Tuple[Any, ...]
+
+
+def call(fn: Callable, *markers: Any) -> _BoundCall:
+    """Bind a user function to positional markers (the 'declare' syntax)."""
+    return _BoundCall(fn, markers)
+
+
+# --------------------------------------------------------------------------
+# Thread-identity shim: user scheduler code calls omp_get_thread_num() just
+# like in the paper's Fig. 2.  The executor sets the current worker id
+# around every scheduler operation.
+_tls = threading.local()
+
+
+def omp_get_thread_num() -> int:
+    return getattr(_tls, "tid", 0)
+
+
+def _set_thread_num(tid: int) -> None:
+    _tls.tid = tid
+
+
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, "DeclaredSchedule"] = {}
+
+
+@dataclasses.dataclass
+class DeclaredSchedule:
+    name: str
+    arguments: int
+    init: Optional[_BoundCall]
+    next: _BoundCall
+    fini: Optional[_BoundCall]
+
+
+def declare_schedule(name: str, *, arguments: int = 0,
+                     init: Optional[_BoundCall] = None,
+                     next: _BoundCall = None,
+                     fini: Optional[_BoundCall] = None,
+                     replace: bool = False) -> DeclaredSchedule:
+    if next is None:
+        raise ValueError("a UDS must define the next (dequeue) operation")
+    if name in _REGISTRY and not replace:
+        raise ValueError(f"schedule {name!r} already declared")
+    decl = DeclaredSchedule(name, arguments, init, next, fini)
+    _REGISTRY[name] = decl
+    return decl
+
+
+def registered_schedules() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class _DeclaredAdapter:
+    """Adapts a declared schedule to the internal three-op interface.
+
+    This is the 'compiler' of the proposal: it resolves the positional
+    markers against the actual loop descriptor and splices the user
+    functions into the standard loop transformation pattern.
+    """
+
+    def __init__(self, decl: DeclaredSchedule, user_args: Sequence[Any]):
+        if len(user_args) != decl.arguments:
+            raise TypeError(
+                f"schedule {decl.name!r} declared with arguments"
+                f"({decl.arguments}) but used with {len(user_args)}")
+        self._decl = decl
+        self._args = list(user_args)
+        self.name = decl.name
+
+    # -- marker resolution -------------------------------------------------
+    def _resolve(self, bound: _BoundCall, loop: LoopSpec,
+                 refs: Dict[str, Ref]) -> List[Any]:
+        out: List[Any] = []
+        for m in bound.markers:
+            if isinstance(m, _UserArg):
+                out.append(self._args[m.index])
+            elif m is OMP_LB:
+                out.append(loop.lb)
+            elif m is OMP_UB:
+                out.append(loop.ub)
+            elif m is OMP_INCR:
+                out.append(loop.incr)
+            elif m is OMP_CHUNKSZ:
+                out.append(loop.chunk if loop.chunk is not None else 1)
+            elif m is OMP_NUM_WORKERS:
+                out.append(loop.num_workers)
+            elif m in (OMP_LB_CHUNK, OMP_UB_CHUNK, OMP_CHUNK_INCR):
+                out.append(refs[m.name])
+            else:
+                out.append(m)  # plain value captured in the declaration
+        return out
+
+    # -- three-op interface -------------------------------------------------
+    def start(self, ctx: SchedulerContext) -> Any:
+        loop = ctx.loop
+        if self._decl.init is not None:
+            _set_thread_num(0)
+            self._decl.init.fn(*self._resolve(self._decl.init, loop, {}))
+        return {"loop": loop}
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        loop: LoopSpec = state["loop"]
+        refs = {"omp_lb_chunk": Ref(), "omp_ub_chunk": Ref(),
+                "omp_chunk_incr": Ref(loop.incr)}
+        _set_thread_num(worker)
+        has_work = self._decl.next.fn(
+            *self._resolve(self._decl.next, loop, refs))
+        if not has_work:
+            return None
+        # User code works in *source* index space (as in the paper's C
+        # examples); convert [lb_chunk, ub_chunk) back to logical space.
+        lo_src = refs["omp_lb_chunk"].value
+        hi_src = refs["omp_ub_chunk"].value
+        lo = (lo_src - loop.lb) // loop.incr
+        hi = (hi_src - loop.lb) // loop.incr
+        return Chunk(lo, hi, worker)
+
+    def finish(self, state: Any) -> None:
+        if self._decl.fini is not None:
+            _set_thread_num(0)
+            self._decl.fini.fn(
+                *self._resolve(self._decl.fini, state["loop"], {}))
+
+
+def use_schedule(name: str, *user_args: Any) -> _DeclaredAdapter:
+    """``schedule(mystatic(&lr))`` — instantiate a declared schedule."""
+    if name not in _REGISTRY:
+        raise KeyError(f"no schedule declared under name {name!r}; "
+                       f"known: {registered_schedules()}")
+    return _DeclaredAdapter(_REGISTRY[name], user_args)

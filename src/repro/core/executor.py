@@ -1,0 +1,210 @@
+"""Host-side loop executor with OpenMP team semantics.
+
+Implements the paper's Fig. 1 control flow exactly::
+
+    state = sched.start(ctx)                       # setup + enqueue
+    while (chunk := sched.next(state, tid, dt)):   # end-body+dequeue+begin-body
+        execute chunk
+    sched.finish(state)                            # finalize
+
+Because this container has a single CPU core, the team is executed under a
+**virtual clock** (deterministic discrete-event simulation): the idle-most
+worker dequeues next, exactly the receiver-initiated semantics of a real
+OpenMP team, while chunk costs come either from real measured wall time
+(``body`` mode) or from a cost model (``costs`` mode — used by the makespan
+benchmarks to reproduce the qualitative literature results the paper cites).
+
+The executor is also what the *distributed* layers use to plan work
+assignments (see ``core/wave.py`` for the SPMD batched variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.history import LoopHistory
+from repro.core.interface import (
+    Chunk,
+    LoopSpec,
+    SchedulerContext,
+    UserDefinedSchedule,
+    chunks_cover,
+)
+
+__all__ = ["LoopResult", "run_loop", "simulate_loop"]
+
+
+@dataclasses.dataclass
+class LoopResult:
+    loop: LoopSpec
+    chunks: List[Chunk]
+    worker_time: List[float]       # virtual busy time per worker
+    worker_finish: List[float]     # virtual finish time per worker
+    dequeues: int
+    overhead_time: float           # total scheduling overhead charged
+
+    @property
+    def makespan(self) -> float:
+        return max(self.worker_finish, default=0.0)
+
+    @property
+    def total_work(self) -> float:
+        return sum(self.worker_time)
+
+    @property
+    def imbalance(self) -> float:
+        """Percent load imbalance: (max/mean - 1)."""
+        if not self.worker_time or max(self.worker_time) == 0:
+            return 0.0
+        mean = sum(self.worker_time) / len(self.worker_time)
+        if mean == 0:
+            return 0.0
+        return max(self.worker_time) / mean - 1.0
+
+    @property
+    def cov(self) -> float:
+        """Coefficient of variation of worker finish times."""
+        t = np.asarray(self.worker_finish)
+        if t.size == 0 or t.mean() == 0:
+            return 0.0
+        return float(t.std() / t.mean())
+
+    def per_worker_chunks(self) -> Dict[int, List[Chunk]]:
+        out: Dict[int, List[Chunk]] = {}
+        for c in self.chunks:
+            out.setdefault(c.worker, []).append(c)
+        return out
+
+
+def _drive(sched: UserDefinedSchedule,
+           ctx: SchedulerContext,
+           chunk_cost: Callable[[Chunk, int], float],
+           overhead: float,
+           speeds: Optional[Sequence[float]],
+           check_coverage: bool) -> LoopResult:
+    loop = ctx.loop
+    p = loop.num_workers
+    speeds = list(speeds) if speeds is not None else [1.0] * p
+    if len(speeds) != p:
+        raise ValueError("speeds must have one entry per worker")
+
+    state = sched.start(ctx)
+    if ctx.history is not None:
+        ctx.history.open_invocation(loop.loop_id)
+
+    # discrete-event simulation: (available_time, worker)
+    pq: List = [(0.0, w) for w in range(p)]
+    heapq.heapify(pq)
+    last_elapsed: Dict[int, Optional[float]] = {w: None for w in range(p)}
+    busy = [0.0] * p
+    finish = [0.0] * p
+    chunks: List[Chunk] = []
+    dequeues = 0
+    ovh_total = 0.0
+
+    while pq:
+        now, w = heapq.heappop(pq)
+        chunk = sched.next(state, w, last_elapsed[w])
+        dequeues += 1
+        ovh_total += overhead
+        if chunk is None:
+            finish[w] = max(finish[w], now)
+            continue
+        dt = chunk_cost(chunk, w) / max(speeds[w], 1e-12)
+        last_elapsed[w] = dt
+        busy[w] += dt
+        end = now + overhead + dt
+        finish[w] = end
+        chunks.append(chunk)
+        heapq.heappush(pq, (end, w))
+
+    sched.finish(state)
+
+    if check_coverage and not chunks_cover(loop, chunks):
+        raise AssertionError(
+            f"scheduler {getattr(sched, 'name', sched)!r} violated the todo-"
+            f"list invariant: chunks do not exactly tile [0, {loop.trip_count})")
+
+    return LoopResult(loop=loop, chunks=chunks, worker_time=busy,
+                      worker_finish=finish, dequeues=dequeues,
+                      overhead_time=ovh_total)
+
+
+def run_loop(sched: UserDefinedSchedule,
+             loop: Union[LoopSpec, range, int],
+             body: Callable[[int], Any],
+             *,
+             num_workers: Optional[int] = None,
+             history: Optional[LoopHistory] = None,
+             user_data: Any = None,
+             weights: Optional[Sequence[float]] = None,
+             check_coverage: bool = True) -> LoopResult:
+    """Execute ``body(i)`` for every iteration under the given schedule,
+    measuring real wall time per chunk (feeds adaptive schedulers)."""
+    loop = _as_loop(loop, num_workers)
+    ctx = SchedulerContext(loop=loop, history=history, user_data=user_data,
+                           weights=weights)
+
+    def cost(chunk: Chunk, worker: int) -> float:
+        t0 = time.perf_counter()
+        for i in chunk.indices(loop):
+            body(i)
+        return time.perf_counter() - t0
+
+    return _drive(sched, ctx, cost, overhead=0.0, speeds=None,
+                  check_coverage=check_coverage)
+
+
+def simulate_loop(sched: UserDefinedSchedule,
+                  loop: Union[LoopSpec, range, int],
+                  costs: Union[Sequence[float], Callable[[int], float]],
+                  *,
+                  num_workers: Optional[int] = None,
+                  speeds: Optional[Sequence[float]] = None,
+                  overhead: float = 0.0,
+                  history: Optional[LoopHistory] = None,
+                  user_data: Any = None,
+                  weights: Optional[Sequence[float]] = None,
+                  check_coverage: bool = True) -> LoopResult:
+    """Deterministic virtual-time execution with per-iteration ``costs``,
+    per-worker ``speeds`` (heterogeneity / stragglers) and per-dequeue
+    ``overhead`` (the h of FSC).  This is the benchmark engine."""
+    loop = _as_loop(loop, num_workers)
+    ctx = SchedulerContext(loop=loop, history=history, user_data=user_data,
+                           weights=weights)
+    if callable(costs):
+        cost_of = costs
+    else:
+        arr = np.asarray(costs, dtype=np.float64)
+        if arr.shape[0] != loop.trip_count:
+            raise ValueError(
+                f"costs has {arr.shape[0]} entries, loop has {loop.trip_count}")
+        prefix = np.concatenate([[0.0], np.cumsum(arr)])
+
+        def cost_of(i: int) -> float:  # noqa: unused - replaced below
+            return float(arr[i])
+
+    def chunk_cost(chunk: Chunk, worker: int) -> float:
+        if callable(costs):
+            return sum(cost_of(i) for i in range(chunk.start, chunk.stop))
+        return float(prefix[chunk.stop] - prefix[chunk.start])
+
+    return _drive(sched, ctx, chunk_cost, overhead=overhead, speeds=speeds,
+                  check_coverage=check_coverage)
+
+
+def _as_loop(loop: Union[LoopSpec, range, int],
+             num_workers: Optional[int]) -> LoopSpec:
+    if isinstance(loop, LoopSpec):
+        if num_workers is not None and num_workers != loop.num_workers:
+            loop = dataclasses.replace(loop, num_workers=num_workers)
+        return loop
+    if isinstance(loop, int):
+        loop = range(loop)
+    return LoopSpec(lb=loop.start, ub=loop.stop, incr=loop.step,
+                    num_workers=num_workers or 1)

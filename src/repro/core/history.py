@@ -1,0 +1,162 @@
+"""Cross-invocation measurement history (paper §3).
+
+"UDS must provide a mechanism to store and access the history of loop timings
+or other statistics across multiple loop iterations and/or invocations in an
+application program, e.g., across simulation time-steps of a numerical
+simulation."
+
+``LoopHistory`` is that mechanism: a per-loop-id store of per-invocation,
+per-worker measurements.  It is plain data (serializable) so it can ride in a
+training checkpoint — adaptive schedulers survive a restart with their learned
+state intact (fault-tolerance requirement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["ChunkRecord", "InvocationRecord", "LoopHistory"]
+
+
+@dataclasses.dataclass
+class ChunkRecord:
+    worker: int
+    start: int
+    stop: int
+    elapsed: Optional[float] = None  # seconds; None if not measured
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def rate(self) -> Optional[float]:
+        """Seconds per iteration — the adaptive strategies' basic statistic."""
+        if self.elapsed is None or self.size == 0:
+            return None
+        return self.elapsed / self.size
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    chunks: List[ChunkRecord] = dataclasses.field(default_factory=list)
+
+    def worker_time(self, worker: int) -> float:
+        return sum(c.elapsed or 0.0 for c in self.chunks if c.worker == worker)
+
+    def worker_iters(self, worker: int) -> int:
+        return sum(c.size for c in self.chunks if c.worker == worker)
+
+    def makespan(self, num_workers: int) -> float:
+        return max((self.worker_time(w) for w in range(num_workers)), default=0.0)
+
+    def total_time(self) -> float:
+        return sum(c.elapsed or 0.0 for c in self.chunks)
+
+    def imbalance(self, num_workers: int) -> float:
+        """(max - mean)/max over worker finish times; 0 = perfectly balanced."""
+        times = [self.worker_time(w) for w in range(num_workers)]
+        mx = max(times, default=0.0)
+        if mx <= 0:
+            return 0.0
+        return (mx - sum(times) / len(times)) / mx
+
+
+class LoopHistory:
+    """Measurement store keyed by loop id.
+
+    Adaptive schedulers read:
+      * ``worker_rates(loop_id)``  — per-worker mean seconds/iteration,
+      * ``worker_rate_stats(loop_id)`` — (mean, std) per worker,
+      * ``awf_weights(loop_id, P)`` — normalized AWF capability weights.
+    The executor writes via ``record``.
+    """
+
+    def __init__(self) -> None:
+        self._data: Dict[str, List[InvocationRecord]] = {}
+
+    # ------------------------------------------------------------- writing
+    def open_invocation(self, loop_id: str) -> InvocationRecord:
+        inv = InvocationRecord()
+        self._data.setdefault(loop_id, []).append(inv)
+        return inv
+
+    def record(self, loop_id: str, rec: ChunkRecord) -> None:
+        if loop_id not in self._data or not self._data[loop_id]:
+            self.open_invocation(loop_id)
+        self._data[loop_id][-1].chunks.append(rec)
+
+    # ------------------------------------------------------------- reading
+    def invocations(self, loop_id: str) -> List[InvocationRecord]:
+        return self._data.get(loop_id, [])
+
+    def num_invocations(self, loop_id: str) -> int:
+        return len(self._data.get(loop_id, []))
+
+    def worker_rates(self, loop_id: str, last_k: Optional[int] = None
+                     ) -> Dict[int, float]:
+        """Mean seconds/iteration per worker over the last_k invocations."""
+        invs = self.invocations(loop_id)
+        if last_k is not None:
+            invs = invs[-last_k:]
+        total_t: Dict[int, float] = {}
+        total_i: Dict[int, int] = {}
+        for inv in invs:
+            for c in inv.chunks:
+                if c.elapsed is None or c.size == 0:
+                    continue
+                total_t[c.worker] = total_t.get(c.worker, 0.0) + c.elapsed
+                total_i[c.worker] = total_i.get(c.worker, 0) + c.size
+        return {w: total_t[w] / total_i[w] for w in total_t if total_i.get(w)}
+
+    def worker_rate_stats(self, loop_id: str) -> Dict[int, Tuple[float, float]]:
+        """(mean, std) of per-chunk iteration rates, per worker (for AF)."""
+        per: Dict[int, List[float]] = {}
+        for inv in self.invocations(loop_id):
+            for c in inv.chunks:
+                r = c.rate
+                if r is not None:
+                    per.setdefault(c.worker, []).append(r)
+        out: Dict[int, Tuple[float, float]] = {}
+        for w, rates in per.items():
+            mu = sum(rates) / len(rates)
+            var = sum((r - mu) ** 2 for r in rates) / len(rates)
+            out[w] = (mu, math.sqrt(var))
+        return out
+
+    def awf_weights(self, loop_id: str, num_workers: int) -> List[float]:
+        """AWF (Banicescu et al.) capability weights, normalized to sum P.
+
+        weight_i ∝ (1/rate_i); workers never measured get the mean weight.
+        """
+        rates = self.worker_rates(loop_id)
+        if not rates:
+            return [1.0] * num_workers
+        speeds = {w: 1.0 / r for w, r in rates.items() if r > 0}
+        mean_speed = sum(speeds.values()) / max(len(speeds), 1)
+        raw = [speeds.get(w, mean_speed) for w in range(num_workers)]
+        total = sum(raw)
+        if total <= 0:
+            return [1.0] * num_workers
+        return [num_workers * s / total for s in raw]
+
+    # ------------------------------------------------------ serialization
+    def to_json(self) -> str:
+        payload = {
+            lid: [[dataclasses.asdict(c) for c in inv.chunks] for inv in invs]
+            for lid, invs in self._data.items()
+        }
+        return json.dumps(payload)
+
+    @classmethod
+    def from_json(cls, text: str) -> "LoopHistory":
+        h = cls()
+        payload = json.loads(text)
+        for lid, invs in payload.items():
+            for chunks in invs:
+                inv = h.open_invocation(lid)
+                inv.chunks.extend(ChunkRecord(**c) for c in chunks)
+        return h

@@ -1,0 +1,224 @@
+"""The paper's contribution: a standard interface for user-defined scheduling.
+
+The paper (Kale et al., 2019) reduces *any* loop-scheduling strategy to six
+operations over a conceptual todo-list of iteration chunks:
+
+    init, enqueue, dequeue, finalize, begin-loop-body, end-loop-body
+
+and shows that under OpenMP's loop constraints these merge into **three**
+user-visible operations:
+
+    start      = init + enqueue      (iteration space fixed before the loop)
+    next       = end-body + dequeue + begin-body   (always back-to-back)
+    finish     = finalize
+
+This module defines those operations as a Python protocol.  Everything else in
+this framework — the host-side executor, the SPMD wave planner, document
+packing, MoE capacity, microbatch scheduling, Pallas chunk tables — consumes
+schedulers ONLY through this interface, mirroring the paper's requirement that
+a UDS be implementable "without having to alter the OpenMP runtime library".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator, NamedTuple, Optional, Protocol, Sequence
+
+__all__ = [
+    "LoopSpec",
+    "Chunk",
+    "SchedulerContext",
+    "UserDefinedSchedule",
+    "SixOpSchedule",
+    "three_op_from_six",
+    "normalize_loop",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopSpec:
+    """The critical loop parameters a UDS must be able to access (paper §4).
+
+    a) lower bound, b) upper bound, c) stride, d) custom data, e) chunk size.
+    ``chunk`` here is the paper's "optimization parameter used to group
+    multiple iterations into a single loop scheduling item", NOT necessarily
+    the OpenMP schedule() chunksize.
+    """
+
+    lb: int                      # omp_lb    — first iteration (inclusive)
+    ub: int                      # omp_ub    — end of iteration space (exclusive)
+    incr: int = 1                # omp_inc   — loop stride
+    chunk: Optional[int] = None  # grouping / minimum chunk parameter
+    num_workers: int = 1         # team size P
+    loop_id: str = "loop"        # identity for cross-invocation history
+
+    def __post_init__(self) -> None:
+        if self.incr == 0:
+            raise ValueError("loop increment must be non-zero")
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.chunk is not None and self.chunk < 1:
+            raise ValueError("chunk must be >= 1 when given")
+
+    @property
+    def trip_count(self) -> int:
+        """Number of iterations N (OpenMP: known before loop execution)."""
+        if self.incr > 0:
+            span = self.ub - self.lb
+        else:
+            span = self.lb - self.ub
+        if span <= 0:
+            return 0
+        return (span + abs(self.incr) - 1) // abs(self.incr)
+
+
+class Chunk(NamedTuple):
+    """A contiguous range of *logical* iterations [start, stop) dequeued by
+    one worker.  Logical iteration k maps to source index lb + k*incr."""
+
+    start: int   # logical start (0-based, inclusive)
+    stop: int    # logical stop (exclusive)
+    worker: int  # the worker (thread) that dequeued this chunk
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+    def indices(self, loop: LoopSpec) -> range:
+        """Materialize the source-space indices of this chunk."""
+        return range(
+            loop.lb + self.start * loop.incr,
+            loop.lb + self.stop * loop.incr,
+            loop.incr,
+        )
+
+
+def normalize_loop(loop: LoopSpec) -> int:
+    """Return trip count; schedulers operate on logical 0..N-1 space."""
+    return loop.trip_count
+
+
+@dataclasses.dataclass
+class SchedulerContext:
+    """Everything a scheduler may consult at ``start`` time.
+
+    ``history`` is the paper's cross-invocation measurement store ("a
+    mechanism to store and access the history of loop timings or other
+    statistics across multiple loop iterations and/or invocations").
+    ``user_data`` is the paper's custom-data pointer (``uds_data(void*)`` /
+    ``omp_argN``).
+    """
+
+    loop: LoopSpec
+    history: Any = None          # core.history.LoopHistory | None
+    user_data: Any = None
+    weights: Optional[Sequence[float]] = None  # per-worker capability weights
+
+
+class UserDefinedSchedule(Protocol):
+    """The reduced three-operation interface (paper §4, final form).
+
+    Lifecycle (host-side, OpenMP semantics)::
+
+        state = sched.start(ctx)
+        while True:
+            chunk = sched.next(state, worker, elapsed_of_previous_chunk)
+            if chunk is None: break          # "return 0" in the paper
+            ... execute chunk ...
+        sched.finish(state)
+
+    ``next`` receives the *measured execution time of the worker's previous
+    chunk* (or None on first call / when measurement is disabled) — this is
+    the merged end-body/dequeue/begin-body operation that adaptive strategies
+    (paper type-(3)) require.  Non-adaptive strategies ignore it.
+    """
+
+    name: str
+
+    def start(self, ctx: SchedulerContext) -> Any: ...
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]: ...
+
+    def finish(self, state: Any) -> None: ...
+
+
+class SixOpSchedule(Protocol):
+    """The unreduced six-operation set (paper §3) — provided so the reduction
+    claim is *demonstrated in code*: ``three_op_from_six`` adapts any six-op
+    scheduler to the reduced interface, and tests assert the schedules are
+    identical."""
+
+    name: str
+
+    def init(self, ctx: SchedulerContext) -> Any: ...
+    def enqueue(self, state: Any) -> None: ...
+    def dequeue(self, state: Any, worker: int) -> Optional[Chunk]: ...
+    def begin_loop_body(self, state: Any, worker: int, chunk: Chunk) -> Any: ...
+    def end_loop_body(self, state: Any, worker: int, chunk: Chunk,
+                      token: Any, elapsed: Optional[float]) -> None: ...
+    def finalize(self, state: Any) -> None: ...
+
+
+class _SixOpAdapter:
+    """Adapt a six-op scheduler to the reduced three-op interface.
+
+    Implements exactly the merges the paper argues for:
+      * ``start``  = init + enqueue  (iteration space fixed pre-loop),
+      * ``next``   = end-loop-body(prev) + dequeue + begin-loop-body(new),
+      * ``finish`` = finalize.
+    """
+
+    def __init__(self, six: SixOpSchedule):
+        self._six = six
+        self.name = six.name
+
+    def start(self, ctx: SchedulerContext) -> Any:
+        state = self._six.init(ctx)
+        self._six.enqueue(state)
+        # per-worker bookkeeping of the in-flight chunk for the merge
+        return {"inner": state, "inflight": {}, "tokens": {}}
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        inner = state["inner"]
+        prev = state["inflight"].pop(worker, None)
+        if prev is not None:
+            self._six.end_loop_body(inner, worker, prev,
+                                    state["tokens"].pop(worker, None), elapsed)
+        chunk = self._six.dequeue(inner, worker)
+        if chunk is None:
+            return None
+        state["inflight"][worker] = chunk
+        state["tokens"][worker] = self._six.begin_loop_body(inner, worker, chunk)
+        return chunk
+
+    def finish(self, state: Any) -> None:
+        self._six.finalize(state["inner"])
+
+
+def three_op_from_six(six: SixOpSchedule) -> UserDefinedSchedule:
+    """The paper's reduction, as an executable adapter."""
+    return _SixOpAdapter(six)
+
+
+def chunks_cover(loop: LoopSpec, chunks: Sequence[Chunk]) -> bool:
+    """Invariant checker: chunks exactly tile [0, N) with no overlap.
+
+    This is the executable form of the paper's correctness requirement on a
+    todo list: every iteration is enqueued once and dequeued exactly once.
+    Used by tests and by the executor's debug mode.
+    """
+    n = loop.trip_count
+    seen = sorted((c.start, c.stop) for c in chunks)
+    pos = 0
+    for start, stop in seen:
+        if start != pos or stop < start:
+            return False
+        pos = stop
+    return pos == n
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

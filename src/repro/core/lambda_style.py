@@ -1,0 +1,253 @@
+"""Lambda-style UDS specification (paper §4.1).
+
+Mirrors the proposed OpenMP syntax::
+
+    #pragma omp declare schedule_template (mystatic) \
+        init(@@INIT_LAMBDA@@) dequeue(@@DEQUEUE_LAMBDA@@) \
+        finalize(@@FINISH_LAMBDA@@) uds_data(void*)
+
+    #pragma omp parallel for schedule(UDS, template(mystatic))
+
+in Python::
+
+    schedule_template("mystatic", init=..., dequeue=..., finalize=...)
+    sched = UDS(template="mystatic", chunk=16, uds_data=my_state)
+
+The lambdas take **no arguments** (exactly as in the paper's Fig. 2 left):
+they interact with the loop through the compiler-provided getter/setter
+functions below, which this module supplies as module-level functions
+reading an implicit per-worker context:
+
+    getters:  OMP_UDS_loop_start()  OMP_UDS_loop_end()  OMP_UDS_loop_step()
+              OMP_UDS_chunksize()   OMP_UDS_user_ptr()  OMP_UDS_num_workers()
+    setters:  OMP_UDS_loop_chunk_start(i)  OMP_UDS_loop_chunk_end(i)
+              OMP_UDS_loop_chunk_step(s)   OMP_UDS_loop_dequeue_done()
+
+A dequeue lambda signals completion either by calling
+``OMP_UDS_loop_dequeue_done()`` or by returning a falsy value without
+setting a chunk (the paper's ``return 0``).
+
+Templates may be partially overridden at the use site ("overwrite specific
+elements of an existing UDS template for a specific loop" — paper §4.1):
+``UDS(template="mystatic", dequeue=other_fn)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.interface import Chunk, LoopSpec, SchedulerContext
+from repro.core.declare import omp_get_thread_num, _set_thread_num
+
+__all__ = [
+    "schedule_template", "UDS", "registered_templates",
+    "OMP_UDS_loop_start", "OMP_UDS_loop_end", "OMP_UDS_loop_step",
+    "OMP_UDS_chunksize", "OMP_UDS_user_ptr", "OMP_UDS_num_workers",
+    "OMP_UDS_loop_chunk_start", "OMP_UDS_loop_chunk_end",
+    "OMP_UDS_loop_chunk_step", "OMP_UDS_loop_dequeue_done",
+    "omp_get_thread_num",
+]
+
+
+@dataclasses.dataclass
+class _ActiveLoop:
+    loop: LoopSpec
+    user_ptr: Any
+    # per-dequeue scratch
+    chunk_start: Optional[int] = None
+    chunk_end: Optional[int] = None
+    chunk_step: Optional[int] = None
+    done: bool = False
+
+
+_tls = threading.local()
+
+
+def _active() -> _ActiveLoop:
+    ctx = getattr(_tls, "uds_ctx", None)
+    if ctx is None:
+        raise RuntimeError(
+            "OMP_UDS_* getters/setters may only be called from inside a UDS "
+            "lambda during loop execution")
+    return ctx
+
+
+# ------------------------------ getters (compiler-generated in the paper)
+def OMP_UDS_loop_start() -> int:
+    return _active().loop.lb
+
+
+def OMP_UDS_loop_end() -> int:
+    return _active().loop.ub
+
+
+def OMP_UDS_loop_step() -> int:
+    return _active().loop.incr
+
+
+def OMP_UDS_chunksize() -> int:
+    c = _active().loop.chunk
+    return c if c is not None else 1
+
+
+def OMP_UDS_num_workers() -> int:
+    return _active().loop.num_workers
+
+
+def OMP_UDS_user_ptr() -> Any:
+    return _active().user_ptr
+
+
+# ------------------------------ setters
+def OMP_UDS_loop_chunk_start(start_iteration: int) -> None:
+    _active().chunk_start = int(start_iteration)
+
+
+def OMP_UDS_loop_chunk_end(end_iteration: int) -> None:
+    _active().chunk_end = int(end_iteration)
+
+
+def OMP_UDS_loop_chunk_step(step_size: int) -> None:
+    _active().chunk_step = int(step_size)
+
+
+def OMP_UDS_loop_dequeue_done() -> None:
+    _active().done = True
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Template:
+    name: str
+    init: Optional[Callable[[], Any]]
+    dequeue: Callable[[], Any]
+    finalize: Optional[Callable[[], Any]]
+    uds_data: Any = None
+
+
+_TEMPLATES: Dict[str, _Template] = {}
+
+
+def schedule_template(name: str, *, init: Optional[Callable] = None,
+                      dequeue: Callable = None,
+                      finalize: Optional[Callable] = None,
+                      uds_data: Any = None,
+                      replace: bool = False) -> _Template:
+    """``#pragma omp declare schedule_template(name) ...``"""
+    if dequeue is None:
+        raise ValueError("a UDS template must define dequeue()")
+    if name in _TEMPLATES and not replace:
+        raise ValueError(f"template {name!r} already declared")
+    tmpl = _Template(name, init, dequeue, finalize, uds_data)
+    _TEMPLATES[name] = tmpl
+    return tmpl
+
+
+def registered_templates() -> List[str]:
+    return sorted(_TEMPLATES)
+
+
+class UDS:
+    """``schedule(UDS[:chunkSize][, monotonic|non-monotonic], ...)``.
+
+    Either references a template (``template="name"``) with optional
+    per-use overrides, or is fully inline (``init=..., dequeue=...``) —
+    the paper's "localized single use loop scheduling strategies".
+    """
+
+    def __init__(self, template: Optional[str] = None,
+                 chunk: Optional[int] = None,
+                 monotonic: bool = True,
+                 init: Optional[Callable] = None,
+                 dequeue: Optional[Callable] = None,
+                 finalize: Optional[Callable] = None,
+                 uds_data: Any = None):
+        if template is not None:
+            if template not in _TEMPLATES:
+                raise KeyError(f"no schedule_template {template!r}; "
+                               f"known: {registered_templates()}")
+            t = _TEMPLATES[template]
+            self._init = init or t.init
+            self._dequeue = dequeue or t.dequeue
+            self._finalize = finalize or t.finalize
+            self._uds_data = uds_data if uds_data is not None else t.uds_data
+            self.name = f"UDS:{template}"
+        else:
+            if dequeue is None:
+                raise ValueError("inline UDS requires dequeue=")
+            self._init, self._dequeue, self._finalize = init, dequeue, finalize
+            self._uds_data = uds_data
+            self.name = "UDS:<inline>"
+        self.chunk = chunk
+        self.monotonic = monotonic
+
+    # -- three-op interface --------------------------------------------------
+    def start(self, ctx: SchedulerContext) -> Any:
+        loop = ctx.loop
+        if self.chunk is not None:
+            loop = dataclasses.replace(loop, chunk=self.chunk)
+        user_ptr = self._uds_data if self._uds_data is not None else ctx.user_data
+        active = _ActiveLoop(loop=loop, user_ptr=user_ptr)
+        if self._init is not None:
+            self._enter(active, 0)
+            try:
+                self._init()
+            finally:
+                self._exit()
+        return {"active": active, "last_stop_src": {}}
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        active: _ActiveLoop = state["active"]
+        active.chunk_start = active.chunk_end = None
+        active.chunk_step = None
+        active.done = False
+        self._enter(active, worker)
+        try:
+            ret = self._dequeue()
+        finally:
+            self._exit()
+        if active.done:
+            return None
+        if active.chunk_start is None:
+            if not ret:
+                return None     # the paper's "return 0" path
+            raise RuntimeError(
+                f"UDS {self.name}: dequeue returned truthy but never called "
+                "OMP_UDS_loop_chunk_start()")
+        loop = active.loop
+        lo_src = active.chunk_start
+        hi_src = active.chunk_end if active.chunk_end is not None else lo_src
+        lo = (lo_src - loop.lb) // loop.incr
+        hi = (hi_src - loop.lb) // loop.incr
+        if self.monotonic:
+            # monotonic modifier (OpenMP 5 semantics): each *thread's*
+            # successive chunks must be non-decreasing in iteration space.
+            prev = state["last_stop_src"].get(worker)
+            if prev is not None and lo_src < prev:
+                raise RuntimeError(
+                    f"UDS {self.name}: monotonic schedule dequeued a chunk "
+                    f"starting at {lo_src} before worker {worker}'s previous "
+                    f"chunk end {prev}")
+            state["last_stop_src"][worker] = hi_src
+        return Chunk(lo, hi, worker)
+
+    def finish(self, state: Any) -> None:
+        if self._finalize is not None:
+            self._enter(state["active"], 0)
+            try:
+                self._finalize()
+            finally:
+                self._exit()
+
+    # -- context plumbing -----------------------------------------------------
+    @staticmethod
+    def _enter(active: _ActiveLoop, worker: int) -> None:
+        _tls.uds_ctx = active
+        _set_thread_num(worker)
+
+    @staticmethod
+    def _exit() -> None:
+        _tls.uds_ctx = None

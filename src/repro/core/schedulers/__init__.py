@@ -1,0 +1,63 @@
+"""The scheduler library — every strategy from the paper's literature set,
+each expressed through the UDS six-op/three-op interface."""
+
+from repro.core.schedulers.base import CentralQueueSchedule, SixOpBase, as_three_op
+from repro.core.schedulers.classic import (
+    FixedSizeChunking,
+    GuidedSS,
+    RandSS,
+    SelfScheduling,
+    StaticBlock,
+    StaticChunk,
+    StaticCyclic,
+    StaticStealing,
+    Taper,
+    TrapezoidFactoring,
+    TrapezoidSS,
+)
+from repro.core.schedulers.factoring import AF, AWF, FAC, FAC2, WeightedFactoring
+
+from typing import Any, Callable, Dict
+
+__all__ = [
+    "SixOpBase", "CentralQueueSchedule", "as_three_op",
+    "StaticChunk", "StaticBlock", "StaticCyclic", "SelfScheduling",
+    "GuidedSS", "TrapezoidSS", "TrapezoidFactoring", "Taper", "RandSS",
+    "FixedSizeChunking", "StaticStealing", "FAC", "FAC2",
+    "WeightedFactoring", "AWF", "AF",
+    "SCHEDULER_FACTORIES", "make_scheduler",
+]
+
+# Factory registry: the framework-facing way to choose a strategy by name
+# (what a config file's ``scheduler: fac2`` resolves through).
+SCHEDULER_FACTORIES: Dict[str, Callable[..., Any]] = {
+    "static": StaticChunk,
+    "static_block": StaticBlock,
+    "static_cyclic": StaticCyclic,
+    "dynamic": SelfScheduling,
+    "ss": SelfScheduling,
+    "guided": GuidedSS,
+    "gss": GuidedSS,
+    "tss": TrapezoidSS,
+    "tfss": TrapezoidFactoring,
+    "taper": Taper,
+    "rand": RandSS,
+    "fsc": FixedSizeChunking,
+    "static_steal": StaticStealing,
+    "fac": FAC,
+    "fac2": FAC2,
+    "wf2": WeightedFactoring,
+    "awf": AWF,
+    "awf_b": lambda **kw: AWF(variant="B", **kw),
+    "awf_c": lambda **kw: AWF(variant="C", **kw),
+    "awf_d": lambda **kw: AWF(variant="D", **kw),
+    "awf_e": lambda **kw: AWF(variant="E", **kw),
+    "af": AF,
+}
+
+
+def make_scheduler(name: str, **params: Any):
+    if name not in SCHEDULER_FACTORIES:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"known: {sorted(SCHEDULER_FACTORIES)}")
+    return SCHEDULER_FACTORIES[name](**params)

@@ -1,0 +1,130 @@
+"""Scheduler base machinery.
+
+Every scheduler in this library is written in the paper's **six-operation**
+form (init / enqueue / dequeue / finalize / begin-loop-body / end-loop-body)
+and exposed through the reduced **three-operation** interface via the
+``three_op_from_six`` merge — the code path itself demonstrates the paper's
+reduction claim.
+
+The conceptual todo list is "typically implemented as a set of shared or
+thread-private loop counters" (paper §4); ``CentralQueueSchedule`` is the
+shared-counter form (self-scheduling family), while static and stealing
+schedulers use thread-private counters (paper Fig. 2 style).
+"""
+
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+from typing import Any, Dict, List, Optional
+
+from repro.core.interface import (
+    Chunk,
+    LoopSpec,
+    SchedulerContext,
+    ceil_div,
+    three_op_from_six,
+)
+from repro.core.history import ChunkRecord
+
+__all__ = ["SixOpBase", "CentralQueueSchedule", "as_three_op"]
+
+
+class SixOpBase:
+    """Common six-op plumbing: measurement hooks write ChunkRecords into the
+    context's history object (paper §3: the begin/end operations exist to feed
+    the history mechanism)."""
+
+    name: str = "uds"
+
+    # -- operations subclasses typically override -------------------------
+    def init(self, ctx: SchedulerContext) -> Any:
+        raise NotImplementedError
+
+    def enqueue(self, state: Any) -> None:
+        # Iteration space is fixed before execution (OpenMP), so the todo
+        # list is "conceptually completely filled" here; counter-based
+        # schedulers have nothing to materialize.
+        return None
+
+    def dequeue(self, state: Any, worker: int) -> Optional[Chunk]:
+        raise NotImplementedError
+
+    # -- measurement hooks (type-(3) adaptive support) ---------------------
+    def begin_loop_body(self, state: Any, worker: int, chunk: Chunk) -> Any:
+        return None
+
+    def end_loop_body(self, state: Any, worker: int, chunk: Chunk,
+                      token: Any, elapsed: Optional[float]) -> None:
+        if elapsed is not None:
+            self.observe(state, worker, chunk, elapsed)
+        hist = state.ctx.history
+        if hist is not None:
+            hist.record(
+                state.ctx.loop.loop_id,
+                ChunkRecord(worker=worker, start=chunk.start, stop=chunk.stop,
+                            elapsed=elapsed),
+            )
+
+    def observe(self, state: Any, worker: int, chunk: Chunk,
+                elapsed: float) -> None:
+        """Adaptive schedulers override to ingest a measurement."""
+        return None
+
+    def finalize(self, state: Any) -> None:
+        return None
+
+    # -- reduced three-op interface (paper's merge) ------------------------
+    # Provided so callers can use any scheduler directly as a
+    # UserDefinedSchedule without wrapping at every call site.
+    def start(self, ctx: SchedulerContext) -> Any:
+        self._adapter = three_op_from_six(self)
+        return self._adapter.start(ctx)
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        return self._adapter.next(state, worker, elapsed)
+
+    def finish(self, state: Any) -> None:
+        self._adapter.finish(state)
+
+
+class CentralQueueSchedule(SixOpBase):
+    """Shared-counter self-scheduling base: each ``dequeue`` grabs the next
+    ``chunk_size(...)`` logical iterations from a central counter
+    (receiver-initiated load balancing, paper §2).
+
+    Subclasses implement ``chunk_size(state, worker) -> int``.
+    """
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        n = ctx.loop.trip_count
+        return SimpleNamespace(
+            ctx=ctx,
+            n=n,
+            next_index=0,          # the shared loop counter (todo list head)
+            remaining=n,
+            dequeues=0,            # total dequeue count (for TSS et al.)
+            per_worker=SimpleNamespace(),  # scratch for adaptive subclasses
+            scratch={},
+        )
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        raise NotImplementedError
+
+    def dequeue(self, state: Any, worker: int) -> Optional[Chunk]:
+        if state.remaining <= 0:
+            return None
+        size = int(self.chunk_size(state, worker))
+        size = max(1, min(size, state.remaining))
+        chunk = Chunk(state.next_index, state.next_index + size, worker)
+        state.next_index += size
+        state.remaining -= size
+        state.dequeues += 1
+        return chunk
+
+
+def as_three_op(sched: SixOpBase):
+    """Explicit reduction of a six-op scheduler (used by tests to prove the
+    adapter and the built-in ``start/next/finish`` agree)."""
+    return three_op_from_six(sched)

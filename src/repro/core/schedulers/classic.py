@@ -1,0 +1,310 @@
+"""Classic (non-adaptive) scheduling strategies.
+
+Covers the OpenMP built-ins the paper uses as its baseline —
+``schedule(static[,chunk])``, ``schedule(dynamic[,chunk])``,
+``schedule(guided[,chunk])`` — plus the literature strategies the paper
+cites as motivation: trapezoid self-scheduling (TSS) [Tzen & Ni 1993],
+fixed-size chunking (FSC) [Kruskal & Weiss 1985], RAND [Ciorba et al. 2018],
+and Intel-style static stealing.
+
+All chunk-size formulas follow the published closed forms; tests in
+``tests/test_schedulers.py`` assert the sequences match.
+"""
+
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.core.interface import Chunk, SchedulerContext, ceil_div
+from repro.core.schedulers.base import CentralQueueSchedule, SixOpBase
+
+__all__ = [
+    "StaticChunk",
+    "StaticBlock",
+    "StaticCyclic",
+    "SelfScheduling",
+    "GuidedSS",
+    "TrapezoidSS",
+    "RandSS",
+    "FixedSizeChunking",
+    "StaticStealing",
+]
+
+
+class StaticChunk(SixOpBase):
+    """OpenMP ``schedule(static, chunk)``: chunks of ``chunk`` iterations are
+    assigned round-robin to threads *before* execution; each thread walks its
+    own private counter by ``P * chunk`` (exactly the paper's Fig. 2
+    ``mystatic`` example — thread-private ``next_lb[tid]``)."""
+
+    name = "static"
+
+    def __init__(self, chunk: Optional[int] = None):
+        self.chunk = chunk
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        n = ctx.loop.trip_count
+        p = ctx.loop.num_workers
+        chunk = self.chunk or ctx.loop.chunk or ceil_div(max(n, 1), p)
+        return SimpleNamespace(
+            ctx=ctx, n=n, p=p, chunk=chunk,
+            next_lb=[w * chunk for w in range(p)],  # Fig. 2: lb + tid*chunksz
+        )
+
+    def dequeue(self, state: Any, worker: int) -> Optional[Chunk]:
+        lo = state.next_lb[worker]
+        if lo >= state.n:
+            return None                      # Fig. 2: "return 0"
+        hi = min(lo + state.chunk, state.n)
+        state.next_lb[worker] = lo + state.p * state.chunk
+        return Chunk(lo, hi, worker)
+
+
+class StaticBlock(StaticChunk):
+    """OpenMP ``schedule(static)``: one block of ceil(N/P) per thread."""
+
+    name = "static_block"
+
+    def __init__(self):
+        super().__init__(chunk=None)
+
+
+class StaticCyclic(StaticChunk):
+    """``schedule(static, 1)``: iteration i -> thread i mod P."""
+
+    name = "static_cyclic"
+
+    def __init__(self):
+        super().__init__(chunk=1)
+
+
+class SelfScheduling(CentralQueueSchedule):
+    """OpenMP ``schedule(dynamic, chunk)``; chunk=1 is pure self-scheduling
+    (PSS/SS) [Tang & Yew 1986]."""
+
+    name = "dynamic"
+
+    def __init__(self, chunk: int = 1):
+        self.chunk = chunk
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        return self.chunk or state.ctx.loop.chunk or 1
+
+
+class GuidedSS(CentralQueueSchedule):
+    """OpenMP ``schedule(guided, chunk)`` = guided self-scheduling (GSS)
+    [Polychronopoulos & Kuck 1987]: next chunk = ceil(R / P), bounded below
+    by the ``chunk`` parameter (except possibly the last chunk)."""
+
+    name = "guided"
+
+    def __init__(self, chunk: int = 1):
+        self.min_chunk = max(1, chunk)
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        p = state.ctx.loop.num_workers
+        size = ceil_div(state.remaining, p)
+        return max(self.min_chunk, size)
+
+
+class TrapezoidSS(CentralQueueSchedule):
+    """Trapezoid self-scheduling (TSS) [Tzen & Ni 1993].
+
+    Chunk sizes decrease *linearly* from ``first`` to ``last``:
+        n_steps = ceil(2N / (first + last))
+        delta   = (first - last) / (n_steps - 1)
+        chunk_k = first - k * delta            (k = dequeue index)
+    Defaults: first = ceil(N / 2P), last = 1 (the paper's recommendation).
+    """
+
+    name = "tss"
+
+    def __init__(self, first: Optional[int] = None, last: int = 1):
+        self.first = first
+        self.last = last
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        n, p = state.n, ctx.loop.num_workers
+        first = self.first if self.first is not None else ceil_div(n, 2 * p)
+        first = max(first, 1)
+        last = max(min(self.last, first), 1)
+        steps = max(ceil_div(2 * n, first + last), 1)
+        delta = (first - last) / (steps - 1) if steps > 1 else 0.0
+        state.scratch.update(first=first, last=last, delta=delta)
+        return state
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        s = state.scratch
+        size = s["first"] - state.dequeues * s["delta"]
+        return max(int(math.floor(size + 0.5)), s["last"])
+
+
+class RandSS(CentralQueueSchedule):
+    """RAND [Ciorba, Iwainsky & Buder 2018]: chunk drawn uniformly at random
+    from [min_chunk, max_chunk]; defaults [1, ceil(N/P)] as in LaPeSD
+    libGOMP.  Deterministic under ``seed`` (required for SPMD replay)."""
+
+    name = "rand"
+
+    def __init__(self, min_chunk: int = 1, max_chunk: Optional[int] = None,
+                 seed: int = 0):
+        self.min_chunk = max(1, min_chunk)
+        self.max_chunk = max_chunk
+        self.seed = seed
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        hi = self.max_chunk or ceil_div(max(state.n, 1),
+                                        ctx.loop.num_workers)
+        state.scratch.update(
+            rng=np.random.default_rng(self.seed),
+            lo=self.min_chunk,
+            hi=max(hi, self.min_chunk),
+        )
+        return state
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        s = state.scratch
+        return int(s["rng"].integers(s["lo"], s["hi"] + 1))
+
+
+class FixedSizeChunking(CentralQueueSchedule):
+    """FSC [Kruskal & Weiss 1985] — the optimal *fixed* chunk under iid
+    iteration times with scheduling overhead h and iteration-time std σ:
+
+        chunk = ( sqrt(2) * N * h / (sigma * P * sqrt(log P)) )^(2/3)
+
+    (Intel's "static stealing with fixed-size chunks" descends from this.)
+    Falls back to ceil(N/P)/2 when P == 1 or sigma == 0.
+    """
+
+    name = "fsc"
+
+    def __init__(self, overhead: float = 1e-5, sigma: float = 1e-4):
+        self.h = overhead
+        self.sigma = sigma
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        n, p = state.n, ctx.loop.num_workers
+        if p > 1 and self.sigma > 0 and n > 0:
+            num = math.sqrt(2.0) * n * self.h
+            den = self.sigma * p * math.sqrt(math.log(p))
+            chunk = int(math.ceil((num / den) ** (2.0 / 3.0)))
+        else:
+            chunk = ceil_div(max(n, 1), max(2 * p, 1))
+        state.scratch["chunk"] = max(1, chunk)
+        return state
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        return state.scratch["chunk"]
+
+
+class TrapezoidFactoring(CentralQueueSchedule):
+    """TFSS (trapezoid factoring self-scheduling): TSS's linear decrement
+    applied per *batch* of P equal chunks (factoring cadence) — the hybrid
+    from the DLS literature the paper's taxonomy covers."""
+
+    name = "tfss"
+
+    def __init__(self, first: Optional[int] = None, last: int = 1):
+        self.first = first
+        self.last = last
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        n, p = state.n, ctx.loop.num_workers
+        first = self.first if self.first is not None else ceil_div(n, 2 * p)
+        first = max(first, 1)
+        last = max(min(self.last, first), 1)
+        steps = max(ceil_div(2 * n, first + last), 1)
+        delta = (first - last) / (steps - 1) if steps > 1 else 0.0
+        state.scratch.update(first=float(first), last=last, delta=delta,
+                             batch_left=0, batch_chunk=first)
+        return state
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        s = state.scratch
+        if s["batch_left"] <= 0:
+            s["batch_chunk"] = max(int(math.floor(s["first"] + 0.5)),
+                                   s["last"])
+            s["first"] = max(s["first"] - s["delta"], float(s["last"]))
+            s["batch_left"] = state.ctx.loop.num_workers
+        s["batch_left"] -= 1
+        return s["batch_chunk"]
+
+
+class Taper(CentralQueueSchedule):
+    """TAPER [Lucco 1992]: self-scheduling with a variance-based taper —
+    chunk ~= R/P shrunk by v*sqrt(chunk) where v = alpha * sigma/mu.
+    Non-adaptive variant: (mu, sigma) are user-supplied estimates."""
+
+    name = "taper"
+
+    def __init__(self, mu: float = 1.0, sigma: float = 0.0,
+                 alpha: float = 1.3, min_chunk: int = 1):
+        self.v = alpha * (sigma / mu) if mu > 0 else 0.0
+        self.min_chunk = max(1, min_chunk)
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        p = state.ctx.loop.num_workers
+        t = state.remaining / p
+        if self.v <= 0:
+            return max(self.min_chunk, ceil_div(state.remaining, p))
+        x = t + self.v * self.v / 2.0 - self.v * math.sqrt(2.0 * t
+                                                           + self.v * self.v / 4.0)
+        return max(self.min_chunk, int(math.ceil(x)))
+
+
+class StaticStealing(SixOpBase):
+    """Intel-style static stealing: iterations are pre-split into P private
+    blocks (as ``schedule(static)``); a worker dequeues ``chunk`` iterations
+    from its own block head, and when its block is exhausted it *steals the
+    trailing half* of the largest remaining victim block (receiver-initiated
+    load balancing without a central counter)."""
+
+    name = "static_steal"
+
+    def __init__(self, chunk: int = 1):
+        self.chunk = max(1, chunk)
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        n = ctx.loop.trip_count
+        p = ctx.loop.num_workers
+        block = ceil_div(max(n, 1), p)
+        blocks = []
+        for w in range(p):
+            lo = min(w * block, n)
+            hi = min(lo + block, n)
+            blocks.append([lo, hi])  # mutable [head, tail)
+        return SimpleNamespace(ctx=ctx, n=n, p=p, blocks=blocks)
+
+    def dequeue(self, state: Any, worker: int) -> Optional[Chunk]:
+        blk = state.blocks[worker]
+        if blk[0] >= blk[1]:
+            if not self._steal(state, worker):
+                return None
+            blk = state.blocks[worker]
+        hi = min(blk[0] + self.chunk, blk[1])
+        chunk = Chunk(blk[0], hi, worker)
+        blk[0] = hi
+        return chunk
+
+    def _steal(self, state: Any, thief: int) -> bool:
+        victim, best = -1, 0
+        for w, (lo, hi) in enumerate(state.blocks):
+            if w != thief and hi - lo > best:
+                victim, best = w, hi - lo
+        if victim < 0 or best < 1:
+            return False
+        vlo, vhi = state.blocks[victim]
+        split = vhi - (vhi - vlo) // 2 if best > 1 else vlo
+        # thief takes the trailing half [split, vhi)
+        state.blocks[victim][1] = split
+        state.blocks[thief] = [split, vhi]
+        return split < vhi

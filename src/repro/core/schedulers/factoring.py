@@ -1,0 +1,253 @@
+"""Factoring-family strategies: FAC, FAC2, WF/WF2, AWF (+B/C/D/E), AF.
+
+These are the probabilistically-derived and adaptive strategies the paper
+identifies as *impossible to support* in current OpenMP without UDS:
+
+* FAC  [Flynn Hummel, Schonberg & Flynn 1992] — batches sized from the
+  mean/std of iteration times.
+* FAC2 — the practical variant: each batch assigns half the remaining
+  iterations split evenly over P workers.
+* WF/WF2 [Flynn Hummel, Schmidt, Uma & Wein 1996] — factoring with fixed
+  per-worker capability weights (heterogeneous hardware).
+* AWF [Banicescu, Velusamy & Devaprasad 2003] — weights adapted across
+  loop *invocations* (timesteps) via the history object.
+* AWF-B/C/D/E [Ciorba et al. taxonomy] — weights adapted *within* an
+  invocation at batch (B, D) or chunk (C, E) boundaries; D/E include
+  scheduling overhead in the measured rate.
+* AF  [Banicescu & Liu 2000] — fully adaptive: per-worker mean μ_i and
+  variance σ_i² of iteration time drive per-worker chunk sizes.
+
+Type-(3) strategies consume measurements ONLY through the paper's
+begin/end hooks + history object — no side channels.
+"""
+
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+from typing import Any, Dict, Optional
+
+from repro.core.interface import SchedulerContext, ceil_div
+from repro.core.schedulers.base import CentralQueueSchedule
+
+__all__ = ["FAC", "FAC2", "WeightedFactoring", "AWF", "AF"]
+
+
+class FAC2(CentralQueueSchedule):
+    """FAC2: batch j hands out P chunks of ceil(R_j / (2P)); i.e. each batch
+    schedules half of what remained when the batch opened."""
+
+    name = "fac2"
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        state.scratch.update(batch_left=0, batch_chunk=1)
+        return state
+
+    def _open_batch(self, state: Any) -> None:
+        p = state.ctx.loop.num_workers
+        state.scratch["batch_chunk"] = max(1, ceil_div(state.remaining, 2 * p))
+        state.scratch["batch_left"] = p
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        if state.scratch["batch_left"] <= 0:
+            self._open_batch(state)
+        state.scratch["batch_left"] -= 1
+        return self._worker_chunk(state, worker)
+
+    def _worker_chunk(self, state: Any, worker: int) -> int:
+        return state.scratch["batch_chunk"]
+
+
+class FAC(FAC2):
+    """Probabilistic factoring (FAC): with per-iteration mean μ and std σ,
+    batch factor x = 1 + b² + b·sqrt(b² + 2), b = (P / (2·sqrt(R))) · (σ/μ);
+    batch chunk = ceil(R / (x · P)).  Degenerates to FAC2 (x = 2) when
+    σ/μ → 0 is *not* the case — FAC2 fixes x = 2 by construction."""
+
+    name = "fac"
+
+    def __init__(self, mu: float = 1.0, sigma: float = 0.0):
+        self.mu = mu
+        self.sigma = sigma
+
+    def _open_batch(self, state: Any) -> None:
+        p = state.ctx.loop.num_workers
+        r = max(state.remaining, 1)
+        if self.sigma <= 0 or self.mu <= 0:
+            x = 2.0
+        else:
+            b = (p / (2.0 * math.sqrt(r))) * (self.sigma / self.mu)
+            x = 1.0 + b * b + b * math.sqrt(b * b + 2.0)
+        state.scratch["batch_chunk"] = max(1, ceil_div(r, max(1, round(x * p))))
+        state.scratch["batch_left"] = p
+
+
+class WeightedFactoring(FAC2):
+    """WF2: FAC2 batches with per-worker weights w_i (sum ≈ P):
+    chunk_i = round(w_i · batch_chunk).  Weights come from the scheduler
+    argument or, if absent, from ``ctx.weights`` (e.g. hardware capability
+    of a heterogeneous mesh)."""
+
+    name = "wf2"
+
+    def __init__(self, weights: Optional[Dict[int, float]] = None):
+        self.weights = weights
+
+    def _weight(self, state: Any, worker: int) -> float:
+        if self.weights is not None:
+            return float(self.weights.get(worker, 1.0))
+        w = state.ctx.weights
+        if w is not None and worker < len(w):
+            return float(w[worker])
+        return 1.0
+
+    def _worker_chunk(self, state: Any, worker: int) -> int:
+        base = state.scratch["batch_chunk"]
+        return max(1, int(round(self._weight(state, worker) * base)))
+
+
+class AWF(WeightedFactoring):
+    """Adaptive weighted factoring.
+
+    variant="timestep" (classic AWF): weights are recomputed once per loop
+    *invocation* from the history object (ratio of measured per-worker
+    speeds over previous invocations) — the paper's flagship example of why
+    cross-invocation history must be part of the interface.
+
+    variant="B"/"C"/"D"/"E": weights adapt *within* the invocation from the
+    measurements delivered via the end-loop-body hook:
+      B — recompute at batch boundaries, rate = compute time / iterations
+      C — recompute at every chunk,     rate = compute time / iterations
+      D — as B but rate includes per-chunk scheduling overhead ``h``
+      E — as C but rate includes ``h``
+    """
+
+    name = "awf"
+
+    def __init__(self, variant: str = "timestep", overhead: float = 0.0):
+        super().__init__(weights=None)
+        variant = variant.upper() if variant != "timestep" else variant
+        if variant not in ("timestep", "B", "C", "D", "E"):
+            raise ValueError(f"unknown AWF variant: {variant}")
+        self.variant = variant
+        self.h = overhead
+        self.name = "awf" if variant == "timestep" else f"awf_{variant.lower()}"
+
+    # ------------------------------------------------------------------
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        p = ctx.loop.num_workers
+        if self.variant == "timestep" and ctx.history is not None:
+            w = ctx.history.awf_weights(ctx.loop.loop_id, p)
+        else:
+            w = [1.0] * p
+        state.scratch.update(
+            aw=list(w),                     # current weights (sum ~= P)
+            time=[0.0] * p,                 # cumulative measured time
+            iters=[0] * p,                  # cumulative measured iterations
+            nchunks=[0] * p,                # chunks completed (for overhead)
+        )
+        return state
+
+    def observe(self, state: Any, worker: int, chunk, elapsed: float) -> None:
+        s = state.scratch
+        s["time"][worker] += elapsed + (self.h if self.variant in ("D", "E") else 0.0)
+        s["iters"][worker] += chunk.size
+        s["nchunks"][worker] += 1
+        if self.variant in ("C", "E"):
+            self._recompute_weights(state)
+
+    def _open_batch(self, state: Any) -> None:
+        if self.variant in ("B", "D"):
+            self._recompute_weights(state)
+        super()._open_batch(state)
+
+    def _recompute_weights(self, state: Any) -> None:
+        s = state.scratch
+        p = state.ctx.loop.num_workers
+        rates = []
+        for w in range(p):
+            if s["iters"][w] > 0 and s["time"][w] > 0:
+                rates.append(s["time"][w] / s["iters"][w])   # sec/iter
+            else:
+                rates.append(None)
+        known = [r for r in rates if r]
+        if not known:
+            return
+        mean_rate = sum(known) / len(known)
+        speeds = [1.0 / (r if r else mean_rate) for r in rates]
+        total = sum(speeds)
+        s["aw"] = [p * sp / total for sp in speeds]
+
+    def _weight(self, state: Any, worker: int) -> float:
+        return state.scratch["aw"][worker]
+
+
+class AF(CentralQueueSchedule):
+    """Adaptive factoring [Banicescu & Liu 2000].
+
+    Maintains running per-worker mean μ_i and variance σ_i² of the
+    *per-iteration* execution time (Welford), fed exclusively by the
+    end-loop-body hook.  Chunk for worker i with R iterations remaining:
+
+        D = Σ_j σ_j² / μ_j          (total variance-to-mean, seconds)
+        E = Σ_j 1 / μ_j             (aggregate speed, iterations/second)
+        T = R / (2·E)               (factoring half-horizon, seconds)
+        chunk_i = (D + 2T − sqrt(D² + 4·D·T)) / (2 μ_i)
+
+    As σ → 0 this converges to T/μ_i — each worker's *half* proportional
+    share, i.e. FAC2 weighted by measured speed (hence adaptive
+    *factoring*) — and finite variance hands out smaller, variance-hedged
+    chunks (the σ-dependent discount).  Until a worker has ≥ ``warmup``
+    measured chunks it falls back to FAC2-sized chunks.
+
+    NOTE: the host paper cites AF [5] without formulas; this is the standard
+    formulation used by DLS/LB4OMP-style libraries, documented here because
+    the exact constant conventions differ across presentations.
+    """
+
+    name = "af"
+
+    def __init__(self, warmup: int = 1):
+        self.warmup = warmup
+
+    def init(self, ctx: SchedulerContext) -> Any:
+        state = super().init(ctx)
+        p = ctx.loop.num_workers
+        state.scratch.update(
+            count=[0] * p,    # Welford per-worker
+            mean=[0.0] * p,
+            m2=[0.0] * p,
+            measured=[0] * p,  # chunks measured
+        )
+        return state
+
+    def observe(self, state: Any, worker: int, chunk, elapsed: float) -> None:
+        if chunk.size <= 0:
+            return
+        rate = elapsed / chunk.size
+        s = state.scratch
+        s["measured"][worker] += 1
+        s["count"][worker] += 1
+        d = rate - s["mean"][worker]
+        s["mean"][worker] += d / s["count"][worker]
+        s["m2"][worker] += d * (rate - s["mean"][worker])
+
+    def chunk_size(self, state: Any, worker: int) -> int:
+        s = state.scratch
+        p = state.ctx.loop.num_workers
+        ready = [w for w in range(p)
+                 if s["measured"][w] >= self.warmup and s["mean"][w] > 0]
+        if worker not in ready or len(ready) < max(1, p // 2):
+            # insufficient statistics -> FAC2-style fallback
+            return max(1, ceil_div(state.remaining, 2 * p))
+        D = sum((s["m2"][w] / max(s["count"][w], 1)) / s["mean"][w]
+                for w in ready)
+        E = sum(1.0 / s["mean"][w] for w in ready)
+        if E <= 0:
+            return max(1, ceil_div(state.remaining, 2 * p))
+        T = 0.5 * state.remaining / E        # factoring half-horizon
+        mu_i = s["mean"][worker]
+        size = (D + 2.0 * T - math.sqrt(D * D + 4.0 * D * T)) / (2.0 * mu_i)
+        return max(1, int(size))

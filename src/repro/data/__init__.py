@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    PackedBatch,
+    SyntheticCorpus,
+    batch_iterator,
+    pack_documents,
+)
+
+__all__ = ["SyntheticCorpus", "PackedBatch", "pack_documents",
+           "batch_iterator"]

@@ -1,0 +1,91 @@
+"""Data pipeline: synthetic corpus, UDS-scheduled document packing, sharding.
+
+The corpus generator produces variable-length "documents" (zipfian tokens,
+log-normal lengths) — the irregular-iteration workload of the paper.  The
+packer treats documents as loop iterations and a UDS as the packing policy:
+``dequeue`` assigns document chunks to sequence slots, balancing token load
+across data-parallel workers (see sched/packing.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["SyntheticCorpus", "PackedBatch", "pack_documents",
+           "batch_iterator"]
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    """Deterministic synthetic document stream."""
+
+    vocab_size: int
+    mean_len: float = 512.0
+    sigma: float = 1.0          # log-normal length spread (irregularity knob)
+    max_len: int = 8192
+    seed: int = 0
+
+    def documents(self) -> Iterator[np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        zipf_p = 1.0 / np.arange(1, self.vocab_size + 1) ** 1.1
+        zipf_p /= zipf_p.sum()
+        while True:
+            n = int(np.clip(rng.lognormal(np.log(self.mean_len), self.sigma),
+                            8, self.max_len))
+            yield rng.choice(self.vocab_size, size=n, p=zipf_p
+                             ).astype(np.int32)
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    tokens: np.ndarray        # (B, S) int32
+    labels: np.ndarray        # (B, S) int32, -100 on padding
+    segment_ids: np.ndarray   # (B, S) int32, 0 = padding
+    fill_fraction: float      # packing efficiency
+
+
+def pack_documents(docs: Sequence[np.ndarray], batch: int, seq_len: int,
+                   assignment: Optional[Sequence[int]] = None) -> PackedBatch:
+    """Greedy packing of documents into (batch, seq_len) rows.
+
+    ``assignment``: optional per-document row ids from a UDS plan
+    (sched/packing.py) — None falls back to first-fit.
+    """
+    tokens = np.zeros((batch, seq_len), np.int32)
+    labels = np.full((batch, seq_len), -100, np.int32)
+    segs = np.zeros((batch, seq_len), np.int32)
+    fill = np.zeros(batch, np.int64)
+    seg_count = np.zeros(batch, np.int32)
+    for i, doc in enumerate(docs):
+        n = min(len(doc), seq_len)
+        if assignment is not None:
+            row = int(assignment[i])
+            if fill[row] + n > seq_len:
+                continue   # dropped by plan overflow (counted in fill)
+        else:
+            fits = np.where(fill + n <= seq_len)[0]
+            if len(fits) == 0:
+                continue
+            row = int(fits[np.argmin(fill[fits])])
+        o = fill[row]
+        tokens[row, o:o + n] = doc[:n]
+        labels[row, o:o + n - 1] = doc[1:n]
+        seg_count[row] += 1
+        segs[row, o:o + n] = seg_count[row]
+        fill[row] += n
+    return PackedBatch(tokens=tokens, labels=labels, segment_ids=segs,
+                       fill_fraction=float(fill.sum()) / (batch * seq_len))
+
+
+def batch_iterator(corpus: SyntheticCorpus, batch: int, seq_len: int,
+                   docs_per_batch: Optional[int] = None
+                   ) -> Iterator[PackedBatch]:
+    """Stream of packed batches (first-fit baseline packing)."""
+    it = corpus.documents()
+    docs_per_batch = docs_per_batch or batch * 4
+    while True:
+        docs = [next(it) for _ in range(docs_per_batch)]
+        yield pack_documents(docs, batch, seq_len)

@@ -1,0 +1,53 @@
+"""Public op: flash attention with GQA, padding, and platform dispatch.
+
+On TPU the Pallas kernel runs natively; on CPU it runs in interpret mode
+(tests) or falls back to the jnp oracle (large shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["mha", "flash_attention", "attention_ref"]
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        block_q: int = 512, block_kv: int = 1024,
+        use_kernel: bool = True, interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, d); k/v: (B, S, KV, d) (GQA repeated here).
+    Returns (B, S, H, d)."""
+    b, s, hq, d = q.shape
+    kv = k.shape[2]
+    if hq != kv:
+        reps = hq // kv
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        out = attention_ref(qt, kt, vt, causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    bq = min(block_q, max(8, s))
+    bkv = min(block_kv, max(8, s))
+    qp = _pad_to(qt, 2, bq)
+    kp = _pad_to(kt, 2, bkv)
+    vp = _pad_to(vt, 2, bkv)
+    out = flash_attention(qp, kp, vp, causal=causal, block_q=bq,
+                          block_kv=bkv, interpret=interpret)
+    return out[:, :, :s].transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Oracle for the flash-attention kernel: plain softmax attention in jnp."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, d); k/v: (B, H, Sk, d) — same head counts (repeat GQA
+    outside).  f32 softmax, output in q.dtype."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = (jnp.arange(sq)[:, None] + (sk - sq)) >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,65 @@
+"""Public op: chunked linear-attention scan (RWKV6 / Mamba2 forms)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan.linear_scan import (
+    linear_scan_scalar,
+    linear_scan_vector,
+)
+from repro.kernels.linear_scan.ref import (
+    chunked_linear_attention,
+    linear_attention_ref,
+)
+
+__all__ = ["wkv", "ssd", "linear_scan_scalar", "linear_scan_vector"]
+
+
+def _pad_time(x: jax.Array, chunk: int) -> Tuple[jax.Array, int]:
+    t = x.shape[2]
+    pad = (-t) % chunk
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, t
+
+
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+        u: jax.Array, *, chunk: int = 32, use_kernel: bool = True,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 wkv. r/k/v/log_w: (B,H,T,n); u: (H,n)."""
+    if not use_kernel:
+        return chunked_linear_attention(r, k, v, log_w, u=u,
+                                        inclusive=False, chunk=chunk)
+    rp, t = _pad_time(r, chunk)
+    kp, _ = _pad_time(k, chunk)
+    vp, _ = _pad_time(v, chunk)
+    lp, _ = _pad_time(log_w, chunk)
+    y, s = linear_scan_vector(rp, kp, vp, lp, u, chunk=chunk,
+                              interpret=interpret)
+    return y[:, :, :t], s
+
+
+def ssd(c: jax.Array, b: jax.Array, x: jax.Array, log_a: jax.Array,
+        *, chunk: int = 32, use_kernel: bool = True,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD (inclusive, scalar-per-head decay).
+    c/b: (B,H,T,N) (q/k roles); x: (B,H,T,hd) (values); log_a: (B,H,T)."""
+    if not use_kernel:
+        return chunked_linear_attention(c, b, x, log_a,
+                                        inclusive=True, chunk=chunk)
+    cp, t = _pad_time(c, chunk)
+    bp, _ = _pad_time(b, chunk)
+    xp, _ = _pad_time(x, chunk)
+    la = log_a
+    pad = (-la.shape[2]) % chunk
+    if pad:
+        la = jnp.pad(la, ((0, 0), (0, 0), (0, pad)))
+    y, s = linear_scan_scalar(cp, bp, xp, la, inclusive=True, chunk=chunk,
+                              interpret=interpret)
+    return y[:, :, :t], s

@@ -1,0 +1,52 @@
+"""Oracle for the linear-scan kernel: the sequential recurrence, plus a
+re-export of the model's chunked formulation (they must all agree)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear_scan import (  # noqa: F401  (re-export for tests)
+    chunked_linear_attention,
+    linear_attention_step,
+)
+
+
+def linear_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         log_w: jax.Array,
+                         *, u: Optional[jax.Array] = None,
+                         inclusive: bool = True,
+                         initial_state: Optional[jax.Array] = None,
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential per-timestep reference (the ground truth).
+
+    q/k: (B,H,T,dk); v: (B,H,T,dv); log_w: (B,H,T,dk) or (B,H,T).
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if log_w.ndim == 3:
+        log_w = jnp.broadcast_to(log_w[..., None], (B, H, T, dk))
+    S = (jnp.zeros((B, H, dk, dv), f32) if initial_state is None
+         else initial_state.astype(f32))
+
+    def step(S, t):
+        qt = q[:, :, t].astype(f32)
+        kt = k[:, :, t].astype(f32)
+        vt = v[:, :, t].astype(f32)
+        wt = jnp.exp(log_w[:, :, t].astype(f32))
+        kv = jnp.einsum("bhn,bhv->bhnv", kt, vt)
+        S_new = S * wt[..., None] + kv
+        if u is not None:
+            y = jnp.einsum("bhn,bhnv->bhv", qt, S + u[None, :, :, None] * kv)
+        elif inclusive:
+            y = jnp.einsum("bhn,bhnv->bhv", qt, S_new)
+        else:
+            y = jnp.einsum("bhn,bhnv->bhv", qt, S)
+        return S_new, y
+
+    S, ys = jax.lax.scan(step, S, jnp.arange(T))
+    y = jnp.moveaxis(ys, 0, 2).astype(v.dtype)
+    return y, S

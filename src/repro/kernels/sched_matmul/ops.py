@@ -1,0 +1,48 @@
+"""Public op: UDS-scheduled matmul with padding + plan integration."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wave import SchedulePlan
+from repro.kernels.sched_matmul.sched_matmul import sched_matmul
+from repro.kernels.sched_matmul.ref import sched_matmul_ref
+
+__all__ = ["scheduled_matmul", "tile_order_from_plan", "sched_matmul",
+           "sched_matmul_ref"]
+
+
+def tile_order_from_plan(plan: SchedulePlan, m_tiles: int) -> np.ndarray:
+    """Flatten a UDS SchedulePlan over [0, m_tiles) into the kernel's
+    tile-visit order (dequeue order, chunks expanded to their tiles)."""
+    order = []
+    for c in plan.chunks:
+        order.extend(range(c.start, min(c.stop, m_tiles)))
+    assert sorted(order) == list(range(m_tiles)), "plan must tile exactly"
+    return np.asarray(order, dtype=np.int32)
+
+
+def scheduled_matmul(a: jax.Array, b: jax.Array,
+                     tile_order: Optional[jax.Array] = None,
+                     *, block_m: int = 128, block_n: int = 128,
+                     block_k: int = 512, use_kernel: bool = True,
+                     interpret: bool = False) -> jax.Array:
+    """C = A @ B; pads to tile multiples, runs the Pallas kernel."""
+    if not use_kernel:
+        return sched_matmul_ref(a, b)
+    M, K = a.shape
+    _, N = b.shape
+    block_k = min(block_k, max(8, K))
+    pm, pn, pk = (-M) % block_m, (-N) % block_n, (-K) % block_k
+    ap = jnp.pad(a, ((0, pm), (0, pk)))
+    bp = jnp.pad(b, ((0, pk), (0, pn)))
+    if tile_order is not None and pm:
+        extra = jnp.arange(M // block_m, (M + pm) // block_m, dtype=jnp.int32)
+        tile_order = jnp.concatenate([tile_order.astype(jnp.int32), extra])
+    out = sched_matmul(ap, bp, tile_order, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,89 @@
+"""UDS-scheduled tiled matmul — the paper's idea at Pallas kernel level.
+
+An OpenMP loop scheduler decides which iterations a thread dequeues next; a
+TPU kernel's analogue is *which tile the next grid step processes*.  Here the
+UDS chunk table (a permutation of M-tiles, produced by ``SchedulePlan``) is
+**scalar-prefetched** into the kernel, and every BlockSpec index_map reads it
+— so STATIC/GSS/TSS/FAC2-shaped tile orders (e.g. locality-first vs
+load-balance-first under a multi-kernel megacore split) are selected at run
+time without recompiling.
+
+TPU mapping:
+  * grid = (m_tiles, n_tiles, k_tiles); K innermost so the f32 accumulator
+    lives in VMEM scratch across the K loop;
+  * MXU-aligned blocks (multiples of 128 in M/N, K);
+  * VMEM working set = bm·bk + bk·bn + bm·bn (+ f32 acc) — block defaults
+    (128, 128, 512) keep it ≈ 0.8 MB, far under the ~16 MB/core v5e VMEM,
+    leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sched_matmul"]
+
+
+def _kernel(order_ref, a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def sched_matmul(a: jax.Array, b: jax.Array,
+                 tile_order: Optional[jax.Array] = None,
+                 *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """C = A @ B with UDS-ordered M-tiles.
+
+    a: (M, K); b: (K, N); tile_order: (M // block_m,) int32 permutation —
+    the dequeue order of M-tiles (defaults to identity = static block
+    schedule).  Shapes must tile exactly (production path pads first).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"shapes {(M, K, N)} must tile by {(block_m, block_n, block_k)}")
+    m_tiles = M // block_m
+    if tile_order is None:
+        tile_order = jnp.arange(m_tiles, dtype=jnp.int32)
+
+    grid = (m_tiles, N // block_n, K // block_k)
+    kernel = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k),
+                             lambda i, j, k, order: (order[i], k)),
+                pl.BlockSpec((block_k, block_n),
+                             lambda i, j, k, order: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda i, j, k, order: (order[i], j)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )
+    return kernel(tile_order.astype(jnp.int32), a, b)

@@ -1,0 +1,23 @@
+"""Launch layer: meshes, sharding rules, compiled steps, dry-run, drivers."""
+
+from repro.launch.mesh import (
+    base_rules,
+    make_mesh,
+    make_production_mesh,
+    rules_for,
+    shardings_for,
+    spec_for,
+)
+from repro.launch.steps import (
+    chunked_softmax_ce,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "make_production_mesh", "make_mesh", "base_rules", "rules_for",
+    "shardings_for", "spec_for", "chunked_softmax_ce", "input_specs",
+    "make_train_step", "make_prefill_step", "make_serve_step",
+]

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count on first init) — see the multi-pod dry-run contract.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without TPU hardware:
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the program fits HBM (memory_analysis),
+  * and extracts the roofline terms (cost_analysis + HLO collective parse).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+  python -m repro.launch.dryrun --list
+
+Perf knobs (the §Perf hillclimb levers):
+  --remat none|full     --ce-chunk N     --rule logical=mesh_axis (repeat)
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def _parse_rules(pairs):
+    out = {}
+    for p in pairs or []:
+        k, _, v = p.partition("=")
+        if v in ("none", "None", ""):
+            out[k] = None
+        elif "," in v:
+            out[k] = tuple(v.split(","))
+        else:
+            out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             remat: str = "full", ce_chunk: int = 512,
+             rule_overrides=None, save_hlo: str = "",
+             flash_threshold=None, scan_chunk=None,
+             microbatches: int = 1) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, applicable, get_config
+    from repro.models import get_model
+    from repro.launch.mesh import (make_production_mesh, rules_for,
+                                   shardings_for, input_sharding)
+    from repro.launch.steps import (input_specs, input_shardings,
+                                    make_prefill_step, make_serve_step,
+                                    make_train_step, opt_state_specs)
+    from repro.launch.roofline import roofline_terms
+    from repro.optim import make_optimizer, cosine_schedule
+    from repro.sharding import axis_rules
+
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if flash_threshold is not None:
+        cfg = _dc.replace(cfg, flash_threshold=flash_threshold)
+    if scan_chunk is not None:
+        cfg = _dc.replace(cfg, scan_chunk=scan_chunk)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "kind": shape.kind, "remat": remat, "ce_chunk": ce_chunk,
+            "microbatches": microbatches,
+            "flash_threshold": cfg.flash_threshold,
+            "scan_chunk": cfg.scan_chunk,
+            "rule_overrides": {k: v for k, v in (rule_overrides or {}).items()}}
+    if not ok:
+        return {**meta, "status": "skip", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rules = rules_for(cfg, mesh, shape.kind, shape.global_batch,
+                      overrides=rule_overrides)
+    model = get_model(cfg)
+    params_abs, specs = model.init(jax.random.PRNGKey(0), jnp.bfloat16,
+                                   abstract=True)
+    pshard = shardings_for(specs, rules, mesh, tree=params_abs)
+    ispecs = input_specs(cfg, shape)
+    ishard = input_shardings(cfg, shape, rules, mesh)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    tokens_global = shape.global_batch * (shape.seq_len
+                                          if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens_global
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * tokens_global
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    with mesh, axis_rules(mesh, rules):
+        if shape.kind == "train":
+            opt_init, opt_update = make_optimizer(
+                cfg.optimizer, cosine_schedule(3e-4, 100, 10_000))
+            opt_abs = jax.eval_shape(opt_init, params_abs)
+            ospecs = opt_state_specs(cfg.optimizer, params_abs, specs)
+            oshard = shardings_for(ospecs, rules, mesh, tree=opt_abs)
+            step_fn = make_train_step(model, opt_update, remat=remat,
+                                      ce_chunk=ce_chunk,
+                                      num_microbatches=microbatches)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, repl, ishard),
+                out_shardings=(pshard, oshard, repl),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(
+                params_abs, opt_abs,
+                jax.ShapeDtypeStruct((), jnp.int32), ispecs)
+        elif shape.kind == "prefill":
+            cache_abs, cache_specs = model.init_decode(
+                shape.global_batch, shape.seq_len, abstract=True)
+            cshard = shardings_for(cache_specs, rules, mesh, tree=cache_abs)
+            step_fn = make_prefill_step(model, max_len=shape.seq_len)
+            logits_shard = input_sharding(
+                mesh, rules, "batch", "vocab",
+                shape=(shape.global_batch, cfg.vocab_size))
+            jitted = jax.jit(step_fn, in_shardings=(pshard, ishard),
+                             out_shardings=((logits_shard, cshard)))
+            lowered = jitted.lower(params_abs, ispecs)
+        else:  # decode
+            cache_abs, cache_specs = model.init_decode(
+                shape.global_batch, shape.seq_len, abstract=True)
+            cshard = shardings_for(cache_specs, rules, mesh, tree=cache_abs)
+            step_fn = make_serve_step(model)
+            tok_shard = input_sharding(mesh, rules, "batch",
+                                       shape=(shape.global_batch,))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, ishard, cshard),
+                             out_shardings=(tok_shard, cshard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, ispecs, cache_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo_text = compiled.as_text()
+    print(compiled.memory_analysis())       # proves it fits (dry-run contract)
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})
+    terms = roofline_terms(compiled, n_chips=n_chips,
+                           model_flops_global=model_flops,
+                           hlo_text=hlo_text)
+    if save_hlo:
+        Path(save_hlo).write_text(hlo_text)
+    return {**meta, "status": "ok", "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "param_count": cfg.param_count(),
+            "active_param_count": n_active,
+            "tokens_global": tokens_global,
+            **terms}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch, shape) cell")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun",
+                    help="output directory for per-cell JSON")
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--rule", action="append",
+                    help="sharding rule override logical=mesh (repeatable)")
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--flash-threshold", type=int, default=None)
+    ap.add_argument("--scan-chunk", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+
+    if args.list:
+        for a in list_archs():
+            print(a)
+        return
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all/--list")
+        cells = [(args.arch, args.shape)]
+
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    overrides = _parse_rules(args.rule)
+
+    failures = 0
+    for arch, shape in cells:
+        for m in meshes:
+            tag = f"_{args.tag}" if args.tag else ""
+            fname = outdir / f"{arch}_{shape}_{m}{tag}.json"
+            try:
+                res = run_cell(arch, shape, multi_pod=(m == "multi"),
+                               remat=args.remat, ce_chunk=args.ce_chunk,
+                               rule_overrides=overrides,
+                               save_hlo=args.save_hlo,
+                               flash_threshold=args.flash_threshold,
+                               scan_chunk=args.scan_chunk,
+                               microbatches=args.microbatches)
+            except Exception as e:
+                failures += 1
+                res = {"arch": arch, "shape": shape, "mesh": m,
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+            fname.write_text(json.dumps(res, indent=1, default=str))
+            stat = res["status"]
+            extra = ""
+            if stat == "ok":
+                extra = (f" dom={res['dominant']} bound={res['bound_s']:.4f}s"
+                         f" frac={res['roofline_fraction']:.3f}"
+                         f" compile={res['compile_s']:.0f}s")
+            print(f"[dryrun] {arch} × {shape} × {m}: {stat}{extra}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Meshes and logical-axis sharding rules.
+
+``make_production_mesh`` builds the target v5e meshes:
+  * single-pod: (16, 16)      axes ("data", "model")   — 256 chips
+  * multi-pod:  (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+Parameters/activations carry *logical* axis names (see models/common.py
+ParamBuilder); ``Rules`` maps logical -> mesh axes.  Changing the rule table
+(not the model code) is how the §Perf hillclimb re-shards — exactly the
+decoupling the paper demands between a scheduling *strategy* and the code
+that uses it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["make_production_mesh", "make_mesh", "Rules", "base_rules",
+           "rules_for", "spec_for", "shardings_for", "input_sharding"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Elastic-scaling entry point: any (data, model[, pod]) factorization of
+    the currently-healthy device count (see runtime/elastic.py).  Uses the
+    first prod(shape) devices so a 256-chip pod mesh builds on the 512-device
+    dry-run host (and on degraded device sets after failures)."""
+    import math
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"mesh {tuple(shape)} needs {n} devices, "
+                         f"only {len(devs)} available")
+    from jax.sharding import AxisType
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(shape),
+                         devices=devs[:n])
+
+
+# A rule maps a logical axis name to a mesh axis (or tuple of axes, or None).
+from repro.sharding import (Rules, axis_rules, constrain, shardings_for,
+                            spec_for, _sizes)
+
+
+def base_rules(mesh: Mesh) -> Rules:
+    """Baseline rule table (the §Perf starting point).
+
+    2-D weight sharding: feature-ish axes over "model" (TP), the embed axis
+    over "data" (FSDP/ZeRO) — optimizer state inherits, so a 314B-param
+    model's state spreads over all 256 chips.
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    return {
+        "batch": batch_axes,
+        "seq": None,             # sequence (activations) — context parallel off
+        "seq_cache": None,       # KV-cache length axis
+        "vocab": "model",
+        "embed": "data",         # FSDP axis on weights
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,          # scan axis — never sharded
+        # activation axes (with_sharding_constraint inside scanned bodies —
+        # without these GSPMD replicates batch inside the layer loop)
+        "act_embed": None,       # residual feature dim stays unsharded
+        "act_heads": "model",
+        "act_kv": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+    }
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, shape_kind: str,
+              global_batch: int = 0,
+              overrides: Optional[Rules] = None) -> Rules:
+    """Baseline rules + per-arch overrides + shape-driven adjustments."""
+    rules = base_rules(mesh)
+    for k, v in cfg.sharding_overrides:
+        v = tuple(v) if isinstance(v, list) else v
+        rules[k] = v
+        if f"act_{k}" in rules:     # weight override implies activation twin
+            rules[f"act_{k}"] = v
+    # long-context decode with batch=1: batch is unshardable -> shard the
+    # cache/sequence axis over the data (and pod) axes instead.
+    if shape_kind == "decode" and global_batch == 1:
+        rules["batch"] = None
+        rules["seq_cache"] = (("pod", "data") if "pod" in mesh.axis_names
+                              else ("data",))
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def input_sharding(mesh: Mesh, rules: Rules, *axes: Optional[str],
+                   shape: Optional[Tuple[int, ...]] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(tuple(axes), rules, shape=shape,
+                                        axis_sizes=_sizes(mesh)))

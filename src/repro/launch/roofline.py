@@ -1,0 +1,207 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip — the assignment's constants):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s/link
+
+Terms per (arch × shape × mesh), all PER CHIP / in seconds:
+    compute_s    = HLO_FLOPs / 197e12            (cost_analysis, per-device)
+    memory_s     = HLO_bytes / 819e9             (cost_analysis "bytes accessed")
+    collective_s = Σ collective_traffic / 50e9   (parsed from optimized HLO)
+
+Collective traffic model (ring algorithms, result-shape bytes R, group n):
+    all-gather          (n-1)/n · R        (R = gathered result, per chip)
+    reduce-scatter      (n-1)   · R        (full input = n·R moves (n-1)/n·n·R)
+    all-reduce          2(n-1)/n · R       (RS + AG)
+    all-to-all          (n-1)/n · R
+    collective-permute  1 · R
+
+The post-SPMD module is the per-device program, so instruction shapes are
+already per-chip.  cost_analysis does NOT include collective bytes — hence
+the HLO text parse (assignment spec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "parse_collectives", "roofline_terms", "CollectiveStats"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9            # v5e: 16 GB HBM
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2                              # conservative default
+
+
+def _traffic_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-to-all":
+        return (n - 1) / n
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float                     # traffic-model bytes per chip
+    result_bytes: int                      # raw summed result-shape bytes
+    count: int
+    by_op: Dict[str, float]
+    by_op_count: Dict[str, int]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    total = 0.0
+    raw = 0
+    count = 0
+    by_op: Dict[str, float] = {}
+    by_cnt: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("shape"))
+        n = _group_size(line)
+        traffic = rb * _traffic_factor(op, n)
+        total += traffic
+        raw += rb
+        count += 1
+        by_op[op] = by_op.get(op, 0.0) + traffic
+        by_cnt[op] = by_cnt.get(op, 0) + 1
+    return CollectiveStats(total_bytes=total, result_bytes=raw, count=count,
+                           by_op=by_op, by_op_count=by_cnt)
+
+
+def roofline_terms(compiled, *, n_chips: int, model_flops_global: float,
+                   hlo_text: Optional[str] = None) -> Dict:
+    """All three roofline terms + bookkeeping, from a compiled executable.
+
+    Primary numbers come from the loop-aware HLO analysis (hlo_analysis.py):
+    XLA's cost_analysis counts while-loop bodies once, which undercounts
+    scanned-layer programs by ~num_layers×.  The raw cost_analysis values
+    are retained as ``xla_*`` reference fields.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    ca = compiled.cost_analysis() or {}
+    xla_flops = float(ca.get("flops", 0.0))              # per chip, loop=1
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    st = analyze_hlo(text)
+
+    flops = st.flops                                     # per chip, loop-aware
+    # primary terms use the dtype-corrected byte counts (f32 tensors that
+    # shadow bf16 shapes are XLA:CPU bf16-op legalization, absent on TPU);
+    # raw counts are kept as *_raw reference fields
+    bytes_acc = st.bytes_accessed_tpu
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = st.collective_bytes_tpu / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                       + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+            # CPU-host artifact: XLA:CPU legalizes bf16 dots to f32 and saves
+            # f32 residual stacks that don't exist on TPU (native bf16 MXU).
+            adj = peak - st.cpu_bf16_legalization_bytes
+            mem = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_bytes": peak,
+                "cpu_bf16_legalization_bytes":
+                    int(st.cpu_bf16_legalization_bytes),
+                "peak_bytes_tpu_adjusted": adj,
+                "fits_hbm": bool(peak < HBM_PER_CHIP),
+                "fits_hbm_tpu_adjusted": bool(adj < HBM_PER_CHIP),
+            }
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    model_flops_chip = model_flops_global / n_chips
+    # roofline fraction: useful model FLOPs per chip over the time the
+    # dominant term implies (what MFU would be if the bottleneck is the
+    # only cost — the dry-run analogue of measured MFU)
+    roofline_fraction = (model_flops_chip / PEAK_FLOPS) / max(bound_s, 1e-30)
+
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "hlo_bytes_raw": st.bytes_accessed,
+        "xla_flops_loop_once": xla_flops,
+        "xla_bytes_loop_once": xla_bytes,
+        "collective_bytes_per_chip": st.collective_bytes_tpu,
+        "collective_bytes_raw": st.collective_bytes,
+        "collective_count": st.collective_count,
+        "collective_by_op": st.collective_by_op,
+        "while_trip_counts": st.while_trip_counts,
+        "model_flops_global": model_flops_global,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_flops_ratio": (model_flops_chip / flops) if flops else 0.0,
+        "roofline_fraction": roofline_fraction,
+        "memory": mem,
+        "n_chips": n_chips,
+    }

@@ -1,0 +1,80 @@
+"""Model zoo facade: family-dispatched init/forward/decode.
+
+``get_model(cfg)`` returns a ``Model`` namespace with a uniform API so the
+training/serving steps, dry-run, and tests never branch on architecture:
+
+    model.init(key, dtype)            -> (params, specs)
+    model.forward(params, inputs)     -> (logits, aux)     # train/prefill
+    model.init_decode(batch, max_len) -> (cache/state, specs)
+    model.decode(params, inputs, st)  -> (logits, new st)
+    model.prefill(params, inputs, max_len) -> (logits, cache)  # attn archs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer, rwkv6, zamba2
+
+__all__ = ["ModelConfig", "Model", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_decode: Callable
+    decode: Callable
+    prefill: Optional[Callable] = None
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":          # rwkv6
+        return Model(
+            cfg=cfg,
+            init=partial(rwkv6.init_params, cfg),
+            forward=(lambda params, inputs, **kw:
+                     rwkv6.forward(params, cfg, inputs, **kw)),
+            init_decode=(lambda batch, max_len, **kw:
+                         rwkv6.init_state(cfg, batch, **kw)),
+            decode=(lambda params, inputs, state, **kw:
+                    rwkv6.decode_step(params, cfg, inputs, state, **kw)),
+            prefill=(lambda params, inputs, max_len=None, **kw:
+                     rwkv6.prefill(params, cfg, inputs, max_len, **kw)),
+        )
+    if cfg.family == "hybrid":       # zamba2
+        return Model(
+            cfg=cfg,
+            init=partial(zamba2.init_params, cfg),
+            forward=(lambda params, inputs, **kw:
+                     zamba2.forward(params, cfg, inputs, **kw)),
+            init_decode=(lambda batch, max_len, **kw:
+                         zamba2.init_state(cfg, batch, max_len, **kw)),
+            decode=(lambda params, inputs, state, **kw:
+                    zamba2.decode_step(params, cfg, inputs, state, **kw)),
+            prefill=(lambda params, inputs, max_len=None, **kw:
+                     zamba2.prefill(params, cfg, inputs, max_len, **kw)),
+        )
+    # dense / moe / audio / vlm all share the transformer implementation
+    return Model(
+        cfg=cfg,
+        init=partial(transformer.init_params, cfg),
+        forward=(lambda params, inputs, **kw:
+                 transformer.forward(params, cfg, inputs, **kw)),
+        init_decode=(lambda batch, max_len, **kw:
+                     transformer.init_cache(cfg, batch, max_len, **kw)),
+        decode=(lambda params, inputs, cache, **kw:
+                transformer.decode_step(params, cfg, inputs, cache, **kw)),
+        prefill=(lambda params, inputs, max_len=None, **kw:
+                 transformer.prefill(params, cfg, inputs, max_len, **kw)),
+    )

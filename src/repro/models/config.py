@@ -1,0 +1,164 @@
+"""Model configuration: one dataclass covers all ten assigned architectures.
+
+Every field is explicit (no HF config loading — the exact dims come from the
+assignment table and are pinned in ``repro/configs/<arch>.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+__all__ = ["ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free (rwkv uses wkv heads)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // num_heads
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_cap_headroom: float = 1.6   # buffer slack for WF2 capacity planning
+
+    # --- SSM / linear attention --------------------------------------------
+    ssm_state: int = 0               # mamba2 N
+    wkv_head_dim: int = 64           # rwkv6 head size
+    conv_kernel: int = 4             # mamba2 depthwise conv width
+    scan_chunk: int = 64             # chunk size of the chunked linear scan
+
+    # --- attention variants --------------------------------------------------
+    qk_norm: bool = False            # qwen3
+    qkv_bias: bool = False           # qwen2/2.5, qwen2-vl
+    rope_theta: float = 1e6
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    attention: str = "full"          # full | none (rwkv) | hybrid (zamba2)
+    positional: str = "rope"         # rope | sinusoidal (musicgen) | none
+
+    # --- MLP variants --------------------------------------------------------
+    mlp: str = "swiglu"              # swiglu | gelu (musicgen)
+
+    # --- hybrid (zamba2) ------------------------------------------------------
+    shared_attention_every: int = 0  # a shared attn block after every k layers
+
+    # --- embeddings / frontends ----------------------------------------------
+    pad_vocab_multiple: int = 0      # pad embed/head rows so vocab shards evenly
+    tie_embeddings: bool = False
+    frontend: str = "none"           # none | audio | vision (stub embeddings in)
+
+    # --- serving ----------------------------------------------------------------
+    kv_cache_dtype: str = "bf16"     # bf16 | fp8 (f8e4m3fn; halves decode HBM)
+
+    # --- attention impl for long sequences -------------------------------------
+    attn_block_q: int = 512          # query block of blockwise (flash) attention
+    attn_block_kv: int = 1024
+    flash_threshold: int = 8192      # use blockwise attention for seq >= this
+
+    # --- UDS integration --------------------------------------------------------
+    scheduler: str = "fac2"          # default UDS for packing/microbatching
+    moe_scheduler: str = "wf2"       # UDS for expert capacity planning
+
+    # --- sharding ---------------------------------------------------------------
+    # per-arch overrides of the logical->mesh rule table, e.g. grok-1 keeps
+    # experts unsharded (8 experts < 16-way model axis) and TP-shards each
+    # expert's huge d_ff instead:  (("experts", None), ("mlp", "model"))
+    sharding_overrides: Tuple[Tuple[str, Any], ...] = ()
+    # optimizer: "adamw" (<=32B) or "adafactor" (paLM-style, for >=200B)
+    optimizer: str = "adamw"
+
+    def __post_init__(self):
+        if self.num_heads and self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ------------------------------------------------------------------ sizes
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * (self.head_dim or 0)
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * (self.head_dim or 0)
+
+    @property
+    def padded_vocab(self) -> int:
+        if self.pad_vocab_multiple:
+            m = self.pad_vocab_multiple
+            return ((self.vocab_size + m - 1) // m) * m
+        return self.vocab_size
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports O(seq) context (SSM / linear attention);
+        gates the long_500k shape per the assignment spec."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (validated against the real pytree in
+        tests); used for MODEL_FLOPS = 6*N*D roofline bookkeeping."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        total = v * d                      # embedding
+        if not self.tie_embeddings:
+            total += d * v                 # lm head
+        total += d                         # final norm
+        per_layer = 0
+        if self.family == "ssm":           # rwkv6
+            n_h = d // self.wkv_head_dim
+            per_layer += 5 * d * d         # r,k,v,g,o projections
+            per_layer += 2 * (d * 64 + 64 * d)  # low-rank decay + mix
+            per_layer += d                 # bonus u (per channel)
+            per_layer += 2 * d             # ln weights
+            per_layer += d * f + f * d + d * d  # channel mix (k, v, r)
+            return total + L * per_layer
+        # attention (dense/moe/hybrid-shared/audio/vlm)
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            attn += self.q_dim + 2 * self.kv_dim
+        if self.qk_norm:
+            attn += 2 * (self.head_dim or 0)
+        if self.mlp == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f + d + f        # gelu w/ biases
+        if self.family == "hybrid":        # zamba2: mamba2 layers + shared attn
+            H = self.num_heads
+            din = 2 * d                    # mamba2 inner dim (expand=2)
+            N = self.ssm_state
+            nheads = din // 64
+            m = d * (2 * din + 2 * N + nheads)     # in_proj (z,x,B,C,dt)
+            m += self.conv_kernel * (din + 2 * N)  # depthwise conv
+            m += nheads * 2 + nheads               # A, D, dt_bias
+            m += din * d                           # out_proj
+            m += 2 * d                             # norms
+            shared = (2 * d) * self.q_dim + 2 * (2 * d) * self.kv_dim \
+                + self.q_dim * d + 3 * (2 * d) * f // 2 + 2 * 2 * d
+            n_shared = 1
+            return total + L * m + n_shared * shared
+        per_layer = attn + 2 * d           # ln1, ln2
+        if self.is_moe:
+            per_layer += d * self.num_experts              # router
+            per_layer += self.num_experts * 3 * d * f      # expert swiglu
+        else:
+            per_layer += mlp
+        return total + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_experts = self.num_experts * 3 * d * f
+        active_experts = self.experts_per_token * 3 * d * f
+        return self.param_count() - self.num_layers * (dense_experts - active_experts)

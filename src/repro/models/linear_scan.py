@@ -1,0 +1,157 @@
+"""Chunked linear-attention scan — shared math for RWKV6 (vector decay) and
+Mamba2/SSD (scalar-per-head decay).
+
+Recurrence (per head; dk = key dim, dv = value dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S: (dk, dv), w_t in (0,1]
+    y_t = q_t S_t                  (inclusive, Mamba2)
+    y_t = q_t (S_{t-1} + diag(u) k_t v_t^T)      (exclusive + bonus, RWKV6)
+
+The chunked form processes C timesteps at once: O(T·C·dk·dv) work like the
+sequential scan, but MXU-friendly matmuls instead of T outer products.
+
+Numerical safety: every exponential here is of a *non-positive* number
+(sums of log-decays between two timesteps), so nothing overflows — unlike
+the common factored form q̃=q·exp(A), k̃=k·exp(−A) whose exp(−A) explodes for
+strong decay.  This is the formulation the Pallas kernel implements on TPU
+(kernels/linear_scan), with this module as its oracle.
+
+The chunk size is a UDS-schedulable parameter (cfg.scan_chunk): the paper's
+"chunk" — grouping iterations (timesteps) into scheduling items.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_attention", "linear_attention_step"]
+
+
+def chunked_linear_attention(
+    q: jax.Array,            # (B, H, T, dk)
+    k: jax.Array,            # (B, H, T, dk)
+    v: jax.Array,            # (B, H, T, dv)
+    log_w: jax.Array,        # (B, H, T, dk) vector decay or (B, H, T) scalar
+    *,
+    u: Optional[jax.Array] = None,   # (H, dk) bonus (RWKV6); implies exclusive
+    inclusive: bool = True,
+    chunk: int = 32,
+    initial_state: Optional[jax.Array] = None,  # (B, H, dk, dv)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,H,T,dv), final_state (B,H,dk,dv)).  Computed in f32."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    scalar_decay = (log_w.ndim == 3)
+    if u is not None and inclusive:
+        raise ValueError("bonus-u form is exclusive by definition (RWKV6)")
+
+    orig_T = T
+    pad = (-T) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        padw = ((0, 0), (0, 0), (0, pad)) + (((0, 0),) if not scalar_decay else ())
+        log_w = jnp.pad(log_w, padw)
+        T += pad
+    nc = T // chunk
+
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, H, nc, chunk, dk)
+    kc = k.astype(f32).reshape(B, H, nc, chunk, dk)
+    vc = v.astype(f32).reshape(B, H, nc, chunk, dv)
+    if scalar_decay:
+        lw = log_w.astype(f32).reshape(B, H, nc, chunk)
+    else:
+        lw = log_w.astype(f32).reshape(B, H, nc, chunk, dk)
+
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, dk, dv), f32)
+    else:
+        S0 = initial_state.astype(f32)
+
+    tri_incl = jnp.tril(jnp.ones((chunk, chunk), bool))            # τ <= t
+    tri_excl = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)      # τ <  t
+
+    def step(S, inp):
+        if scalar_decay:
+            qb, kb, vb, lwb = inp                                  # lwb (B,H,C)
+            Ai = jnp.cumsum(lwb, axis=-1)                          # inclusive
+            Ae = Ai - lwb                                          # exclusive
+            q_dec = Ai if inclusive else Ae
+            # inter-chunk: y += (q ⊙ exp(A)) @ S
+            y = jnp.einsum("bhtn,bhnv->bhtv", qb * jnp.exp(q_dec)[..., None], S)
+            # intra-chunk (decay uniform over dk -> factorizable)
+            gap = (q_dec[..., :, None] - Ai[..., None, :])         # (B,H,C,C)
+            mask = tri_incl if inclusive else tri_excl
+            M = jnp.where(mask, jnp.exp(jnp.where(mask, gap, 0.0)), 0.0)
+            scores = jnp.einsum("bhtn,bhsn->bhts", qb, kb) * M
+            y = y + jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+            # state update
+            Alast = Ai[..., -1:]
+            kdec = kb * jnp.exp(Alast - Ai)[..., None]
+            S = S * jnp.exp(Ai[..., -1])[..., None, None]
+            S = S + jnp.einsum("bhtn,bhtv->bhnv", kdec, vb)
+        else:
+            qb, kb, vb, lwb = inp                                  # lwb (B,H,C,dk)
+            Ai = jnp.cumsum(lwb, axis=-2)
+            Ae = Ai - lwb
+            q_dec = Ai if inclusive else Ae
+            y = jnp.einsum("bhtn,bhnv->bhtv", qb * jnp.exp(q_dec), S)
+            mask = tri_incl if inclusive else tri_excl
+            gap = q_dec[..., :, None, :] - Ai[..., None, :, :]     # (B,H,C,C,dk)
+            M = jnp.where(mask[..., None],
+                          jnp.exp(jnp.where(mask[..., None], gap, 0.0)), 0.0)
+            scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts", qb, kb, M)
+            y = y + jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+            Alast = Ai[..., -1:, :]
+            kdec = kb * jnp.exp(Alast - Ai)
+            S = S * jnp.exp(Alast[..., 0, :])[..., None] \
+                + jnp.einsum("bhtn,bhtv->bhnv", kdec, vb)
+        if u is not None:
+            # bonus diagonal: y_t += ((q_t ⊙ u) · k_t) v_t
+            y = y + (qb * u[None, :, None, :] * kb).sum(-1, keepdims=True) * vb
+        return S, y
+
+    import os
+    if not os.environ.get("REPRO_NO_INNER_REMAT"):   # baseline knob (§Perf)
+        # recompute the (C,C,·) decay/score tensors in bwd: without this the
+        # outer layer-remat saves them stacked over ALL chunks (measured
+        # 66 TB/chip of traffic + 10 GB of stacks on rwkv6 train_4k)
+        step = jax.checkpoint(step)
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(lw, 2, 0))
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, dv)[:, :, :orig_T]
+    return y.astype(v.dtype), S
+
+
+def linear_attention_step(
+    q: jax.Array,            # (B, H, dk)
+    k: jax.Array,            # (B, H, dk)
+    v: jax.Array,            # (B, H, dv)
+    log_w: jax.Array,        # (B, H, dk) or (B, H)
+    S: jax.Array,            # (B, H, dk, dv)
+    *,
+    u: Optional[jax.Array] = None,   # (H, dk)
+    inclusive: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step (decode path). Returns (y (B,H,dv), S')."""
+    f32 = jnp.float32
+    out_dtype = v.dtype
+    q, k, v, S = q.astype(f32), k.astype(f32), v.astype(f32), S.astype(f32)
+    w = jnp.exp(log_w.astype(f32))
+    if log_w.ndim == 2:
+        w = w[..., None]
+    kv = jnp.einsum("bhn,bhv->bhnv", k, v)
+    S_new = S * w[..., None] + kv
+    if u is not None:
+        y = jnp.einsum("bhn,bhnv->bhv", q, S + u[None, :, :, None] * kv)
+    elif inclusive:
+        y = jnp.einsum("bhn,bhnv->bhv", q, S_new)
+    else:
+        y = jnp.einsum("bhn,bhnv->bhv", q, S)
+    return y.astype(out_dtype), S_new

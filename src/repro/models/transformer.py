@@ -1,0 +1,401 @@
+"""Decoder-only transformer covering the dense / MoE / audio / VLM archs.
+
+One implementation, feature-flagged by ``ModelConfig``:
+  * GQA attention with optional qk-norm (qwen3), qkv-bias (qwen2 family),
+    RoPE / M-RoPE (qwen2-vl) / sinusoidal (musicgen) positions;
+  * SwiGLU or GELU MLP, or MoE FFN with UDS-planned capacities;
+  * token or stub-frontend (precomputed embeddings) inputs;
+  * scan-over-layers with configurable remat for O(1) HLO depth;
+  * full train forward, 32k prefill (blockwise attention), KV-cache decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.common import (
+    ParamBuilder,
+    apply_mrope,
+    apply_rope,
+    attention,
+    decode_attention,
+    make_rope,
+    mlp_gelu,
+    mlp_swiglu,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.moe import moe_ffn
+from repro.sharding import constrain, current_rules
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step", "prefill"]
+
+Tree = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- init
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype: jnp.dtype = jnp.bfloat16,
+                abstract: bool = False) -> Tuple[Tree, Tree]:
+    pb = ParamBuilder(key, dtype, abstract=abstract)
+    d, hd = cfg.d_model, cfg.head_dim
+    L, f = cfg.num_layers, cfg.d_ff
+    v = cfg.padded_vocab      # pad so the vocab axis shards evenly (minicpm)
+
+    pb.dense("embed/tok", (v, d), ("vocab", "embed"), scale=1.0)
+
+    # --- per-layer stacked params (leading `layers` axis, consumed by scan)
+    pb.dense("layers/attn/wq", (L, d, cfg.q_dim), ("layers", "embed", "heads"))
+    pb.dense("layers/attn/wk", (L, d, cfg.kv_dim), ("layers", "embed", "kv"))
+    pb.dense("layers/attn/wv", (L, d, cfg.kv_dim), ("layers", "embed", "kv"))
+    pb.dense("layers/attn/wo", (L, cfg.q_dim, d), ("layers", "heads", "embed"))
+    if cfg.qkv_bias:
+        pb.zeros("layers/attn/bq", (L, cfg.q_dim), ("layers", "heads"))
+        pb.zeros("layers/attn/bk", (L, cfg.kv_dim), ("layers", "kv"))
+        pb.zeros("layers/attn/bv", (L, cfg.kv_dim), ("layers", "kv"))
+    if cfg.qk_norm:
+        pb.ones("layers/attn/q_norm", (L, hd), ("layers", None))
+        pb.ones("layers/attn/k_norm", (L, hd), ("layers", None))
+    pb.ones("layers/ln1", (L, d), ("layers", "embed"))
+    pb.ones("layers/ln2", (L, d), ("layers", "embed"))
+
+    if cfg.is_moe:
+        E = cfg.num_experts
+        pb.dense("layers/moe/router", (L, d, E), ("layers", "embed", None))
+        pb.dense("layers/moe/w_gate", (L, E, d, f),
+                 ("layers", "experts", "embed", "mlp"))
+        pb.dense("layers/moe/w_up", (L, E, d, f),
+                 ("layers", "experts", "embed", "mlp"))
+        pb.dense("layers/moe/w_down", (L, E, f, d),
+                 ("layers", "experts", "mlp", "embed"))
+    elif cfg.mlp == "swiglu":
+        pb.dense("layers/mlp/wi_gate", (L, d, f), ("layers", "embed", "mlp"))
+        pb.dense("layers/mlp/wi_up", (L, d, f), ("layers", "embed", "mlp"))
+        pb.dense("layers/mlp/wo", (L, f, d), ("layers", "mlp", "embed"))
+    else:  # gelu (musicgen)
+        pb.dense("layers/mlp/wi", (L, d, f), ("layers", "embed", "mlp"))
+        pb.zeros("layers/mlp/bi", (L, f), ("layers", "mlp"))
+        pb.dense("layers/mlp/wo", (L, f, d), ("layers", "mlp", "embed"))
+        pb.zeros("layers/mlp/bo", (L, d), ("layers", "embed"))
+
+    pb.ones("final_norm", (d,), ("embed",))
+    if not cfg.tie_embeddings:
+        pb.dense("lm_head", (d, v), ("embed", "vocab"))
+    return pb.build()
+
+
+# ------------------------------------------------------------------- layers
+def _head_shards(cfg: ModelConfig) -> int:
+    """Product of mesh-axis sizes the act_heads rule maps to (1 if none)."""
+    ctx = current_rules()
+    if ctx is None:
+        return 1
+    _, rules, sizes = ctx
+    ax = rules.get("act_heads")
+    axes = (ax,) if isinstance(ax, str) else tuple(ax or ())
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return max(n, 1)
+
+
+def _padded_attention(cfg: ModelConfig, q, k, v, **kw):
+    """Attention with the head dim padded to a shardable multiple.
+
+    Archs whose head count doesn't divide the model axis (minicpm 36H,
+    qwen2-vl 28H on a 16-way axis) otherwise force GSPMD to replicate the
+    per-head score tensors — measured 12.4 TB/chip of block-wise
+    all-gathers on minicpm prefill_32k.  Zero-padded heads produce uniform
+    softmax outputs that are sliced off before the output projection
+    (48/36 = 1.33x attention FLOPs for a ~60x collective reduction).
+    """
+    from repro.models.common import attention as _attn
+    H = q.shape[2]
+    n = _head_shards(cfg)
+    if n <= 1 or H % n == 0:
+        return _attn(q, k, v, **kw)
+    Hp = -(-H // n) * n
+    kv = k.shape[2]
+    while Hp % kv and (Hp // kv) * kv != Hp:   # keep GQA groups integral
+        Hp += n
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    if kv == H:                                 # MHA: pad k/v alongside
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    qp = constrain(qp, "batch", None, "act_heads", None)
+    out = _attn(qp, k, v, **kw)
+    return out[:, :, :H]
+
+
+def _attn_qkv(lp: Tree, cfg: ModelConfig, h: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dq->bsq", h, lp["attn"]["wq"])
+    k = jnp.einsum("bsd,dq->bsq", h, lp["attn"]["wk"])
+    v = jnp.einsum("bsd,dq->bsq", h, lp["attn"]["wv"])
+    if cfg.qkv_bias:
+        q = q + lp["attn"]["bq"]
+        k = k + lp["attn"]["bk"]
+        v = v + lp["attn"]["bv"]
+    q = constrain(q.reshape(B, S, cfg.num_heads, cfg.head_dim),
+                  "batch", None, "act_heads", None)
+    k = constrain(k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
+                  "batch", None, "act_kv", None)
+    v = constrain(v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
+                  "batch", None, "act_kv", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["attn"]["q_norm"])
+        k = rms_norm(k, lp["attn"]["k_norm"])
+    return q, k, v
+
+
+def _position_rotate(cfg: ModelConfig, q: jax.Array, k: jax.Array,
+                     positions: jax.Array,
+                     positions_3d: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    if cfg.positional != "rope":
+        return q, k
+    if cfg.mrope_sections is not None:
+        assert positions_3d is not None, "qwen2-vl requires positions_3d (3,B,S)"
+        q = apply_mrope(q, positions_3d, cfg.head_dim, cfg.rope_theta,
+                        cfg.mrope_sections)
+        k = apply_mrope(k, positions_3d, cfg.head_dim, cfg.rope_theta,
+                        cfg.mrope_sections)
+        return q, k
+    cos, sin = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def _layer(cfg: ModelConfig, x: jax.Array, lp: Tree,
+           positions: jax.Array, positions_3d: Optional[jax.Array],
+           segment_ids: Optional[jax.Array],
+           cap_e: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """One decoder block. Returns (x, expert_load or zeros)."""
+    x = constrain(x, "batch", None, "act_embed")
+    h = rms_norm(x, lp["ln1"])
+    q, k, v = _attn_qkv(lp, cfg, h)
+    q, k = _position_rotate(cfg, q, k, positions, positions_3d)
+    a = _padded_attention(cfg, q, k, v, causal=True, segment_ids=segment_ids,
+                          block_q=cfg.attn_block_q,
+                          block_kv=cfg.attn_block_kv,
+                          flash_threshold=cfg.flash_threshold)
+    B, S = x.shape[:2]
+    a = constrain(a.reshape(B, S, cfg.q_dim), "batch", None, "act_heads")
+    x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
+    x = constrain(x, "batch", None, "act_embed")
+
+    h = rms_norm(x, lp["ln2"])
+    if cfg.is_moe:
+        out, load = moe_ffn(h, lp["moe"]["router"], lp["moe"]["w_gate"],
+                            lp["moe"]["w_up"], lp["moe"]["w_down"], cfg, cap_e)
+    elif cfg.mlp == "swiglu":
+        out = mlp_swiglu(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                         lp["mlp"]["wo"])
+        load = jnp.zeros((1,), jnp.float32)
+    else:
+        out = mlp_gelu(h, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                       lp["mlp"]["wo"], lp["mlp"]["bo"])
+        load = jnp.zeros((1,), jnp.float32)
+    return constrain(x + out, "batch", None, "act_embed"), load
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(cfg: ModelConfig, params: Tree, inputs: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Returns (x (B,S,D), positions (B,S) or (S,), positions_3d or None)."""
+    if cfg.frontend != "none":
+        x = inputs["embeds"].astype(params["embed"]["tok"].dtype)
+    else:
+        x = params["embed"]["tok"][inputs["tokens"]]
+    x = constrain(x, "batch", None, "act_embed")
+    B, S = x.shape[:2]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.positional == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    return x, positions, inputs.get("positions_3d")
+
+
+def forward(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+            *, remat: str = "full", return_hidden: bool = False,
+            cap_e: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full causal forward. Returns (logits (B,S,V), expert_loads (L,E)|(L,1)).
+
+    ``inputs``: tokens (B,S) int32 | embeds (B,S,D), optional positions,
+    positions_3d (3,B,S), segment_ids (B,S) for packed sequences.
+    ``remat``: "full" | "none" — activation checkpointing policy of the scan.
+    ``return_hidden``: return final-norm hidden states instead of logits
+    (the chunked-CE loss path never materializes (B,S,V) logits).
+    """
+    x, positions, pos3d = _embed_inputs(cfg, params, inputs)
+    segment_ids = inputs.get("segment_ids")
+
+    def body(x, lp):
+        y, load = _layer(cfg, x, lp, positions, pos3d, segment_ids, cap_e)
+        return y, load
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, loads = jax.lax.scan(body, x, params["layers"])
+
+    x = rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, loads
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[..., :cfg.vocab_size]
+    return logits, loads
+
+
+# -------------------------------------------------------------------- decode
+def cache_dtype(cfg: ModelConfig, default=jnp.bfloat16):
+    if cfg.kv_cache_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    return default
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: jnp.dtype = jnp.bfloat16,
+               abstract: bool = False) -> Tuple[Tree, Tree]:
+    """KV cache: (L, B, max_len, KV*hd) per k/v + current length scalar.
+
+    The kv-heads dim is stored *flattened* with head_dim so the "kv" logical
+    axis shards evenly even when num_kv_heads < model-axis size (grok: 8 kv
+    heads on a 16-way axis shard as 1024 = 8·128 columns / 64 per chip).
+    ``cfg.kv_cache_dtype="fp8"`` stores the cache in f8e4m3 (half the HBM;
+    attention math upcasts on read — the standard serving memory lever).
+    """
+    dtype = cache_dtype(cfg, dtype)
+    shape = (cfg.num_layers, batch, max_len, cfg.kv_dim)
+    z = (jax.ShapeDtypeStruct if abstract
+         else (lambda s, d: jnp.zeros(s, d)))
+    cache = {
+        "k": z(shape, dtype),
+        "v": z(shape, dtype),
+        "len": z((), jnp.int32),
+    }
+    specs = {
+        "k": ("layers", "batch", "seq_cache", "kv"),
+        "v": ("layers", "batch", "seq_cache", "kv"),
+        "len": (),
+    }
+    return cache, specs
+
+
+def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                cache: Tree, *, cap_e: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Tree]:
+    """One-token decode: inputs token (B,1) (or embeds (B,1,D)); returns
+    (logits (B,V), updated cache)."""
+    cur = cache["len"]
+    if cfg.frontend != "none":
+        x = inputs["embeds"].astype(params["embed"]["tok"].dtype)
+    else:
+        x = params["embed"]["tok"][inputs["tokens"]]
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur, dtype=jnp.int32)
+    if cfg.positional == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    pos3d = inputs.get("positions_3d")  # (3,B,1) for qwen2-vl
+
+    def body(x, layer):
+        lp, kc, vc = layer                      # kc/vc: (B, S, KV*hd) flat
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = _attn_qkv(lp, cfg, h)
+        q, k = _position_rotate(cfg, q, k, positions, pos3d)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k.reshape(B, 1, cfg.kv_dim).astype(kc.dtype), cur, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v.reshape(B, 1, cfg.kv_dim).astype(vc.dtype), cur, axis=1)
+        S_max = kc.shape[1]
+        a = decode_attention(
+            q,
+            kc.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
+                       ).astype(q.dtype),
+            vc.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
+                       ).astype(q.dtype),
+            cur + 1)
+        a = a.reshape(B, 1, cfg.q_dim)
+        x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
+        h = rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            out, _ = moe_ffn(h, lp["moe"]["router"], lp["moe"]["w_gate"],
+                             lp["moe"]["w_up"], lp["moe"]["w_down"], cfg, cap_e)
+        elif cfg.mlp == "swiglu":
+            out = mlp_swiglu(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                             lp["mlp"]["wo"])
+        else:
+            out = mlp_gelu(h, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                           lp["mlp"]["wo"], lp["mlp"]["bo"])
+        return x + out, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0, :cfg.vocab_size]
+    new_cache = {"k": new_k, "v": new_v, "len": cur + 1}
+    return logits, new_cache
+
+
+def prefill(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+            max_len: Optional[int] = None,
+            *, remat: str = "full",
+            cap_e: Optional[jax.Array] = None) -> Tuple[jax.Array, Tree]:
+    """Process a full prompt, building the KV cache; returns
+    (last-position logits (B,V), cache)."""
+    x, positions, pos3d = _embed_inputs(cfg, params, inputs)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    segment_ids = inputs.get("segment_ids")
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = _attn_qkv(lp, cfg, h)
+        qr, kr = _position_rotate(cfg, q, k, positions, pos3d)
+        a = _padded_attention(cfg, qr, kr, v, causal=True,
+                              segment_ids=segment_ids,
+                              block_q=cfg.attn_block_q,
+                              block_kv=cfg.attn_block_kv,
+                              flash_threshold=cfg.flash_threshold)
+        a = a.reshape(B, S, cfg.q_dim)
+        x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
+        h = rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            out, _ = moe_ffn(h, lp["moe"]["router"], lp["moe"]["w_gate"],
+                             lp["moe"]["w_up"], lp["moe"]["w_down"], cfg, cap_e)
+        elif cfg.mlp == "swiglu":
+            out = mlp_swiglu(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                             lp["mlp"]["wo"])
+        else:
+            out = mlp_gelu(h, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                           lp["mlp"]["wo"], lp["mlp"]["bo"])
+        # cache stores *rotated* keys (decode appends rotated keys too),
+        # flattened to (B, S, KV*hd) — see init_cache
+        return x + out, (kr.reshape(B, S, cfg.kv_dim),
+                         v.reshape(B, S, cfg.kv_dim))
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+
+    pad = max_len - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    ks = ks.astype(cache_dtype(cfg, ks.dtype))
+    vs = vs.astype(cache_dtype(cfg, vs.dtype))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)[:, :cfg.vocab_size]
+    cache = {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache

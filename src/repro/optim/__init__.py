@@ -1,0 +1,14 @@
+from repro.optim.optimizers import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import cosine_schedule, linear_schedule, wsd_schedule
+
+__all__ = [
+    "adamw", "adafactor", "make_optimizer", "global_norm",
+    "clip_by_global_norm", "cosine_schedule", "wsd_schedule",
+    "linear_schedule",
+]

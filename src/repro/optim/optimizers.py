@@ -1,0 +1,145 @@
+"""Optimizers, built from scratch in JAX (no optax dependency).
+
+* AdamW — for the ≤32B archs (f32 m/v, decoupled weight decay).
+* Adafactor — for grok-1-314B / qwen3-moe-235B: factored second moment
+  (row/col statistics for rank≥2 tensors), no first moment by default —
+  the PaLM/T5 recipe that keeps optimizer state ~O(params/row) so a 314B
+  model fits 16 GB/chip on a 256-chip pod.
+
+Both return ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, step)
+    params = apply(params, updates)  # params + updates
+
+Optimizer state mirrors the parameter tree, so parameter sharding specs
+apply verbatim (ZeRO-1 comes free from the 2-D param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "global_norm", "clip_by_global_norm"]
+
+Tree = Any
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: Tree, max_norm: float) -> Tuple[Tree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw(lr_schedule: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0):
+    def init_fn(params: Tree) -> Tree:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update_fn(grads: Tree, state: Tree, params: Tree, step: jax.Array
+                  ) -> Tuple[Tree, Tree, Dict[str, jax.Array]]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        stepf = step.astype(jnp.float32) + 1.0
+        lr = lr_schedule(step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** stepf), m)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** stepf), v)
+        updates = jax.tree.map(
+            lambda p, mh, vh: (-lr * (mh / (jnp.sqrt(vh) + eps)
+                                      + weight_decay * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            params, mh, vh)
+        return updates, {"m": m, "v": v}, {"grad_norm": gnorm, "lr": lr}
+
+    return init_fn, update_fn
+
+
+# ---------------------------------------------------------------- Adafactor
+def _factored_dims(shape) -> Optional[Tuple[int, int]]:
+    """Factor the two largest of the trailing dims (T5 convention: the last
+    two axes; leading axes like `layers`/`experts` are batched)."""
+    if len(shape) < 2 or shape[-1] < 2 or shape[-2] < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor(lr_schedule: Callable, eps: float = 1e-30,
+              decay: float = 0.8, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0):
+    """Factored Adafactor (Shazeer & Stern 2018), relative-step off,
+    momentum off — the memory-lean large-model configuration."""
+
+    def init_fn(params: Tree) -> Tree:
+        def make(p):
+            if _factored_dims(p.shape) is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            vr = jnp.zeros(p.shape[:-1], jnp.float32)         # row stats
+            vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"vr": vr, "vc": vc}
+        return {"v": jax.tree.map(make, params)}
+
+    def update_fn(grads: Tree, state: Tree, params: Tree, step: jax.Array
+                  ) -> Tuple[Tree, Tree, Dict[str, jax.Array]]:
+        stepf = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - stepf ** (-decay)                        # t^-0.8 schedule
+        lr = lr_schedule(step)
+        gnorm = global_norm(grads)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "v" in v:
+                vnew = beta * v["v"] + (1 - beta) * g2
+                precond = g * jax.lax.rsqrt(vnew)
+                vout = {"v": vnew}
+            else:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc)
+                precond = g * rfac[..., None] * cfac[..., None, :]
+                vout = {"vr": vr, "vc": vc}
+            # update clipping (RMS(update) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms / clip_threshold)
+            delta = -lr * precond
+            if weight_decay:
+                delta = delta - lr * weight_decay * p.astype(jnp.float32)
+            return delta.astype(p.dtype), vout
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        updates = treedef.unflatten([u for u, _ in out])
+        vnew = treedef.unflatten([v for _, v in out])
+        return updates, {"v": vnew}, {"grad_norm": gnorm, "lr": lr}
+
+    return init_fn, update_fn
+
+
+def make_optimizer(name: str, lr_schedule: Callable, **kw):
+    if name == "adamw":
+        return adamw(lr_schedule, **kw)
+    if name == "adafactor":
+        return adafactor(lr_schedule, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

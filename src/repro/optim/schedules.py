@@ -1,0 +1,51 @@
+"""Learning-rate schedules: cosine, linear, and WSD (warmup-stable-decay,
+the MiniCPM schedule — arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule", "linear_schedule"]
+
+Schedule = Callable
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long constant plateau, short
+    exponential-ish (here: linear-in-log) decay tail."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        decay_start = warmup_steps + stable_steps
+        prog = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1),
+                        0.0, 1.0)
+        decay = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, peak_lr, decay))
+        return out
+    return fn
+
+
+def linear_schedule(peak_lr: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak_lr * (1 - prog))
+    return fn

@@ -1,0 +1,33 @@
+"""Sharding specs for optimizer state (mirror of the parameter specs)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.optim.optimizers import _factored_dims
+
+__all__ = ["opt_state_specs"]
+
+
+def opt_state_specs(name: str, params: Any, specs: Any) -> Any:
+    """Logical-axes trees for the optimizer state of ``params``.
+
+    AdamW m/v inherit the parameter spec verbatim (ZeRO-1 via the 2-D param
+    sharding).  Adafactor row/col stats drop the reduced axis.
+    """
+    if name == "adamw":
+        return {"m": specs, "v": specs}
+    if name == "adafactor":
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_s = treedef.flatten_up_to(specs)
+
+        def make(p, s):
+            if _factored_dims(p.shape) is None:
+                return {"v": s}
+            return {"vr": tuple(s[:-1]), "vc": tuple(s[:-2]) + (s[-1],)}
+
+        return {"v": treedef.unflatten(
+            [make(p, s) for p, s in zip(flat_p, flat_s)])}
+    raise KeyError(f"unknown optimizer {name!r}")

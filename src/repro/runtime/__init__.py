@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    SupervisorReport,
+    TrainSupervisor,
+)
+from repro.runtime.elastic import plan_degraded_mesh, rebuild
+
+__all__ = ["FailureInjector", "TrainSupervisor", "SupervisorReport",
+           "plan_degraded_mesh", "rebuild"]

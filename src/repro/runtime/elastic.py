@@ -1,0 +1,49 @@
+"""Elastic scaling: rebuild mesh + steps + UDS plans for a new worker count.
+
+On losing a slice, the healthy device set no longer matches the production
+mesh; this module picks the largest (data', model) factorization that fits,
+reshards the restored checkpoint (checkpoint/ restores host-side and
+device_puts with the new shardings), and re-plans all UDS schedules for
+data' workers — scheduler ``init`` is re-run with the new team size, which
+is exactly the paper's contract (start = init + enqueue for the *current*
+team).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+__all__ = ["plan_degraded_mesh", "rebuild"]
+
+
+def plan_degraded_mesh(healthy_devices: int, model_parallel: int,
+                       pod_axis: bool = False) -> Tuple[int, ...]:
+    """Largest mesh shape (data, model) [or (pod, data, model)] that fits
+    the healthy device count while preserving model-parallel degree (model
+    sharding cannot shrink without resharding weights *within* a layer)."""
+    if healthy_devices < model_parallel:
+        raise ValueError(
+            f"{healthy_devices} healthy devices cannot sustain "
+            f"model_parallel={model_parallel}")
+    data = healthy_devices // model_parallel
+    # power-of-two data degree keeps batch divisibility stable
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    if pod_axis and d >= 2:
+        return (2, d // 2, model_parallel)
+    return (d, model_parallel)
+
+
+def rebuild(healthy_devices: int, model_parallel: int,
+            axes: Optional[Tuple[str, ...]] = None):
+    """Mesh for the degraded fleet. Caller re-derives rules/shardings and
+    re-jits steps against it (see examples/fault_tolerant_train.py)."""
+    shape = plan_degraded_mesh(healthy_devices, model_parallel)
+    axes = axes or (("data", "model") if len(shape) == 2
+                    else ("pod", "data", "model"))
+    return make_mesh(shape, axes)

@@ -1,0 +1,152 @@
+"""Fault-tolerant training runtime.
+
+The supervisor owns the restart loop a 1000-node deployment needs:
+
+  * periodic async checkpoints (train loop blocks only for device→host);
+  * on failure (device loss, preemption, injected fault) — restore from the
+    newest committed checkpoint and continue;
+  * on *repeated* failure of the same device set — elastic downsize: rebuild
+    the mesh with fewer data shards, reshard the checkpoint onto it, and
+    re-plan UDS work assignments for the new worker count (the scheduler's
+    ``init`` is simply re-run — paper semantics: start = init + enqueue);
+  * straggler mitigation via AWF weights from measured per-host step times
+    (sched/straggler.py).
+
+Failures are injected through ``FailureInjector`` in tests/examples — the
+supervisor logic is identical for real device errors (RuntimeError from the
+runtime surfaces the same way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.sched.straggler import StragglerMitigator
+
+__all__ = ["FailureInjector", "TrainSupervisor", "SupervisorReport"]
+
+
+class FailureInjector:
+    """Deterministic fault schedule: fail at given steps (once each)."""
+
+    def __init__(self, fail_at: Dict[int, str]):
+        self.fail_at = dict(fail_at)        # step -> kind ("transient"|"device")
+        self.fired: List[int] = []
+
+    def check(self, step: int) -> None:
+        kind = self.fail_at.pop(step, None)
+        if kind is not None:
+            self.fired.append(step)
+            raise RuntimeError(f"injected {kind} failure at step {step}")
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_completed: int
+    restarts: int
+    restores: List[int]
+    elastic_events: List[Tuple[int, int]]    # (step, new_data_shards)
+    stragglers_flagged: List[int]
+    losses: List[float]
+
+
+class TrainSupervisor:
+    """Drives (state, step) -> state train functions under failures.
+
+    ``make_step(state, step) -> (state, metrics)`` — the compiled step;
+    ``state`` is the full restorable pytree (params + opt + UDS history).
+    ``on_elastic(new_workers) -> None`` — callback to rebuild mesh/steps.
+    """
+
+    def __init__(self, make_step: Callable, init_state: Callable[[], Any],
+                 ckpt_dir: str, *, ckpt_every: int = 10,
+                 max_restarts: int = 8,
+                 num_hosts: int = 1,
+                 injector: Optional[FailureInjector] = None,
+                 on_elastic: Optional[Callable[[int], None]] = None,
+                 elastic_after_failures: int = 2):
+        self.make_step = make_step
+        self.init_state = init_state
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.injector = injector
+        self.on_elastic = on_elastic
+        self.elastic_after_failures = elastic_after_failures
+        self.mitigator = StragglerMitigator(num_hosts)
+
+    def run(self, total_steps: int) -> SupervisorReport:
+        restarts = 0
+        restores: List[int] = []
+        elastic: List[Tuple[int, int]] = []
+        losses: List[float] = []
+        consecutive_failures = 0
+        num_hosts = self.mitigator.num_hosts
+
+        state = None
+        step = 0
+        steps_since_restore = 0
+        while step < total_steps:
+            try:
+                if state is None:
+                    if latest_step(self.ckpt_dir) is not None:
+                        template = self.init_state()
+                        state, step, _ = restore_checkpoint(
+                            self.ckpt_dir, template)
+                        restores.append(step)
+                        steps_since_restore = 0
+                    else:
+                        state = self.init_state()
+                        step = 0
+                while step < total_steps:
+                    if self.injector is not None:
+                        self.injector.check(step)
+                    t0 = time.perf_counter()
+                    state, metrics = self.make_step(state, step)
+                    dt = time.perf_counter() - t0
+                    # per-host timing feed (single-host container: host 0;
+                    # multi-host deployments report their own clocks)
+                    self.mitigator.observe_step({0: dt})
+                    losses.append(float(metrics.get("loss", np.nan)))
+                    step += 1
+                    steps_since_restore += 1
+                    if step % self.ckpt_every == 0:
+                        self.ckpt.save(step, state)
+                self.ckpt.wait()
+            except RuntimeError:
+                restarts += 1
+                try:
+                    self.ckpt.wait()       # flush any in-flight commit
+                except RuntimeError:
+                    pass
+                # failures count as consecutive unless real progress
+                # (>= 2 checkpoint periods) happened since the last restore
+                if steps_since_restore >= 2 * self.ckpt_every:
+                    consecutive_failures = 1
+                else:
+                    consecutive_failures += 1
+                steps_since_restore = 0
+                if restarts > self.max_restarts:
+                    raise
+                if (consecutive_failures >= self.elastic_after_failures
+                        and self.on_elastic is not None and num_hosts > 1):
+                    num_hosts //= 2
+                    self.on_elastic(num_hosts)
+                    elastic.append((step, num_hosts))
+                    consecutive_failures = 0
+                state = None          # force restore on next iteration
+        self.ckpt.wait()
+        return SupervisorReport(
+            steps_completed=step,
+            restarts=restarts,
+            restores=restores,
+            elastic_events=elastic,
+            stragglers_flagged=self.mitigator.stragglers(),
+            losses=losses,
+        )

@@ -1,0 +1,10 @@
+"""UDS applied to the distributed substrate: packing, MoE capacity,
+microbatching, straggler mitigation."""
+
+from repro.sched.packing import pack_with_scheduler, plan_packing
+from repro.sched.moe_capacity import CapacityPlanner
+from repro.sched.straggler import StragglerMitigator
+from repro.sched.microbatch import plan_microbatch_permutation
+
+__all__ = ["pack_with_scheduler", "plan_packing", "CapacityPlanner",
+           "StragglerMitigator", "plan_microbatch_permutation"]

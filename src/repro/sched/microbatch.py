@@ -1,0 +1,70 @@
+"""UDS-planned gradient-accumulation microbatches.
+
+Microbatches are the scheduling chunks of a training step: with variable-
+cost rows (packed sequences of different fill), a decreasing-chunk schedule
+(TSS/FAC2) front-loads the heavy microbatches so the pipeline drains evenly,
+and AWF-weighted splits compensate persistent host speed differences.
+
+The compiled step keeps *uniform* microbatch shapes (XLA is static); the
+scheduler instead decides the ASSIGNMENT: which rows go into which
+microbatch slot (a permutation), equalizing per-microbatch cost.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import LoopHistory, LoopSpec, SchedulerContext
+from repro.core.interface import UserDefinedSchedule
+
+__all__ = ["plan_microbatch_permutation"]
+
+
+def plan_microbatch_permutation(sched: UserDefinedSchedule,
+                                row_costs: Sequence[float],
+                                num_microbatches: int,
+                                history: Optional[LoopHistory] = None
+                                ) -> np.ndarray:
+    """Permutation of batch rows such that consecutive equal-size slices
+    (the compiled microbatches) have near-equal total cost.
+
+    Rows are iterations; microbatches are workers; the UDS dequeues row
+    chunks for the currently-lightest microbatch (longest-processing-time
+    order).  Returns (B,) int32 permutation.
+    """
+    B = len(row_costs)
+    assert B % num_microbatches == 0
+    per = B // num_microbatches
+    order = np.argsort([-c for c in row_costs], kind="stable")
+    loop = LoopSpec(lb=0, ub=B, num_workers=num_microbatches,
+                    loop_id="microbatch")
+    ctx = SchedulerContext(loop=loop, history=history)
+    state = sched.start(ctx)
+
+    buckets: list[list[int]] = [[] for _ in range(num_microbatches)]
+    load = np.zeros(num_microbatches)
+    elapsed = {m: None for m in range(num_microbatches)}
+    active = set(range(num_microbatches))
+    while active:
+        m = min(active, key=lambda i: (load[i], i))
+        chunk = sched.next(state, m, elapsed[m])
+        if chunk is None:
+            active.discard(m)
+            continue
+        cost = 0.0
+        for idx in range(chunk.start, chunk.stop):
+            row = int(order[idx])
+            # overflow spills to the lightest non-full bucket
+            tgt = m if len(buckets[m]) < per else int(
+                np.argmin([load[i] if len(buckets[i]) < per else np.inf
+                           for i in range(num_microbatches)]))
+            buckets[tgt].append(row)
+            load[tgt] += row_costs[row]
+            cost += row_costs[row]
+        elapsed[m] = cost if cost else 1e-9
+    sched.finish(state)
+    perm = [r for b in buckets for r in b]
+    assert sorted(perm) == list(range(B))
+    return np.asarray(perm, dtype=np.int32)

@@ -1,0 +1,66 @@
+"""WF2/AWF-planned MoE expert capacities.
+
+Experts are units of processing with *measured* load (the fraction of
+tokens routed to each, returned by moe_ffn — the end-loop-body measurement);
+the capacity vector for the next step is planned by weighted factoring:
+persistently-hot experts get more slots, cold experts fewer, under a fixed
+total budget — reducing token dropping at equal memory.
+
+This is the paper's heterogeneous-workers story (WF2 "can employ workload
+balancing information specified by the user") executing inside an MoE
+layer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import LoopHistory
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_buffer_capacity, moe_capacity
+
+__all__ = ["CapacityPlanner"]
+
+
+class CapacityPlanner:
+    """Plans per-expert capacities from an EWMA of measured loads."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int,
+                 ewma: float = 0.9, floor: float = 0.25):
+        self.cfg = cfg
+        self.C = moe_capacity(cfg, seq_len)              # uniform budget / expert
+        self.C_buf = moe_buffer_capacity(cfg, seq_len)   # hard buffer bound
+        self.ewma = ewma
+        self.floor = floor
+        self.load: Optional[np.ndarray] = None           # (E,) EWMA of loads
+
+    def observe(self, loads: np.ndarray) -> None:
+        """loads: (L, E) per-layer routed fractions from the train step."""
+        mean = np.asarray(loads).mean(axis=0)
+        if self.load is None:
+            self.load = mean
+        else:
+            self.load = self.ewma * self.load + (1 - self.ewma) * mean
+
+    def plan(self) -> np.ndarray:
+        """(E,) int32 capacities: WF2 weights = normalized expert loads;
+        slot budget = E * C (same as uniform), hot experts may rise to the
+        buffer bound C_buf = C * headroom."""
+        E = self.cfg.num_experts
+        if self.load is None:
+            return np.full(E, self.C, np.int32)
+        w = self.load / max(self.load.mean(), 1e-9)        # mean 1.0
+        w = np.clip(w, self.floor, None)
+        cap = np.round(self.C * w * E / w.sum()).astype(np.int32)
+        return np.clip(cap, 1, self.C_buf).astype(np.int32)
+
+    def drop_rate(self, loads: np.ndarray, cap: np.ndarray) -> float:
+        """Expected fraction of routed tokens dropped under ``cap`` given
+        observed per-layer loads (diagnostic for benchmarks)."""
+        E = self.cfg.num_experts
+        # loads are fractions of all routed slots; scale to the slot budget
+        tokens = np.asarray(loads) * E * self.C
+        overflow = np.clip(tokens - cap[None, :], 0, None)
+        return float(overflow.sum() / max(tokens.sum(), 1e-9))

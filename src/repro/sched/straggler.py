@@ -1,0 +1,68 @@
+"""AWF straggler mitigation: adaptive re-weighting of per-host work.
+
+The paper's adaptive weighted factoring, doing real systems work: hosts
+(data-parallel workers) report step times; AWF weights derived from the
+history re-balance the *document/token assignment* produced by the packing
+scheduler, so a slow host (thermal throttling, a flaky NIC, a dying HBM
+channel) receives proportionally less work instead of stalling the
+all-reduce for everyone.
+
+This is plan–execute–measure at the pod level: the UDS history object IS
+the straggler detector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import ChunkRecord, LoopHistory
+
+__all__ = ["StragglerMitigator"]
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    num_hosts: int
+    loop_id: str = "train_step"
+    threshold: float = 1.15      # flag hosts >15% slower than median
+    window: int = 16
+
+    def __post_init__(self):
+        self.history = LoopHistory()
+        self._step = 0
+
+    # ------------------------------------------------------------ measure
+    def observe_step(self, host_times: Dict[int, float],
+                     host_tokens: Optional[Dict[int, int]] = None) -> None:
+        """Record one training step's per-host wall times."""
+        inv = self.history.open_invocation(self.loop_id)
+        for h, t in host_times.items():
+            n = (host_tokens or {}).get(h, 1)
+            inv.chunks.append(ChunkRecord(worker=h, start=0, stop=n,
+                                          elapsed=t))
+        self._step += 1
+
+    # ------------------------------------------------------------- detect
+    def stragglers(self) -> List[int]:
+        rates = self.history.worker_rates(self.loop_id, last_k=self.window)
+        if len(rates) < 2:
+            return []
+        med = float(np.median(list(rates.values())))
+        return [h for h, r in rates.items() if r > self.threshold * med]
+
+    # --------------------------------------------------------------- plan
+    def weights(self) -> np.ndarray:
+        """AWF capability weights, normalized to sum num_hosts — feed these
+        to the packing scheduler (WeightedFactoring) or the batch splitter."""
+        return np.asarray(
+            self.history.awf_weights(self.loop_id, self.num_hosts))
+
+    def token_shares(self, total_tokens: int) -> np.ndarray:
+        """Integer per-host token budgets proportional to AWF weights."""
+        w = self.weights()
+        shares = np.floor(total_tokens * w / w.sum()).astype(np.int64)
+        shares[: total_tokens - int(shares.sum())] += 1
+        return shares

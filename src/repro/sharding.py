@@ -1,0 +1,126 @@
+"""Logical-axis sharding: rule tables, spec construction, and in-model
+activation constraints.
+
+GSPMD sharding propagation into scanned (while-loop) bodies is weak: left
+unannotated, XLA happily replicates the batch axis of every activation
+inside the layer loop (observed: a 19 GB/chip carry stack on a 3B model).
+The fix — standard in production JAX frameworks — is explicit
+``with_sharding_constraint`` on activations at layer boundaries, expressed
+here through the same logical-axis rule table as the parameters, so a
+single rule change re-shards the whole program (the §Perf lever).
+
+Usage (models):
+    from repro.sharding import constrain
+    x = constrain(x, "batch", None, "act_embed")
+
+Usage (launch layer):
+    with axis_rules(mesh, rules):
+        lowered = jitted.lower(...)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "spec_for", "shardings_for", "axis_rules", "constrain",
+           "current_rules"]
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+_tls = threading.local()
+
+
+def spec_for(logical: Tuple[Optional[str], ...], rules: Rules,
+             shape: Optional[Tuple[int, ...]] = None,
+             axis_sizes: Optional[Dict[str, int]] = None) -> P:
+    """Logical axes tuple -> PartitionSpec.
+
+    * A mesh axis shards at most one tensor dim (duplicates dropped).
+    * With ``shape``+``axis_sizes``: dims not divisible by their mesh-axes
+      product fall back to replication (jit argument shardings and
+      with_sharding_constraint require exact divisibility; e.g. minicpm's
+      vocab=122753 cannot 16-way shard — the table replicates, noted in
+      EXPERIMENTS.md).
+    """
+    used = set()
+    out = []
+    for i, ax in enumerate(logical):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        maxes = (m,) if isinstance(m, str) else tuple(m)
+        free = tuple(a for a in maxes if a not in used)
+        if not free:
+            out.append(None)
+            continue
+        if shape is not None and axis_sizes is not None:
+            total = math.prod(axis_sizes.get(a, 1) for a in free)
+            if shape[i] % total != 0:
+                out.append(None)
+                continue
+        used.update(free)
+        out.append(free if len(free) > 1 else free[0])
+    return P(*out)
+
+
+def _sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def shardings_for(specs: Any, rules: Rules, mesh: Mesh,
+                  tree: Any = None) -> Any:
+    """Tree of logical-axes tuples -> tree of NamedShardings.
+
+    ``tree``: optional matching tree of arrays/ShapeDtypeStructs enabling
+    the divisibility fallback.
+    """
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+
+    if tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, spec_for(s, rules)),
+            specs, is_leaf=is_spec)
+    flat_t, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(specs)
+    sizes = _sizes(mesh)
+    out = [NamedSharding(mesh, spec_for(s, rules, shape=t.shape,
+                                        axis_sizes=sizes))
+           for s, t in zip(flat_s, flat_t)]
+    return treedef.unflatten(out)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Rules):
+    """Activate (mesh, rules) for in-model ``constrain`` calls during trace."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules, _sizes(mesh))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_rules() -> Optional[Tuple[Mesh, Rules, Dict[str, int]]]:
+    return getattr(_tls, "ctx", None)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via the active rule table; no-op outside an
+    ``axis_rules`` context (single-device tests run unannotated)."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules, sizes = ctx
+    if len(logical) != x.ndim:
+        raise ValueError(f"constrain: {len(logical)} axes for rank-{x.ndim}")
+    spec = spec_for(tuple(logical), rules, shape=x.shape, axis_sizes=sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,176 @@
+"""The paper's interface claims, executed:
+
+* the lambda-style and declare-style specifications of ``mystatic`` (Fig. 2)
+  produce IDENTICAL schedules to each other and to the built-in
+  ``schedule(static, chunk)``;
+* the six-operation set reduces to the three-operation set without changing
+  any schedule (the paper's merge argument);
+* templates can be partially overridden at the use site;
+* the monotonic modifier is enforced.
+"""
+
+import pytest
+
+from repro.core import LoopSpec, SchedulerContext, plan_waves
+from repro.core.interface import three_op_from_six
+from repro.core.schedulers import StaticChunk, GuidedSS, as_three_op
+from repro.core import declare
+from repro.core.declare import (ARG, OMP_CHUNKSZ, OMP_INCR, OMP_LB,
+                                OMP_LB_CHUNK, OMP_NUM_WORKERS, OMP_UB,
+                                OMP_UB_CHUNK, Ref, call, declare_schedule,
+                                omp_get_thread_num, use_schedule)
+from repro.core import lambda_style as ls
+
+
+def plan_of(sched, n=103, p=4, chunk=8):
+    loop = LoopSpec(lb=0, ub=n, num_workers=p, chunk=chunk, loop_id="x")
+    return plan_waves(sched, loop)
+
+
+# ------------------------------------------------ declare-style (paper §4.2)
+class LoopRecord:
+    """The paper's loop_record_t."""
+    def __init__(self):
+        self.lb = self.ub = self.incr = self.chunksz = 0
+        self.next_lb = []
+
+
+def my_init(lb, ub, incr, chunksz, nw, lr):
+    lr.lb, lr.ub, lr.incr, lr.chunksz = lb, ub, incr, chunksz
+    lr.next_lb = [lb + tid * chunksz * incr for tid in range(nw)]
+    lr.nw = nw
+
+
+def my_next(lower: Ref, upper: Ref, step: Ref, lr):
+    tid = omp_get_thread_num()
+    if lr.next_lb[tid] >= lr.ub:
+        return 0
+    lower.set(lr.next_lb[tid])
+    upper.set(min(lr.next_lb[tid] + lr.chunksz * lr.incr, lr.ub))
+    step.set(lr.incr)
+    lr.next_lb[tid] += lr.nw * lr.chunksz * lr.incr
+    return 1
+
+
+def my_fini(lr):
+    lr.next_lb = []
+
+
+@pytest.fixture()
+def declared_mystatic():
+    if "mystatic" not in declare.registered_schedules():
+        declare_schedule(
+            "mystatic", arguments=1,
+            init=call(my_init, OMP_LB, OMP_UB, OMP_INCR, OMP_CHUNKSZ,
+                      OMP_NUM_WORKERS, ARG(0)),
+            next=call(my_next, OMP_LB_CHUNK, OMP_UB_CHUNK,
+                      declare.OMP_CHUNK_INCR, ARG(0)),
+            fini=call(my_fini, ARG(0)))
+    return "mystatic"
+
+
+# ------------------------------------------------- lambda-style (paper §4.1)
+@pytest.fixture()
+def lambda_mystatic():
+    name = "mystatic_lambda"
+    if name not in ls.registered_templates():
+
+        def init():
+            ptr = ls.OMP_UDS_user_ptr()
+            c = ls.OMP_UDS_chunksize()
+            ptr["next_lb"] = [ls.OMP_UDS_loop_start() + t * c
+                              for t in range(ls.OMP_UDS_num_workers())]
+
+        def dequeue():
+            ptr = ls.OMP_UDS_user_ptr()
+            tid = ls.omp_get_thread_num()
+            if ptr["next_lb"][tid] >= ls.OMP_UDS_loop_end():
+                return 0                      # paper: "return 0"
+            c = ls.OMP_UDS_chunksize()
+            ls.OMP_UDS_loop_chunk_start(ptr["next_lb"][tid])
+            ls.OMP_UDS_loop_chunk_end(
+                min(ptr["next_lb"][tid] + c, ls.OMP_UDS_loop_end()))
+            ls.OMP_UDS_loop_chunk_step(ls.OMP_UDS_loop_step())
+            ptr["next_lb"][tid] += ls.OMP_UDS_num_workers() * c
+            return 1
+
+        def finalize():
+            ls.OMP_UDS_user_ptr().pop("next_lb", None)
+
+        ls.schedule_template(name, init=init, dequeue=dequeue,
+                             finalize=finalize)
+    return name
+
+
+# ------------------------------------------------------------------- claims
+def test_fig2_lambda_equals_declare_equals_builtin(declared_mystatic,
+                                                   lambda_mystatic):
+    lr = LoopRecord()
+    dec = plan_of(use_schedule(declared_mystatic, lr))
+    lam = plan_of(ls.UDS(template=lambda_mystatic, chunk=8, uds_data={}))
+    builtin = plan_of(StaticChunk(chunk=8))
+    assert dec.chunks == builtin.chunks
+    assert lam.chunks == builtin.chunks
+
+
+def test_six_op_reduction_is_lossless():
+    """three_op_from_six(GSS-as-six-ops) == GSS via its own reduced API."""
+    six = GuidedSS()
+    reduced = three_op_from_six(GuidedSS())
+    assert plan_of(reduced).chunks == plan_of(six).chunks
+
+
+def test_template_partial_override(lambda_mystatic):
+    """Paper §4.1: 'overwrite specific elements of an existing UDS template'."""
+    calls = []
+
+    def noisy_finalize():
+        calls.append("fini")
+
+    sched = ls.UDS(template=lambda_mystatic, chunk=8, uds_data={},
+                   finalize=noisy_finalize)
+    plan_of(sched)
+    assert calls == ["fini"]
+
+
+def test_monotonic_violation_detected():
+    state = {"emitted": False}
+
+    def dequeue():
+        if state["emitted"]:
+            ls.OMP_UDS_loop_chunk_start(0)   # goes backwards!
+            ls.OMP_UDS_loop_chunk_end(4)
+            return 1
+        state["emitted"] = True
+        ls.OMP_UDS_loop_chunk_start(8)
+        ls.OMP_UDS_loop_chunk_end(16)
+        return 1
+
+    sched = ls.UDS(dequeue=dequeue, monotonic=True)
+    loop = LoopSpec(lb=0, ub=32, num_workers=1)
+    st = sched.start(SchedulerContext(loop=loop))
+    sched.next(st, 0)
+    with pytest.raises(RuntimeError, match="monotonic"):
+        sched.next(st, 0)
+
+
+def test_declare_argument_count_enforced(declared_mystatic):
+    with pytest.raises(TypeError):
+        use_schedule(declared_mystatic)          # missing omp_arg0
+
+
+def test_inline_uds_without_template():
+    done = {"n": 0}
+
+    def dequeue():
+        if done["n"] >= 2:
+            ls.OMP_UDS_loop_dequeue_done()
+            return None
+        ls.OMP_UDS_loop_chunk_start(done["n"] * 5)
+        ls.OMP_UDS_loop_chunk_end(min((done["n"] + 1) * 5, 10))
+        done["n"] += 1
+        return 1
+
+    plan = plan_waves(ls.UDS(dequeue=dequeue),
+                      LoopSpec(lb=0, ub=10, num_workers=1))
+    assert [c.size for c in plan.chunks] == [5, 5]

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on the CPU host;
+TPU is the compile target).  Shape/dtype sweeps via hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_scheduler, plan_schedule
+from repro.kernels.sched_matmul.ops import (scheduled_matmul,
+                                            tile_order_from_plan)
+from repro.kernels.sched_matmul.ref import sched_matmul_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.linear_scan.ops import ssd, wkv
+from repro.kernels.linear_scan.ref import linear_attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ sched_matmul
+@given(mt=st.integers(1, 4), k=st.sampled_from([64, 128, 192]),
+       n=st.sampled_from([128, 256]),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 99))
+@settings(max_examples=12, deadline=None)
+def test_sched_matmul_sweep(mt, k, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    m = mt * 128
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    order = jnp.asarray(rng.permutation(mt), jnp.int32)
+    out = scheduled_matmul(a, b, order, block_k=64, interpret=True)
+    ref = sched_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("sched", ["guided", "fac2", "tss"])
+def test_sched_matmul_with_uds_plans(sched):
+    """Tile orders straight from UDS plans — the integration the kernel
+    exists for."""
+    m_tiles = 8
+    plan = plan_schedule(make_scheduler(sched), m_tiles, 2)
+    order = tile_order_from_plan(plan, m_tiles)
+    a = jnp.asarray(RNG.normal(size=(m_tiles * 128, 64)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(64, 128)), jnp.float32)
+    out = scheduled_matmul(a, b, jnp.asarray(order), block_k=64,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(sched_matmul_ref(a, b)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sched_matmul_padding_path():
+    a = jnp.asarray(RNG.normal(size=(200, 96)), jnp.float32)   # non-multiples
+    b = jnp.asarray(RNG.normal(size=(96, 130)), jnp.float32)
+    out = scheduled_matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a @ b), rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------- flash attention
+@given(b=st.integers(1, 2), s=st.sampled_from([32, 64, 96, 128]),
+       h=st.sampled_from([1, 2, 4]), kv=st.sampled_from([1, 2]),
+       d=st.sampled_from([16, 32, 64]), causal=st.booleans(),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 99))
+@settings(max_examples=16, deadline=None)
+def test_flash_attention_sweep(b, s, h, kv, d, causal, dtype, seed):
+    if h % kv:
+        kv = 1
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), dtype)
+    out = mha(q, k, v, causal=causal, block_q=32, block_kv=32,
+              interpret=True)
+    ref = mha(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_model_blockwise():
+    """Kernel == model's pure-jnp blockwise path == naive reference."""
+    from repro.models.common import blockwise_attention
+    q = jnp.asarray(RNG.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 128, 4, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 128, 4, 32)), jnp.float32)
+    kern = mha(q, k, v, causal=True, block_q=32, block_kv=64, interpret=True)
+    blockwise = blockwise_attention(q, k, v, causal=True, block_q=32,
+                                    block_kv=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(blockwise),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------- linear scan
+@given(b=st.integers(1, 2), h=st.integers(1, 3),
+       t=st.sampled_from([16, 32, 48, 64]),
+       n=st.sampled_from([8, 16]), hd=st.sampled_from([8, 16]),
+       chunk=st.sampled_from([8, 16]), seed=st.integers(0, 99))
+@settings(max_examples=12, deadline=None)
+def test_ssd_kernel_sweep(b, h, t, n, hd, chunk, seed):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, h, t, hd)), jnp.float32)
+    la = jnp.asarray(-rng.uniform(0.01, 3.0, size=(b, h, t)), jnp.float32)
+    y, s = ssd(c, bb, x, la, chunk=chunk, interpret=True)
+    yr, sr = linear_attention_ref(c, bb, x, la, inclusive=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(b=st.integers(1, 2), h=st.integers(1, 2),
+       t=st.sampled_from([16, 32, 48]), n=st.sampled_from([8, 16]),
+       chunk=st.sampled_from([8, 16]), seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_wkv_kernel_sweep(b, h, t, n, chunk, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    lw = jnp.asarray(-rng.uniform(0.01, 5.0, size=(b, h, t, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, n)), jnp.float32)
+    y, s = wkv(r, k, v, lw, u, chunk=chunk, interpret=True)
+    yr, sr = linear_attention_ref(r, k, v, lw, u=u, inclusive=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv_strong_decay_no_overflow():
+    """The factored GLA form overflows for strong data-dependent decay; the
+    safe formulation must not (this is the kernel's raison d'être)."""
+    b, h, t, n = 1, 1, 64, 16
+    rng = np.random.default_rng(7)
+    r = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, n)), jnp.float32)
+    lw = jnp.full((b, h, t, n), -7.0, jnp.float32)   # w = e^-7 per step
+    u = jnp.zeros((h, n), jnp.float32)
+    y, s = wkv(r, k, v, lw, u, chunk=32, interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(s)).all()
+    yr, _ = linear_attention_ref(r, k, v, lw, u=u, inclusive=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)

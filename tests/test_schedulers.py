@@ -1,0 +1,207 @@
+"""Scheduler correctness: chunk sequences vs published closed forms, OpenMP
+semantics, and the qualitative load-balancing claims the paper builds on."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (LoopSpec, SchedulerContext, make_scheduler,
+                        plan_schedule, simulate_loop, LoopHistory)
+from repro.core.interface import ceil_div, chunks_cover
+from repro.core.schedulers import (FAC2, AWF, GuidedSS, SelfScheduling,
+                                   StaticChunk, TrapezoidSS, as_three_op)
+
+
+def dequeue_all(sched, n, p, loop_id="t"):
+    """Single-worker drain: the raw chunk-size sequence."""
+    loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id=loop_id)
+    state = sched.start(SchedulerContext(loop=loop))
+    sizes = []
+    while (c := sched.next(state, 0, None)) is not None:
+        sizes.append(c.size)
+    sched.finish(state)
+    return sizes
+
+
+# ------------------------------------------------------------- closed forms
+def test_static_block_matches_openmp():
+    # schedule(static): P blocks of ceil(N/P), round-robin
+    plan = plan_schedule(make_scheduler("static_block"), 1000, 8)
+    per = plan.per_worker()
+    assert all(len(v) == 1 for v in per.values())
+    assert [per[w][0].size for w in range(8)] == [125] * 8
+    # non-divisible: last worker takes the remainder
+    plan = plan_schedule(make_scheduler("static_block"), 1001, 8)
+    sizes = [sum(c.size for c in per) for per in plan.per_worker().values()]
+    assert sizes == [126] * 7 + [119]
+
+
+def test_static_cyclic_assignment():
+    # schedule(static,1): iteration i -> worker i mod P
+    plan = plan_schedule(make_scheduler("static_cyclic"), 64, 4)
+    for c in plan.chunks:
+        assert c.size == 1
+        assert c.worker == c.start % 4
+
+
+def test_dynamic_chunk_semantics():
+    # schedule(dynamic,k): every chunk is k except possibly the last
+    sizes = dequeue_all(SelfScheduling(chunk=7), 100, 4)
+    assert sizes[:-1] == [7] * (len(sizes) - 1)
+    assert sizes[-1] == 100 - 7 * (len(sizes) - 1)
+
+
+def test_guided_sequence_closed_form():
+    # GSS: chunk_j = ceil(R_j / P)
+    n, p = 1000, 4
+    sizes = dequeue_all(GuidedSS(), n, p)
+    r = n
+    for s in sizes:
+        assert s == max(1, ceil_div(r, p))
+        r -= s
+    assert r == 0
+
+
+def test_tss_linear_decrement():
+    # TSS(f, l): chunk_k = f - k*delta, delta = (f-l)/(steps-1)
+    n, p = 1000, 4
+    f, l = ceil_div(n, 2 * p), 1      # defaults: f=125, l=1
+    steps = ceil_div(2 * n, f + l)
+    delta = (f - l) / (steps - 1)
+    sizes = dequeue_all(TrapezoidSS(), n, p)
+    for k, s in enumerate(sizes[:-1]):   # last chunk is the remainder
+        assert s == max(int(math.floor(f - k * delta + 0.5)), l)
+
+
+def test_fac2_halving_batches():
+    # FAC2: batch j of P chunks sized ceil(R_j / 2P)
+    n, p = 1024, 4
+    plan = plan_schedule(make_scheduler("fac2"), n, p)
+    r = n
+    for wave in plan.waves:
+        expect = max(1, ceil_div(r, 2 * p))
+        for c in wave:
+            assert c.size in (expect, r - (len(wave) - 1) * expect,
+                              min(expect, r))
+        r -= sum(c.size for c in wave)
+    assert r == 0
+    # first batch schedules exactly half
+    first = sum(c.size for c in plan.waves[0])
+    assert first == n // 2
+
+
+def test_fsc_kruskal_weiss_formula():
+    n, p, h, sigma = 10_000, 8, 1e-4, 2e-3
+    sched = make_scheduler("fsc", overhead=h, sigma=sigma)
+    sizes = dequeue_all(sched, n, p)
+    expect = int(math.ceil((math.sqrt(2) * n * h
+                            / (sigma * p * math.sqrt(math.log(p)))) ** (2 / 3)))
+    assert sizes[0] == expect
+    assert all(s == expect for s in sizes[:-1])
+
+
+def test_wf2_respects_weights():
+    w = {0: 2.0, 1: 0.5, 2: 1.0, 3: 0.5}
+    sched = make_scheduler("wf2", weights=w)
+    plan = plan_schedule(sched, 4000, 4)
+    first_wave = {c.worker: c.size for c in plan.waves[0]}
+    base = 4000 // 8  # fac2 batch chunk
+    assert first_wave[0] == 2 * base
+    assert first_wave[1] == base // 2
+
+
+# --------------------------------------------------------------- invariants
+@pytest.mark.parametrize("name", ["static", "static_cyclic", "dynamic",
+                                  "guided", "tss", "tfss", "taper", "fac",
+                                  "fac2", "wf2",
+                                  "awf", "awf_b", "awf_c", "awf_d", "awf_e",
+                                  "af", "rand", "fsc", "static_steal"])
+@pytest.mark.parametrize("n,p", [(1, 1), (7, 3), (100, 8), (1000, 16),
+                                 (37, 64)])
+def test_exact_coverage(name, n, p):
+    plan = plan_schedule(make_scheduler(name), n, p, loop_id=f"{name}")
+    assert chunks_cover(LoopSpec(lb=0, ub=n, num_workers=p), plan.chunks)
+
+
+def test_strided_loop_indices():
+    # lb=10, ub=50, incr=4 -> iterations 10,14,...,46
+    loop = LoopSpec(lb=10, ub=50, incr=4, num_workers=2)
+    assert loop.trip_count == 10
+    plan_chunks = plan_schedule(make_scheduler("dynamic"), 10, 2).chunks
+    src = [i for c in plan_chunks for i in c.indices(loop)]
+    assert sorted(src) == list(range(10, 50, 4))
+
+
+# ----------------------------------------------------- adaptive strategies
+def test_awf_learns_heterogeneous_speeds():
+    """AWF (timestep variant) must learn 2:1 worker speeds from history and
+    then assign ~2x iterations to the fast worker."""
+    hist = LoopHistory()
+    n, p = 800, 2
+    speeds = [2.0, 1.0]
+    costs = np.ones(n)
+    sched = AWF(variant="timestep")
+    # invocation 1: uniform weights (no history)
+    r1 = simulate_loop(sched, LoopSpec(0, n, num_workers=p, loop_id="aw"),
+                       costs, speeds=speeds, history=hist)
+    # invocation 2: weights from measured rates
+    r2 = simulate_loop(sched, LoopSpec(0, n, num_workers=p, loop_id="aw"),
+                       costs, speeds=speeds, history=hist)
+    w0_iters_2 = sum(c.size for c in r2.chunks if c.worker == 0)
+    assert w0_iters_2 > 0.58 * n          # fast worker takes ~2/3
+    assert r2.makespan <= r1.makespan + 1e-9
+
+
+def test_af_adapts_chunk_sizes_to_variance():
+    # high-variance worker should receive smaller chunks once measured
+    rng = np.random.default_rng(3)
+    n, p = 2000, 4
+    costs = rng.exponential(1.0, n)
+    res = simulate_loop(make_scheduler("af"), LoopSpec(0, n, num_workers=p),
+                        costs)
+    assert chunks_cover(LoopSpec(0, n, num_workers=p), res.chunks)
+    assert res.imbalance < 0.2
+
+
+# --------------------------------------------- qualitative literature claims
+def test_dynamic_beats_static_under_imbalance():
+    """The claim motivating the whole paper: under irregular iteration costs
+    the three standard schedules are dominated by factoring-family UDS."""
+    rng = np.random.default_rng(0)
+    n, p = 2000, 8
+    costs = rng.lognormal(0.0, 1.5, n)    # heavy-tailed imbalance
+    mk = {}
+    for name in ("static", "dynamic", "guided", "fac2", "awf_b"):
+        res = simulate_loop(make_scheduler(name),
+                            LoopSpec(0, n, num_workers=p, loop_id=name),
+                            costs, overhead=1e-4)
+        mk[name] = res.makespan
+    assert mk["fac2"] < mk["static"]
+    assert mk["dynamic"] < mk["static"]
+    assert mk["awf_b"] <= mk["fac2"] * 1.05
+
+
+def test_overhead_tradeoff_dynamic1_vs_chunked():
+    """With large per-dequeue overhead, dynamic,1 loses to chunked dynamic —
+    the scheduling-overhead tradeoff (GSS/FSC motivation)."""
+    n, p = 4000, 8
+    costs = np.ones(n) * 1e-4
+    fine = simulate_loop(SelfScheduling(chunk=1),
+                         LoopSpec(0, n, num_workers=p), costs, overhead=1e-3)
+    coarse = simulate_loop(SelfScheduling(chunk=64),
+                           LoopSpec(0, n, num_workers=p), costs,
+                           overhead=1e-3)
+    assert coarse.makespan < fine.makespan
+
+
+def test_heterogeneous_machines_wf2_beats_fac2():
+    n, p = 4000, 4
+    costs = np.ones(n)
+    speeds = [4.0, 1.0, 1.0, 1.0]
+    fac2 = simulate_loop(FAC2(), LoopSpec(0, n, num_workers=p), costs,
+                         speeds=speeds)
+    wf2 = simulate_loop(make_scheduler("wf2", weights={0: 4, 1: 1, 2: 1, 3: 1}),
+                        LoopSpec(0, n, num_workers=p), costs, speeds=speeds,
+                        overhead=0.0)
+    assert wf2.makespan <= fac2.makespan
