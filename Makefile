@@ -1,0 +1,23 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench bench-plan deps deps-dev
+
+test:           ## tier-1 verify (full suite, fail-fast)
+	$(PYTHON) -m pytest -x -q
+
+test-fast:      ## core scheduling + engine tests only
+	$(PYTHON) -m pytest -x -q tests/test_interfaces.py \
+	    tests/test_schedulers.py tests/test_engine.py
+
+bench:          ## full benchmark harness (CSV to stdout)
+	$(PYTHON) benchmarks/run.py
+
+bench-plan:     ## plan-engine speedup + cache-hit acceptance check
+	$(PYTHON) benchmarks/plan_engine.py
+
+deps:
+	pip install -r requirements.txt
+
+deps-dev:
+	pip install -r requirements-dev.txt

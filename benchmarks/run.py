@@ -14,6 +14,8 @@ Framework tables:
   * packing             — UDS document packing vs first-fit
   * moe_capacity        — WF2 capacity planning vs uniform (drop rates)
   * straggler           — AWF mitigation under a slow host
+  * plan_engine         — vectorized-vs-generic planning speedup + plan
+                          cache hit rate (see plan_engine.py)
   * roofline            — per-cell dry-run terms (reads dryrun JSONs)
 """
 
@@ -117,19 +119,20 @@ def makespan() -> list:
 
 
 def overhead() -> list:
-    """Per-dequeue cost of each scheduler implementation (host-side)."""
-    from repro.core import LoopSpec, SchedulerContext, make_scheduler
+    """Per-dequeue cost of each scheduler implementation (host-side),
+    measured through the engine's ScheduleStream."""
+    from repro.core import LoopSpec, SchedulerContext, get_engine, make_scheduler
     rows = []
     for name in ("static", "dynamic", "guided", "fac2", "awf_c", "af"):
         loop = LoopSpec(lb=0, ub=10_000, num_workers=8, loop_id=name)
 
         def drain():
-            sched = make_scheduler(name)
-            s = sched.start(SchedulerContext(loop=loop))
+            stream = get_engine().open_stream(
+                make_scheduler(name), SchedulerContext(loop=loop))
             w = 0
-            while sched.next(s, w % 8, 0.001) is not None:
+            while stream.next(w % 8, 0.001) is not None:
                 w += 1
-            sched.finish(s)
+            stream.close()
             return w
 
         n_deq = drain()
@@ -223,11 +226,19 @@ def kernels() -> list:
     return [("kernels/sched_matmul_interpret", us, "shape=256x128x128")]
 
 
+def plan_engine() -> list:
+    import sys
+    sys.path.insert(0, str(Path(__file__).parent))
+    import plan_engine as pe
+    return pe.planning_speedup() + pe.cache_hit_rate()
+
+
 def main() -> None:
     RESULTS.mkdir(exist_ok=True)
     all_rows = []
     for fn in (chunk_tables, interface_equiv, makespan, overhead, packing,
-               moe_capacity_bench, straggler, kernels, roofline):
+               moe_capacity_bench, straggler, plan_engine, kernels,
+               roofline):
         try:
             all_rows.extend(fn())
         except Exception as e:  # pragma: no cover

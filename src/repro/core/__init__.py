@@ -9,8 +9,11 @@ JAX/TPU training & inference framework:
 * ``declare``      — declare-style specification (paper §4.2)
 * ``lambda_style`` — lambda-style specification (paper §4.1)
 * ``history``      — cross-invocation measurement store (paper §3)
-* ``executor``     — host-side OpenMP-semantics team executor
-* ``wave``         — SPMD batched dequeue → static schedule plans
+* ``plan``         — the materialized SchedulePlan IR (flat chunk tables)
+* ``engine``       — PlanEngine: vectorized compilation + plan cache +
+                     the single driver of the three-op state machine
+* ``executor``     — host-side OpenMP-semantics team executor / plan replay
+* ``wave``         — SPMD wave views of engine plans
 * ``schedulers``   — STATIC/SS/GSS/TSS/FAC/FAC2/WF2/AWF*/AF/RAND/FSC/steal
 """
 
@@ -24,15 +27,24 @@ from repro.core.interface import (
     three_op_from_six,
 )
 from repro.core.history import ChunkRecord, InvocationRecord, LoopHistory
-from repro.core.executor import LoopResult, run_loop, simulate_loop
-from repro.core.wave import SchedulePlan, plan_schedule, plan_waves
+from repro.core.plan import PlanProvenance, SchedulePlan
+from repro.core.engine import (
+    PlanEngine,
+    ScheduleStream,
+    get_engine,
+    set_engine,
+)
+from repro.core.executor import LoopResult, execute_plan, run_loop, simulate_loop
+from repro.core.wave import plan_schedule, plan_waves
 from repro.core.schedulers import SCHEDULER_FACTORIES, make_scheduler
 
 __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
     "SixOpSchedule", "three_op_from_six", "chunks_cover",
     "ChunkRecord", "InvocationRecord", "LoopHistory",
-    "LoopResult", "run_loop", "simulate_loop",
-    "SchedulePlan", "plan_schedule", "plan_waves",
+    "PlanProvenance", "SchedulePlan",
+    "PlanEngine", "ScheduleStream", "get_engine", "set_engine",
+    "LoopResult", "execute_plan", "run_loop", "simulate_loop",
+    "plan_schedule", "plan_waves",
     "SCHEDULER_FACTORIES", "make_scheduler",
 ]

@@ -162,6 +162,10 @@ class _DeclaredAdapter:
         self._args = list(user_args)
         self.name = decl.name
 
+    def plan_key(self) -> None:
+        # user functions + mutable loop records: never plan-cacheable
+        return None
+
     # -- marker resolution -------------------------------------------------
     def _resolve(self, bound: _BoundCall, loop: LoopSpec,
                  refs: Dict[str, Ref]) -> List[Any]:

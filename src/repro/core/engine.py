@@ -1,0 +1,678 @@
+"""PlanEngine — the single driver of the reduced three-op interface.
+
+Every substrate in this framework (host executor, SPMD wave planner, data
+packing, microbatching, MoE capacity, serving admission, Pallas chunk
+tables) used to re-drive the UDS state machine with its own Python-level
+``next()`` loop.  This module centralizes that: the engine is now the ONLY
+place ``sched.next`` is called, in two forms:
+
+* ``PlanEngine.plan(sched, loop)`` — materialize the whole schedule as a
+  :class:`~repro.core.plan.SchedulePlan`.  Two backends:
+
+  - **vectorized closed-form compilation** for the non-adaptive scheduler
+    families (static block/cyclic/chunk, dynamic/SS, GSS, TSS, TFSS, FSC,
+    taper, FAC, FAC2, WF2, RAND): the full chunk table is emitted with
+    NumPy arithmetic (batch- or table-level operations) instead of one
+    Python ``next()`` round-trip per chunk.  An invariant — enforced by
+    ``validate=True`` and by the property tests — guarantees the compiled
+    table is chunk-for-chunk identical to the generic driver's.
+
+  - the **generic three-op driver** (the paper's state machine, batched
+    into SPMD waves) for adaptive strategies (AWF variants, AF) and
+    arbitrary user-defined schedules (lambda-style / declare-style).
+
+  Plans are **cached** keyed on (scheduler identity, LoopSpec, history
+  epoch, capability weights): repeated invocations of the same loop — the
+  common case in training steps and serving — skip Python dequeue
+  entirely and return the frozen plan object.
+
+* ``PlanEngine.open_stream(sched, ctx)`` — a :class:`ScheduleStream` for
+  consumers that need chunk-at-a-time dequeue with measurement feedback
+  (the executor's discrete-event simulation, packing/microbatch load
+  feedback, serving admission).  The stream owns start/next/finish; no
+  consumer touches the scheduler state machine directly.
+
+Cache-correctness notes:
+
+* Adaptive schedulers (``sched.adaptive``) consult the cross-invocation
+  history at ``start`` time, so their cache key includes the **measured
+  history epoch** (``LoopHistory.measured_invocations`` for the loop id):
+  recording an invocation of real measurements invalidates the cached
+  plan, while planning's own ``elapsed=None`` records do not — repeated
+  planning without new measurements hits the cache.
+* Non-adaptive schedulers cannot read history, so their keys omit the
+  epoch and hit across invocations.  Every ``plan()`` call with a history
+  opens an ``InvocationRecord`` regardless of how the plan was produced
+  (generic, vectorized, or cache hit), so the measure stage's records
+  keep per-step boundaries.
+* Schedules carrying unhashable state (closures, user pointers) and calls
+  with a ``cost_model`` are never cached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+from collections import OrderedDict
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.core.history import LoopHistory
+from repro.core.interface import (Chunk, LoopSpec, SchedulerContext,
+                                  UserDefinedSchedule, ceil_div)
+from repro.core.plan import PlanProvenance, SchedulePlan
+
+__all__ = [
+    "PlanEngine",
+    "ScheduleStream",
+    "CacheStats",
+    "get_engine",
+    "set_engine",
+    "register_compiler",
+    "scheduler_plan_key",
+    "plan_worker_order",
+]
+
+
+# =========================================================================
+# Streaming: the one home of the three-op control flow
+# =========================================================================
+class ScheduleStream:
+    """Owns one start/next*/finish lifecycle of a UDS.
+
+    This class is (with the engine's generic driver, which uses it) the only
+    code that invokes the reduced interface's ``next`` operation — consumers
+    dequeue through it and feed back measured ``elapsed`` times, exactly the
+    paper's merged end-body/dequeue/begin-body operation.
+    """
+
+    def __init__(self, sched: UserDefinedSchedule, ctx: SchedulerContext):
+        self._sched = sched
+        self.ctx = ctx
+        self._state = sched.start(ctx)
+        if ctx.history is not None:
+            ctx.history.open_invocation(ctx.loop.loop_id)
+        self.dequeues = 0
+        self._closed = False
+
+    def next(self, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        chunk = self._sched.next(self._state, worker, elapsed)
+        self.dequeues += 1
+        return chunk
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._sched.finish(self._state)
+
+    def __enter__(self) -> "ScheduleStream":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+# =========================================================================
+# Scheduler identity (cache keys)
+# =========================================================================
+class _Unfreezable(Exception):
+    pass
+
+
+def _freeze(v: Any) -> Any:
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return v
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        return v.item()
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, np.ndarray):
+        return ("ndarray", v.shape, str(v.dtype), v.tobytes())
+    raise _Unfreezable(type(v).__name__)
+
+
+def scheduler_plan_key(sched: Any) -> Optional[tuple]:
+    """Hashable identity of a scheduler *configuration* (not instance).
+
+    Two instances with the same class and the same public parameters plan
+    identically (schedulers are deterministic state machines over their
+    parameters + context), so they share cache entries.  A scheduler may
+    override this by defining ``plan_key() -> tuple``.  Returns None for
+    schedulers carrying unhashable state (e.g. lambda-style closures) —
+    such schedules are planned fresh every time.
+    """
+    fn = getattr(sched, "plan_key", None)
+    if callable(fn):
+        return fn()
+    try:
+        params = tuple(sorted(
+            (k, _freeze(v)) for k, v in vars(sched).items()
+            if not k.startswith("_")))
+    except _Unfreezable:
+        return None
+    return (type(sched).__module__, type(sched).__qualname__, params)
+
+
+# =========================================================================
+# Vectorized closed-form compilers
+# =========================================================================
+# A compiler maps (sched, ctx) -> chunk-size array in dequeue order (all
+# registered families are central-queue / sequential-start schedules, so
+# starts = cumsum(sizes) and chunk i belongs to worker i mod P — the exact
+# wave-order semantics of the generic driver).  Registered by EXACT type:
+# subclasses (e.g. AWF extending WF2 with adaptivity) must opt in
+# explicitly.
+_COMPILERS: Dict[type, Callable[[Any, SchedulerContext],
+                                Optional[np.ndarray]]] = {}
+
+
+def register_compiler(*types: type):
+    """Register a vectorized closed-form compiler for scheduler types."""
+    def deco(fn):
+        for t in types:
+            _COMPILERS[t] = fn
+        return fn
+    return deco
+
+
+def has_compiler(sched: Any) -> bool:
+    return type(sched) in _COMPILERS
+
+
+def _fixed_sizes(n: int, c: int) -> np.ndarray:
+    """Chunk-size table for a fixed chunk c: c, c, ..., remainder."""
+    if n <= 0:
+        return np.zeros(0, np.int64)
+    c = max(1, int(c))
+    m = ceil_div(n, c)
+    sizes = np.full(m, c, np.int64)
+    sizes[-1] = n - (m - 1) * c
+    return sizes
+
+
+def _clip_to_trip(des: np.ndarray, n: int) -> np.ndarray:
+    """Truncate a desired-size sequence at trip count n (the central
+    counter's per-dequeue ``min(size, remaining)`` clamp, vectorized)."""
+    cum = np.cumsum(des)
+    cut = int(np.searchsorted(cum, n, side="left"))
+    sizes = des[:cut + 1].copy()
+    sizes[cut] = n - (int(cum[cut - 1]) if cut else 0)
+    return sizes
+
+
+def _register_builtin_compilers() -> None:
+    from repro.core.schedulers.classic import (FixedSizeChunking, GuidedSS,
+                                               RandSS, SelfScheduling,
+                                               StaticBlock, StaticChunk,
+                                               StaticCyclic, Taper,
+                                               TrapezoidFactoring,
+                                               TrapezoidSS)
+    from repro.core.schedulers.factoring import (FAC, FAC2,
+                                                 WeightedFactoring)
+
+    @register_compiler(StaticChunk, StaticBlock, StaticCyclic)
+    def _static(sched, ctx):
+        # schedule(static, c) under wave order IS the fixed-chunk table with
+        # round-robin workers: chunk i = [i*c, (i+1)*c) on worker i mod P.
+        loop = ctx.loop
+        n, p = loop.trip_count, loop.num_workers
+        c = sched.chunk or loop.chunk or ceil_div(max(n, 1), p)
+        return _fixed_sizes(n, c)
+
+    @register_compiler(SelfScheduling)
+    def _dynamic(sched, ctx):
+        c = sched.chunk or ctx.loop.chunk or 1
+        return _fixed_sizes(ctx.loop.trip_count, c)
+
+    @register_compiler(FixedSizeChunking)
+    def _fsc(sched, ctx):
+        n = ctx.loop.trip_count
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        state = sched.init(ctx)          # reuse the Kruskal-Weiss formula
+        return _fixed_sizes(n, state.scratch["chunk"])
+
+    @register_compiler(GuidedSS)
+    def _guided(sched, ctx):
+        # GSS: size_j = max(m, ceil(R_j / P)).  The decaying head is an
+        # integer recurrence (no closed form under ceil), emitted by a tight
+        # scalar loop; the fixed tail (size == min_chunk) is emitted as one
+        # NumPy fill.
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        mc = sched.min_chunk
+        head: List[int] = []
+        push = head.append
+        r = n
+        while r > 0:
+            s = -(-r // p)                   # ceil(r / p), inlined
+            if s <= mc:
+                break
+            push(s)
+            r -= s
+        sizes = np.asarray(head, np.int64)
+        if r > 0:
+            k, rem = divmod(r, mc)
+            tail = np.full(k + (1 if rem else 0), mc, np.int64)
+            if rem:
+                tail[-1] = rem
+            sizes = np.concatenate([sizes, tail])
+        return sizes
+
+    @register_compiler(TrapezoidSS)
+    def _tss(sched, ctx):
+        # TSS: size_k = max(round(first - k*delta), last) — a pure function
+        # of the dequeue index, emitted as one vectorized table.
+        n = ctx.loop.trip_count
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        state = sched.init(ctx)          # reuse first/last/delta derivation
+        first = state.scratch["first"]
+        last = state.scratch["last"]
+        delta = state.scratch["delta"]
+        k = max(ceil_div(2 * n, first + last), 1) + 4
+        while True:
+            ks = np.arange(k, dtype=np.float64)
+            des = np.maximum(
+                np.floor(first - ks * delta + 0.5).astype(np.int64), last)
+            if int(des.sum()) >= n:
+                break
+            k *= 2
+        return _clip_to_trip(des, n)
+
+    @register_compiler(TrapezoidFactoring)
+    def _tfss(sched, ctx):
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        state = sched.init(ctx)
+        f = state.scratch["first"]
+        last = state.scratch["last"]
+        delta = state.scratch["delta"]
+        parts: List[np.ndarray] = []
+        r = n
+        while r > 0:
+            b = max(int(math.floor(f + 0.5)), last)
+            f = max(f - delta, float(last))
+            full = min(p, r // b)
+            batch = np.full(full, b, np.int64)
+            rem = r - full * b
+            if full < p and rem > 0:
+                batch = np.append(batch, rem)
+            parts.append(batch)
+            r -= int(batch.sum())
+        return np.concatenate(parts)
+
+    @register_compiler(FAC, FAC2)
+    def _fac(sched, ctx):
+        # Factoring: batches of P equal chunks; the batch size comes from
+        # the scheduler's own _open_batch (FAC2's R/2P or FAC's
+        # probabilistic x-factor), driven once per batch instead of once
+        # per chunk.
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        state = sched.init(ctx)
+        parts: List[np.ndarray] = []
+        r = n
+        while r > 0:
+            state.remaining = r
+            sched._open_batch(state)
+            b = int(state.scratch["batch_chunk"])
+            full = min(p, r // b)
+            batch = np.full(full, b, np.int64)
+            rem = r - full * b
+            if full < p and rem > 0:
+                batch = np.append(batch, rem)
+            parts.append(batch)
+            r -= int(batch.sum())
+        return np.concatenate(parts)
+
+    @register_compiler(WeightedFactoring)
+    def _wf2(sched, ctx):
+        # WF2: per-batch base chunk from FAC2, per-worker size
+        # round(w_i * base); batches align with waves so chunk i of a batch
+        # belongs to worker i.
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        state = sched.init(ctx)
+        wvec = np.asarray([sched._weight(state, i) for i in range(p)],
+                          np.float64)
+        parts: List[np.ndarray] = []
+        r = n
+        while r > 0:
+            state.remaining = r
+            sched._open_batch(state)
+            b = int(state.scratch["batch_chunk"])
+            des = np.maximum(1, np.round(wvec * b)).astype(np.int64)
+            cum = np.cumsum(des)
+            if int(cum[-1]) <= r:
+                batch = des
+            else:
+                cut = int(np.searchsorted(cum, r, side="left"))
+                prev = int(cum[cut - 1]) if cut else 0
+                batch = np.append(des[:cut], r - prev)
+            parts.append(batch)
+            r -= int(batch.sum())
+        return np.concatenate(parts)
+
+    @register_compiler(RandSS)
+    def _rand(sched, ctx):
+        # RAND draws one uniform integer per dequeue; NumPy fills arrays
+        # element-wise from the same PCG stream, so batch draws reproduce
+        # the sequential sequence exactly.
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        rng = np.random.default_rng(sched.seed)
+        lo = sched.min_chunk
+        hi = max(sched.max_chunk or ceil_div(max(n, 1), p), lo)
+        draws: List[np.ndarray] = []
+        total = 0
+        while total < n:
+            k = max(64, ceil_div(n - total, max((lo + hi) // 2, 1)) + 8)
+            d = rng.integers(lo, hi + 1, size=k)
+            draws.append(d.astype(np.int64))
+            total += int(d.sum())
+        return _clip_to_trip(np.concatenate(draws), n)
+
+    @register_compiler(Taper)
+    def _taper(sched, ctx):
+        n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        mc, v = sched.min_chunk, sched.v
+        sizes: List[int] = []
+        r = n
+        while r > 0:
+            if v <= 0:
+                s = max(mc, ceil_div(r, p))
+            else:
+                t = r / p
+                x = (t + v * v / 2.0
+                     - v * math.sqrt(2.0 * t + v * v / 4.0))
+                s = max(mc, int(math.ceil(x)))
+            s = max(1, min(s, r))
+            sizes.append(s)
+            r -= s
+        return np.asarray(sizes, np.int64)
+
+
+# =========================================================================
+# The engine
+# =========================================================================
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    uncacheable: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanEngine:
+    """Compile, cache, and stream user-defined schedules.
+
+    ``validate=True`` (or env ``REPRO_PLAN_VALIDATE=1``) cross-checks every
+    vectorized plan against the generic driver — the executable form of the
+    compilation invariant.
+    """
+
+    def __init__(self, cache_size: int = 256,
+                 validate: Optional[bool] = None):
+        self.cache_size = cache_size
+        if validate is None:
+            validate = os.environ.get("REPRO_PLAN_VALIDATE", "") not in ("", "0")
+        self.validate = validate
+        self._cache: "OrderedDict[tuple, SchedulePlan]" = OrderedDict()
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- streams
+    def open_stream(self, sched: UserDefinedSchedule,
+                    ctx: Union[SchedulerContext, LoopSpec],
+                    **ctx_kw: Any) -> ScheduleStream:
+        """Chunk-at-a-time dequeue with measurement feedback (executor,
+        packing, microbatching, serving admission)."""
+        if isinstance(ctx, LoopSpec):
+            ctx = SchedulerContext(loop=ctx, **ctx_kw)
+        return ScheduleStream(sched, ctx)
+
+    # ------------------------------------------------------------ planning
+    def plan(self, sched: UserDefinedSchedule,
+             loop: Union[LoopSpec, SchedulerContext],
+             *,
+             history: Optional[LoopHistory] = None,
+             user_data: Any = None,
+             weights: Optional[Sequence[float]] = None,
+             cost_model: Optional[Callable[[Chunk, int], float]] = None,
+             check_coverage: bool = True,
+             mode: str = "auto") -> SchedulePlan:
+        """Materialize the full schedule for one loop invocation.
+
+        mode: "auto" (cache, then vectorized, then generic), "vectorized"
+        (closed-form only; raises if the scheduler has no compiler), or
+        "generic" (state-machine driver; bypasses the cache — used by the
+        validation path and benchmarks).
+        """
+        if mode not in ("auto", "vectorized", "generic"):
+            raise ValueError(f"unknown plan mode {mode!r}")
+        if isinstance(loop, SchedulerContext):
+            ctx = loop
+        else:
+            ctx = SchedulerContext(loop=loop, history=history,
+                                   user_data=user_data, weights=weights)
+
+        cacheable = mode == "auto" and cost_model is None
+        key = self._cache_key(sched, ctx) if cacheable else None
+        if cacheable and key is None:
+            self.stats.uncacheable += 1
+        if key is not None:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.stats.hits += 1
+                if ctx.history is not None:
+                    # every plan() marks an invocation boundary, however it
+                    # was produced, so the measure stage's records land in
+                    # this step's InvocationRecord
+                    ctx.history.open_invocation(ctx.loop.loop_id)
+                return hit
+            self.stats.misses += 1
+
+        t0 = time.perf_counter()
+        plan: Optional[SchedulePlan] = None
+        if mode in ("auto", "vectorized") and cost_model is None:
+            compiler = _COMPILERS.get(type(sched))
+            if compiler is not None:
+                sizes = compiler(sched, ctx)
+                plan = self._plan_from_sizes(sched, ctx, sizes, key, t0)
+                if ctx.history is not None:
+                    # invocation boundary (the generic path opens its own
+                    # through ScheduleStream)
+                    ctx.history.open_invocation(ctx.loop.loop_id)
+                if self.validate:
+                    ref = self._plan_generic(
+                        sched, SchedulerContext(loop=ctx.loop,
+                                                weights=ctx.weights,
+                                                user_data=ctx.user_data),
+                        None, None, t0)
+                    if not plan.identical(ref):
+                        raise AssertionError(
+                            f"vectorized plan for "
+                            f"{getattr(sched, 'name', sched)!r} diverges "
+                            f"from the generic three-op driver")
+            elif mode == "vectorized":
+                raise ValueError(
+                    f"no vectorized compiler registered for "
+                    f"{type(sched).__name__}")
+        if plan is None:
+            plan = self._plan_generic(sched, ctx, cost_model, key, t0)
+
+        if check_coverage and not plan.coverage_ok():
+            raise AssertionError(
+                f"scheduler {getattr(sched, 'name', sched)!r} violated the "
+                f"todo-list invariant: chunks do not exactly tile "
+                f"[0, {ctx.loop.trip_count})")
+        if key is not None:
+            self._cache[key] = plan
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+                self.stats.evictions += 1
+        return plan
+
+    # -------------------------------------------------------------- cache
+    def _cache_key(self, sched: Any,
+                   ctx: SchedulerContext) -> Optional[tuple]:
+        skey = scheduler_plan_key(sched)
+        if skey is None:
+            return None
+        try:
+            wkey = (_freeze(tuple(ctx.weights))
+                    if ctx.weights is not None else None)
+            ukey = (_freeze(ctx.user_data)
+                    if ctx.user_data is not None else None)
+        except _Unfreezable:
+            return None
+        if getattr(sched, "adaptive", False):
+            # adaptive strategies read the history at start: key on the
+            # history's identity token AND its *measured* epoch — distinct
+            # histories with equal epoch counts must not share plans, and
+            # new measurements invalidate while planning's own
+            # elapsed=None records do not
+            if ctx.history is not None:
+                epoch = (getattr(ctx.history, "token", id(ctx.history)),
+                         ctx.history.measured_invocations(ctx.loop.loop_id))
+            else:
+                epoch = -1
+        else:
+            epoch = None
+        return (skey, ctx.loop, epoch, wkey, ukey)
+
+    def cache_info(self) -> CacheStats:
+        return self.stats
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    # ------------------------------------------------------------ backends
+    def _plan_from_sizes(self, sched: Any, ctx: SchedulerContext,
+                         sizes: np.ndarray, key: Optional[tuple],
+                         t0: float) -> SchedulePlan:
+        sizes = np.asarray(sizes, np.int64)
+        m = sizes.shape[0]
+        starts = np.cumsum(sizes) - sizes
+        idx = np.arange(m, dtype=np.int64)
+        p = max(ctx.loop.num_workers, 1)
+        prov = PlanProvenance(
+            scheduler=getattr(sched, "name", type(sched).__name__),
+            source="vectorized", cache_key=key,
+            plan_time_s=time.perf_counter() - t0)
+        return SchedulePlan(loop=ctx.loop, starts=starts, sizes=sizes,
+                            workers=idx % p, wave_ids=idx // p,
+                            provenance=prov)
+
+    def _plan_generic(self, sched: Any, ctx: SchedulerContext,
+                      cost_model: Optional[Callable[[Chunk, int], float]],
+                      key: Optional[tuple], t0: float) -> SchedulePlan:
+        """The paper's state machine, batched into SPMD waves: each wave
+        hands one chunk to every still-active worker; ``cost_model`` chunk
+        costs (if given) are fed back as the previous chunk's ``elapsed``
+        so adaptive strategies can plan against a model."""
+        loop = ctx.loop
+        p = loop.num_workers
+        starts: List[int] = []
+        sizes: List[int] = []
+        workers: List[int] = []
+        wave_ids: List[int] = []
+        with self.open_stream(sched, ctx) as stream:
+            active = set(range(p))
+            last: Dict[int, Optional[float]] = {w: None for w in range(p)}
+            wave = 0
+            guard = 0
+            while active:
+                got = 0
+                for w in sorted(active):
+                    chunk = stream.next(w, last[w])
+                    if chunk is None:
+                        active.discard(w)
+                        continue
+                    last[w] = cost_model(chunk, w) if cost_model else None
+                    starts.append(chunk.start)
+                    sizes.append(chunk.stop - chunk.start)
+                    workers.append(chunk.worker)
+                    wave_ids.append(wave)
+                    got += 1
+                if got:
+                    wave += 1
+                guard += 1
+                if guard > 10 * max(loop.trip_count, 1) + 16:
+                    raise RuntimeError(
+                        f"scheduler {getattr(sched, 'name', sched)!r} failed"
+                        f" to drain the todo list (livelock guard tripped)")
+        prov = PlanProvenance(
+            scheduler=getattr(sched, "name", type(sched).__name__),
+            source="generic", cache_key=key,
+            plan_time_s=time.perf_counter() - t0)
+        return SchedulePlan(loop=loop,
+                            starts=np.asarray(starts, np.int64),
+                            sizes=np.asarray(sizes, np.int64),
+                            workers=np.asarray(workers, np.int64),
+                            wave_ids=np.asarray(wave_ids, np.int64),
+                            provenance=prov)
+
+
+_register_builtin_compilers()
+
+
+def plan_worker_order(sched: Any, n: int, *, num_workers: int = 2,
+                      loop_id: str = "tiles",
+                      engine: Optional["PlanEngine"] = None,
+                      **sched_params: Any) -> np.ndarray:
+    """Worker-major tile-visit order for ``sched`` (name or instance) over
+    [0, n) — the shared front-end of the Pallas kernel table plumbing
+    (``sched_matmul.plan_tile_order`` / ``flash_attention
+    .plan_q_block_order``).  Each of the ``num_workers`` kernel lanes
+    (default 2 = TPU megacore) gets its worker's contiguous tile run, so
+    the lanes inherit the schedule's load balance.  Plans are cached by
+    the engine across launches."""
+    if isinstance(sched, str):
+        from repro.core.schedulers import make_scheduler
+        sched = make_scheduler(sched, **sched_params)
+    eng = engine if engine is not None else get_engine()
+    loop = LoopSpec(lb=0, ub=n, num_workers=num_workers, loop_id=loop_id)
+    order = eng.plan(sched, loop).tile_order(n, order="worker")
+    if not np.array_equal(np.sort(order), np.arange(n)):
+        raise AssertionError(
+            f"plan for {getattr(sched, 'name', sched)!r} does not tile "
+            f"[0, {n}) exactly")
+    return order
+
+
+_DEFAULT_ENGINE: Optional[PlanEngine] = None
+
+
+def get_engine() -> PlanEngine:
+    """The process-wide default engine (shared plan cache)."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = PlanEngine()
+    return _DEFAULT_ENGINE
+
+
+def set_engine(engine: PlanEngine) -> PlanEngine:
+    global _DEFAULT_ENGINE
+    _DEFAULT_ENGINE = engine
+    return engine

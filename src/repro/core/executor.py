@@ -1,21 +1,27 @@
-"""Host-side loop executor with OpenMP team semantics.
+"""Host-side loop executor — the *execute* stage of plan/execute/measure.
 
-Implements the paper's Fig. 1 control flow exactly::
+All scheduling decisions flow through ``core.engine.PlanEngine``; this
+module never drives the three-op state machine itself.  Two execution
+modes:
 
-    state = sched.start(ctx)                       # setup + enqueue
-    while (chunk := sched.next(state, tid, dt)):   # end-body+dequeue+begin-body
-        execute chunk
-    sched.finish(state)                            # finalize
+* **streaming** (``run_loop`` / ``simulate_loop``): a ``ScheduleStream``
+  from the engine dequeues chunk-at-a-time under a **virtual clock**
+  (deterministic discrete-event simulation — the idle-most worker dequeues
+  next, the receiver-initiated semantics of a real OpenMP team), feeding
+  measured or modelled chunk times back as the merged
+  end-body/dequeue/begin-body ``elapsed``.  This is the mode adaptive
+  strategies need: the schedule unfolds *with* the measurements.
+* **plan replay** (``execute_plan``): a materialized (possibly cached)
+  :class:`~repro.core.plan.SchedulePlan` is executed with vectorized
+  NumPy accounting — no Python dequeue at all.  This is the fast path for
+  non-adaptive schedules whose assignment is fixed ahead of time, and the
+  host-side mirror of what the SPMD substrates do with the same plan.
 
-Because this container has a single CPU core, the team is executed under a
-**virtual clock** (deterministic discrete-event simulation): the idle-most
-worker dequeues next, exactly the receiver-initiated semantics of a real
-OpenMP team, while chunk costs come either from real measured wall time
-(``body`` mode) or from a cost model (``costs`` mode — used by the makespan
-benchmarks to reproduce the qualitative literature results the paper cites).
-
-The executor is also what the *distributed* layers use to plan work
-assignments (see ``core/wave.py`` for the SPMD batched variant).
+Chunk costs come either from real measured wall time (``body`` mode) or
+from a cost model (``costs`` mode — used by the makespan benchmarks to
+reproduce the qualitative literature results the paper cites); the
+*measure* stage writes per-chunk timings into the ``LoopHistory``, which
+is what invalidates cached adaptive plans in the engine.
 """
 
 from __future__ import annotations
@@ -27,6 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.engine import PlanEngine, get_engine
 from repro.core.history import LoopHistory
 from repro.core.interface import (
     Chunk,
@@ -35,8 +42,9 @@ from repro.core.interface import (
     UserDefinedSchedule,
     chunks_cover,
 )
+from repro.core.plan import SchedulePlan
 
-__all__ = ["LoopResult", "run_loop", "simulate_loop"]
+__all__ = ["LoopResult", "run_loop", "simulate_loop", "execute_plan"]
 
 
 @dataclasses.dataclass
@@ -86,16 +94,16 @@ def _drive(sched: UserDefinedSchedule,
            chunk_cost: Callable[[Chunk, int], float],
            overhead: float,
            speeds: Optional[Sequence[float]],
-           check_coverage: bool) -> LoopResult:
+           check_coverage: bool,
+           engine: Optional[PlanEngine] = None) -> LoopResult:
     loop = ctx.loop
     p = loop.num_workers
     speeds = list(speeds) if speeds is not None else [1.0] * p
     if len(speeds) != p:
         raise ValueError("speeds must have one entry per worker")
 
-    state = sched.start(ctx)
-    if ctx.history is not None:
-        ctx.history.open_invocation(loop.loop_id)
+    eng = engine if engine is not None else get_engine()
+    stream = eng.open_stream(sched, ctx)
 
     # discrete-event simulation: (available_time, worker)
     pq: List = [(0.0, w) for w in range(p)]
@@ -109,7 +117,7 @@ def _drive(sched: UserDefinedSchedule,
 
     while pq:
         now, w = heapq.heappop(pq)
-        chunk = sched.next(state, w, last_elapsed[w])
+        chunk = stream.next(w, last_elapsed[w])
         dequeues += 1
         ovh_total += overhead
         if chunk is None:
@@ -123,7 +131,7 @@ def _drive(sched: UserDefinedSchedule,
         chunks.append(chunk)
         heapq.heappush(pq, (end, w))
 
-    sched.finish(state)
+    stream.close()
 
     if check_coverage and not chunks_cover(loop, chunks):
         raise AssertionError(
@@ -196,6 +204,48 @@ def simulate_loop(sched: UserDefinedSchedule,
 
     return _drive(sched, ctx, chunk_cost, overhead=overhead, speeds=speeds,
                   check_coverage=check_coverage)
+
+
+def execute_plan(plan: SchedulePlan,
+                 costs: Union[Sequence[float], Callable[[int], float]],
+                 *,
+                 speeds: Optional[Sequence[float]] = None,
+                 overhead: float = 0.0) -> LoopResult:
+    """Replay a materialized (possibly cached) plan under virtual time.
+
+    Unlike ``simulate_loop`` — where the assignment of chunks to workers
+    unfolds dynamically with the simulated clock — the plan's assignment is
+    **fixed**, so the whole accounting vectorizes: no per-chunk Python.
+    This is the host-side fast path for non-adaptive schedules and the
+    mirror of how the SPMD substrates execute the very same plan arrays.
+    """
+    loop = plan.loop
+    p = loop.num_workers
+    n = loop.trip_count
+    if callable(costs):
+        per_iter = np.asarray([costs(i) for i in range(n)], np.float64)
+    else:
+        per_iter = np.asarray(costs, dtype=np.float64)
+        if per_iter.shape[0] != n:
+            raise ValueError(
+                f"costs has {per_iter.shape[0]} entries, loop has {n}")
+    prefix = np.concatenate([[0.0], np.cumsum(per_iter)])
+    chunk_costs = prefix[plan.stops] - prefix[plan.starts]
+
+    sp = np.asarray(speeds if speeds is not None else np.ones(p), np.float64)
+    if sp.shape[0] != p:
+        raise ValueError("speeds must have one entry per worker")
+    busy = (np.bincount(plan.workers, weights=chunk_costs, minlength=p)
+            / np.maximum(sp, 1e-12))
+    counts = plan.worker_chunk_counts()
+    finish = busy + overhead * counts
+    # each worker also pays one terminal None-dequeue, as in the stream path
+    dequeues = plan.num_chunks + p
+    return LoopResult(loop=loop, chunks=plan.chunks,
+                      worker_time=busy.tolist(),
+                      worker_finish=finish.tolist(),
+                      dequeues=dequeues,
+                      overhead_time=overhead * dequeues)
 
 
 def _as_loop(loop: Union[LoopSpec, range, int],

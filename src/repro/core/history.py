@@ -43,6 +43,7 @@ class ChunkRecord:
 @dataclasses.dataclass
 class InvocationRecord:
     chunks: List[ChunkRecord] = dataclasses.field(default_factory=list)
+    measured: bool = False    # any chunk recorded with a real elapsed time
 
     def worker_time(self, worker: int) -> float:
         return sum(c.elapsed or 0.0 for c in self.chunks if c.worker == worker)
@@ -75,8 +76,16 @@ class LoopHistory:
     The executor writes via ``record``.
     """
 
+    _instances = 0
+
     def __init__(self) -> None:
         self._data: Dict[str, List[InvocationRecord]] = {}
+        self._measured: Dict[str, int] = {}
+        # per-instance identity token: two histories with equal epoch
+        # counts must never share plan-cache entries (and id() can be
+        # recycled by the allocator)
+        LoopHistory._instances += 1
+        self.token = LoopHistory._instances
 
     # ------------------------------------------------------------- writing
     def open_invocation(self, loop_id: str) -> InvocationRecord:
@@ -87,7 +96,11 @@ class LoopHistory:
     def record(self, loop_id: str, rec: ChunkRecord) -> None:
         if loop_id not in self._data or not self._data[loop_id]:
             self.open_invocation(loop_id)
-        self._data[loop_id][-1].chunks.append(rec)
+        inv = self._data[loop_id][-1]
+        inv.chunks.append(rec)
+        if rec.elapsed is not None and not inv.measured:
+            inv.measured = True
+            self._measured[loop_id] = self._measured.get(loop_id, 0) + 1
 
     # ------------------------------------------------------------- reading
     def invocations(self, loop_id: str) -> List[InvocationRecord]:
@@ -95,6 +108,14 @@ class LoopHistory:
 
     def num_invocations(self, loop_id: str) -> int:
         return len(self._data.get(loop_id, []))
+
+    def measured_invocations(self, loop_id: str) -> int:
+        """Invocations carrying at least one *measured* chunk — the epoch
+        the plan engine keys adaptive caches on (planning-time records have
+        elapsed=None and must not self-invalidate the cache).  O(1): the
+        counter is maintained by ``record`` — measurements must flow
+        through it, not by mutating ``InvocationRecord.chunks`` directly."""
+        return self._measured.get(loop_id, 0)
 
     def worker_rates(self, loop_id: str, last_k: Optional[int] = None
                      ) -> Dict[int, float]:
@@ -159,4 +180,7 @@ class LoopHistory:
             for chunks in invs:
                 inv = h.open_invocation(lid)
                 inv.chunks.extend(ChunkRecord(**c) for c in chunks)
+                if any(c.elapsed is not None for c in inv.chunks):
+                    inv.measured = True
+                    h._measured[lid] = h._measured.get(lid, 0) + 1
         return h

@@ -183,6 +183,10 @@ class UDS:
         self.chunk = chunk
         self.monotonic = monotonic
 
+    def plan_key(self) -> None:
+        # user-supplied closures + mutable uds_data: never plan-cacheable
+        return None
+
     # -- three-op interface --------------------------------------------------
     def start(self, ctx: SchedulerContext) -> Any:
         loop = ctx.loop

@@ -1,0 +1,240 @@
+"""SchedulePlan — the materialized schedule IR every substrate consumes.
+
+A ``SchedulePlan`` is the todo list *after* all dequeues: flat NumPy arrays
+(one entry per chunk, in dequeue order) plus provenance metadata recording
+how the plan was produced.  It is the single currency between the paper's
+three-op scheduling interface and every execution substrate in this
+framework:
+
+  * the host executor replays plans under virtual time (``execute_plan``),
+  * the SPMD wave planner is a *view* of the same arrays (``waves``,
+    ``padded_worker_table``),
+  * Pallas kernels scalar-prefetch the flattened tables (``table``,
+    ``sched_matmul``/``flash_attention`` tile orders),
+  * the launch layer splits batches by ``worker_iters``.
+
+Plans are produced exclusively by ``core.engine.PlanEngine`` — either by
+vectorized closed-form compilation (non-adaptive families) or by the
+generic three-op state-machine driver — and may be **cached** across loop
+invocations, so the arrays are frozen (read-only) after construction.
+
+Array layout (all 1-D, length = number of chunks, dequeue order):
+  ``starts[i]``   logical start of chunk i (0-based, inclusive)
+  ``sizes[i]``    iterations in chunk i
+  ``workers[i]``  worker (thread / shard / expert / kernel lane) id
+  ``wave_ids[i]`` batched-dequeue round the chunk belongs to (SPMD cadence)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interface import Chunk, LoopSpec
+
+__all__ = ["PlanProvenance", "SchedulePlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProvenance:
+    """How a plan came to be (for benchmarks, debugging, and cache audits)."""
+
+    scheduler: str = "uds"
+    source: str = "generic"          # "vectorized" | "generic"
+    cache_key: Optional[tuple] = None  # None = plan was not cacheable
+    plan_time_s: float = 0.0
+
+
+def _freeze_array(a: np.ndarray) -> np.ndarray:
+    a = np.ascontiguousarray(a, dtype=np.int64)
+    a.setflags(write=False)
+    return a
+
+
+@dataclasses.dataclass(eq=False)
+class SchedulePlan:
+    """A fully-materialized schedule: the todo list after all dequeues."""
+
+    loop: LoopSpec
+    starts: np.ndarray
+    sizes: np.ndarray
+    workers: np.ndarray
+    wave_ids: np.ndarray
+    provenance: PlanProvenance = dataclasses.field(default_factory=PlanProvenance)
+
+    def __post_init__(self) -> None:
+        self.starts = _freeze_array(self.starts)
+        self.sizes = _freeze_array(self.sizes)
+        self.workers = _freeze_array(self.workers)
+        self.wave_ids = _freeze_array(self.wave_ids)
+        m = self.starts.shape[0]
+        if not (self.sizes.shape[0] == self.workers.shape[0]
+                == self.wave_ids.shape[0] == m):
+            raise ValueError("plan arrays must have equal length")
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def from_waves(cls, loop: LoopSpec, waves: Sequence[Sequence[Chunk]],
+                   provenance: Optional[PlanProvenance] = None
+                   ) -> "SchedulePlan":
+        """Build from the batched-dequeue (SPMD wave) representation."""
+        starts, sizes, workers, wave_ids = [], [], [], []
+        for r, wave in enumerate(waves):
+            for c in wave:
+                starts.append(c.start)
+                sizes.append(c.stop - c.start)
+                workers.append(c.worker)
+                wave_ids.append(r)
+        return cls(loop=loop,
+                   starts=np.asarray(starts, np.int64),
+                   sizes=np.asarray(sizes, np.int64),
+                   workers=np.asarray(workers, np.int64),
+                   wave_ids=np.asarray(wave_ids, np.int64),
+                   provenance=provenance or PlanProvenance())
+
+    @classmethod
+    def from_chunks(cls, loop: LoopSpec, chunks: Sequence[Chunk],
+                    provenance: Optional[PlanProvenance] = None
+                    ) -> "SchedulePlan":
+        """Build from a flat dequeue-order chunk list (one chunk per wave
+        slot, wave = chunk index // num_workers)."""
+        m = len(chunks)
+        idx = np.arange(m, dtype=np.int64)
+        return cls(loop=loop,
+                   starts=np.asarray([c.start for c in chunks], np.int64),
+                   sizes=np.asarray([c.stop - c.start for c in chunks],
+                                    np.int64),
+                   workers=np.asarray([c.worker for c in chunks], np.int64),
+                   wave_ids=idx // max(loop.num_workers, 1),
+                   provenance=provenance or PlanProvenance())
+
+    # -------------------------------------------------------------- queries
+    @property
+    def num_chunks(self) -> int:
+        return int(self.starts.shape[0])
+
+    @property
+    def stops(self) -> np.ndarray:
+        return self.starts + self.sizes
+
+    @property
+    def chunks(self) -> List[Chunk]:
+        """Materialize ``Chunk`` tuples in dequeue order (compat view; hot
+        paths should consume the flat arrays instead)."""
+        return [Chunk(int(s), int(s + z), int(w))
+                for s, z, w in zip(self.starts, self.sizes, self.workers)]
+
+    @property
+    def waves(self) -> List[List[Chunk]]:
+        """Chunks grouped by batched-dequeue round (the SPMD cadence)."""
+        out: List[List[Chunk]] = [[] for _ in range(self.num_waves)]
+        for s, z, w, r in zip(self.starts, self.sizes, self.workers,
+                              self.wave_ids):
+            out[int(r)].append(Chunk(int(s), int(s + z), int(w)))
+        return out
+
+    @property
+    def num_waves(self) -> int:
+        return int(self.wave_ids.max()) + 1 if self.num_chunks else 0
+
+    def identical(self, other: "SchedulePlan") -> bool:
+        """Chunk-for-chunk equality (the vectorized-vs-generic invariant)."""
+        return (self.loop == other.loop
+                and np.array_equal(self.starts, other.starts)
+                and np.array_equal(self.sizes, other.sizes)
+                and np.array_equal(self.workers, other.workers))
+
+    def coverage_ok(self) -> bool:
+        """Vectorized todo-list invariant: chunks exactly tile [0, N)."""
+        n = self.loop.trip_count
+        if self.num_chunks == 0:
+            return n == 0
+        order = np.argsort(self.starts, kind="stable")
+        s = self.starts[order]
+        z = self.sizes[order]
+        return bool(s[0] == 0 and np.all(z >= 0)
+                    and np.all(s[1:] == s[:-1] + z[:-1])
+                    and s[-1] + z[-1] == n)
+
+    # --------------------------------------------------------------- tables
+    def table(self) -> Dict[str, np.ndarray]:
+        """(starts, sizes, workers) int32 arrays in dequeue order — the form
+        XLA / Pallas scalar prefetch consumes."""
+        return {
+            "starts": self.starts.astype(np.int32),
+            "sizes": self.sizes.astype(np.int32),
+            "workers": self.workers.astype(np.int32),
+        }
+
+    def per_worker(self) -> Dict[int, List[Chunk]]:
+        out: Dict[int, List[Chunk]] = {w: [] for w in
+                                       range(self.loop.num_workers)}
+        for s, z, w in zip(self.starts, self.sizes, self.workers):
+            out[int(w)].append(Chunk(int(s), int(s + z), int(w)))
+        return out
+
+    def worker_iters(self) -> np.ndarray:
+        """Iterations assigned per worker — the shard sizes the distributed
+        layer consumes (e.g. per-host batch split)."""
+        return np.bincount(self.workers, weights=self.sizes,
+                           minlength=self.loop.num_workers).astype(np.int64)
+
+    def worker_chunk_counts(self) -> np.ndarray:
+        return np.bincount(self.workers,
+                           minlength=self.loop.num_workers).astype(np.int64)
+
+    def padded_worker_table(self, pad_chunks: Optional[int] = None
+                            ) -> Dict[str, np.ndarray]:
+        """Dense (P, max_chunks) tables padded with size-0 chunks — the SPMD
+        form (every program instance indexes the same-shaped table).  This is
+        what the Pallas ``sched_matmul`` kernel scalar-prefetches."""
+        p = self.loop.num_workers
+        counts = self.worker_chunk_counts()
+        width = int(counts.max()) if self.num_chunks else 0
+        if pad_chunks is not None:
+            if pad_chunks < width:
+                raise ValueError(f"pad_chunks={pad_chunks} < max chunks "
+                                 f"{width}")
+            width = pad_chunks
+        starts = np.zeros((p, width), dtype=np.int32)
+        sizes = np.zeros((p, width), dtype=np.int32)
+        if self.num_chunks:
+            order = np.argsort(self.workers, kind="stable")
+            w_sorted = self.workers[order]
+            offsets = np.cumsum(counts) - counts
+            col = (np.arange(self.num_chunks)
+                   - np.repeat(offsets, counts)).astype(np.int64)
+            starts[w_sorted, col] = self.starts[order]
+            sizes[w_sorted, col] = self.sizes[order]
+        return {"starts": starts, "sizes": sizes}
+
+    def tile_order(self, n_tiles: Optional[int] = None,
+                   order: str = "dequeue") -> np.ndarray:
+        """Expand chunks to their member iterations — the tile-visit
+        permutation Pallas kernels scalar-prefetch.
+
+        ``order="dequeue"``: chunks in dequeue order.  For the sequential
+        central-queue schedules this is the identity permutation (starts
+        ascend), so it only reorders stealing/custom plans.
+        ``order="worker"``: worker-major — each worker's chunks contiguous,
+        workers in id order.  This is the form a multi-kernel / megacore
+        split consumes: lane *w* walks exactly the tile run the UDS
+        assigned to worker *w*, so a P-lane split inherits the schedule's
+        load balance.
+        """
+        n = self.loop.trip_count if n_tiles is None else n_tiles
+        if order == "worker":
+            perm = np.argsort(self.workers, kind="stable")
+            starts, sizes = self.starts[perm], self.sizes[perm]
+        elif order == "dequeue":
+            starts, sizes = self.starts, self.sizes
+        else:
+            raise ValueError(f"unknown tile order {order!r}")
+        total = int(sizes.sum())
+        offsets = np.cumsum(sizes) - sizes
+        out = (np.repeat(starts, sizes)
+               + np.arange(total) - np.repeat(offsets, sizes))
+        out = out[out < n]
+        return out.astype(np.int32)

@@ -33,9 +33,17 @@ __all__ = ["SixOpBase", "CentralQueueSchedule", "as_three_op"]
 class SixOpBase:
     """Common six-op plumbing: measurement hooks write ChunkRecords into the
     context's history object (paper §3: the begin/end operations exist to feed
-    the history mechanism)."""
+    the history mechanism).
+
+    ``adaptive`` marks type-(3) strategies whose ``start`` consults the
+    cross-invocation history: the plan engine includes the history epoch in
+    their cache key so new measurements invalidate cached plans.  Custom
+    history-reading schedulers must set it, or their plans may be served
+    stale from the cache.
+    """
 
     name: str = "uds"
+    adaptive: bool = False
 
     # -- operations subclasses typically override -------------------------
     def init(self, ctx: SchedulerContext) -> Any:

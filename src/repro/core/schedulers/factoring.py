@@ -123,6 +123,8 @@ class AWF(WeightedFactoring):
       E — as C but rate includes ``h``
     """
 
+    adaptive = True
+
     name = "awf"
 
     def __init__(self, variant: str = "timestep", overhead: float = 0.0):
@@ -206,6 +208,8 @@ class AF(CentralQueueSchedule):
     formulation used by DLS/LB4OMP-style libraries, documented here because
     the exact constant conventions differ across presentations.
     """
+
+    adaptive = True
 
     name = "af"
 

@@ -1,106 +1,46 @@
-"""SPMD wave planner — the TPU adaptation of per-thread dequeue.
+"""SPMD wave planning — a thin view over the PlanEngine.
 
 On an SPMD mesh there is no shared work queue: every chip executes one XLA
-program.  Dynamic scheduling therefore becomes **plan–execute–measure**:
+program, so dynamic scheduling becomes **plan–execute–measure**:
 
-  1. *plan*   — host-side, the UDS runs exactly as in the executor, but
-     dequeues are *batched into waves*: each wave assigns one chunk to every
-     still-active worker (a worker == a data-parallel shard, an expert, or a
-     kernel grid lane, depending on the consumer);
-  2. *execute* — the resulting static ``SchedulePlan`` parameterizes the
-     compiled step (batch shard sizes, expert capacities, Pallas chunk
-     tables);
-  3. *measure* — per-worker timings flow back into the ``LoopHistory``, so
-     the next plan's ``next()`` calls see real measurements (type-(3)
-     adaptive scheduling at step granularity).
+  1. *plan*    — ``core.engine.PlanEngine`` materializes the schedule as a
+     :class:`~repro.core.plan.SchedulePlan`.  Non-adaptive strategies
+     compile to their closed-form chunk tables with NumPy arithmetic;
+     adaptive ones run the generic three-op driver, whose dequeues are
+     batched into *waves* (one chunk per still-active worker per round —
+     a worker is a data-parallel shard, an expert, or a kernel grid lane,
+     depending on the consumer).  Repeated invocations of the same loop
+     hit the engine's plan cache and skip Python dequeue entirely.
+  2. *execute* — the static plan parameterizes the compiled step (batch
+     shard sizes via ``worker_iters``, expert capacities, Pallas chunk
+     tables via ``table``/``padded_worker_table``/``tile_order``).
+  3. *measure* — per-worker timings flow back into the ``LoopHistory``;
+     recording a new invocation bumps the history epoch, which invalidates
+     cached plans of adaptive schedulers, so the next plan's ``next()``
+     calls see real measurements (type-(3) adaptive scheduling at step
+     granularity).
 
-The chunk-size sequences produced here are **identical** to the host
-executor's (same ``next`` calls, same state machine); only the dequeue
-*cadence* changes — mirroring the paper's own merge of ``enqueue`` into
-``init`` when the iteration space is fixed ahead of time.
+The chunk tables produced here are **identical** to the host executor's
+state machine (same ``next`` semantics, enforced by the engine's
+vectorized-vs-generic invariant); only the dequeue *cadence* changes —
+mirroring the paper's own merge of ``enqueue`` into ``init`` when the
+iteration space is fixed ahead of time.
+
+This module keeps the historical entry points (``plan_waves``,
+``plan_schedule``) and re-exports ``SchedulePlan``; new code should talk
+to the engine directly (``repro.core.engine.get_engine()``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
-import numpy as np
-
+from repro.core.engine import PlanEngine, get_engine
 from repro.core.history import LoopHistory
-from repro.core.interface import (
-    Chunk,
-    LoopSpec,
-    SchedulerContext,
-    UserDefinedSchedule,
-    chunks_cover,
-)
+from repro.core.interface import Chunk, LoopSpec, UserDefinedSchedule
+from repro.core.plan import SchedulePlan
 
 __all__ = ["SchedulePlan", "plan_waves", "plan_schedule"]
-
-
-@dataclasses.dataclass
-class SchedulePlan:
-    """A fully-materialized schedule: the todo list after all dequeues.
-
-    ``waves[r]`` is the list of chunks dequeued in round r (≤ one per
-    worker).  ``table()`` flattens to arrays consumable by XLA / Pallas
-    scalar prefetch.
-    """
-
-    loop: LoopSpec
-    waves: List[List[Chunk]]
-
-    @property
-    def chunks(self) -> List[Chunk]:
-        return [c for wave in self.waves for c in wave]
-
-    @property
-    def num_waves(self) -> int:
-        return len(self.waves)
-
-    def table(self) -> Dict[str, np.ndarray]:
-        """(starts, sizes, workers) int32 arrays in dequeue order."""
-        cs = self.chunks
-        return {
-            "starts": np.asarray([c.start for c in cs], dtype=np.int32),
-            "sizes": np.asarray([c.size for c in cs], dtype=np.int32),
-            "workers": np.asarray([c.worker for c in cs], dtype=np.int32),
-        }
-
-    def per_worker(self) -> Dict[int, List[Chunk]]:
-        out: Dict[int, List[Chunk]] = {w: [] for w in range(self.loop.num_workers)}
-        for c in self.chunks:
-            out[c.worker].append(c)
-        return out
-
-    def worker_iters(self) -> np.ndarray:
-        """Iterations assigned per worker — the shard sizes the distributed
-        layer consumes (e.g. per-host batch split)."""
-        out = np.zeros(self.loop.num_workers, dtype=np.int64)
-        for c in self.chunks:
-            out[c.worker] += c.size
-        return out
-
-    def padded_worker_table(self, pad_chunks: Optional[int] = None
-                            ) -> Dict[str, np.ndarray]:
-        """Dense (P, max_chunks) tables padded with size-0 chunks — the SPMD
-        form (every program instance indexes the same-shaped table).  This is
-        what the Pallas ``sched_matmul`` kernel scalar-prefetches."""
-        per = self.per_worker()
-        width = max((len(v) for v in per.values()), default=0)
-        if pad_chunks is not None:
-            if pad_chunks < width:
-                raise ValueError(f"pad_chunks={pad_chunks} < max chunks {width}")
-            width = pad_chunks
-        p = self.loop.num_workers
-        starts = np.zeros((p, width), dtype=np.int32)
-        sizes = np.zeros((p, width), dtype=np.int32)
-        for w, lst in per.items():
-            for j, c in enumerate(lst):
-                starts[w, j] = c.start
-                sizes[w, j] = c.size
-        return {"starts": starts, "sizes": sizes}
 
 
 def plan_waves(sched: UserDefinedSchedule,
@@ -110,49 +50,20 @@ def plan_waves(sched: UserDefinedSchedule,
                user_data: Any = None,
                weights: Optional[Sequence[float]] = None,
                cost_model: Optional[Callable[[Chunk, int], float]] = None,
-               check_coverage: bool = True) -> SchedulePlan:
-    """Run the UDS to completion in batched (wave) order.
+               check_coverage: bool = True,
+               engine: Optional[PlanEngine] = None) -> SchedulePlan:
+    """Materialize the schedule for one loop invocation via the engine.
 
     ``cost_model(chunk, worker)`` — if given, predicted chunk costs are fed
     to ``next()`` as the ``elapsed`` of the previous chunk, letting adaptive
     schedulers plan against a model (they still re-adapt against *real*
-    measurements between steps via ``history``).
+    measurements between steps via ``history``); such calls always run the
+    generic driver and bypass the plan cache.
     """
-    ctx = SchedulerContext(loop=loop, history=history, user_data=user_data,
-                           weights=weights)
-    state = sched.start(ctx)
-    if history is not None:
-        history.open_invocation(loop.loop_id)
-
-    p = loop.num_workers
-    active = set(range(p))
-    last: Dict[int, Optional[float]] = {w: None for w in range(p)}
-    waves: List[List[Chunk]] = []
-    guard = 0
-    while active:
-        wave: List[Chunk] = []
-        for w in sorted(active):
-            chunk = sched.next(state, w, last[w])
-            if chunk is None:
-                active.discard(w)
-                continue
-            last[w] = cost_model(chunk, w) if cost_model else None
-            wave.append(chunk)
-        if wave:
-            waves.append(wave)
-        guard += 1
-        if guard > 10 * max(loop.trip_count, 1) + 16:
-            raise RuntimeError(
-                f"scheduler {getattr(sched, 'name', sched)!r} failed to drain "
-                "the todo list (livelock guard tripped)")
-    sched.finish(state)
-
-    plan = SchedulePlan(loop=loop, waves=waves)
-    if check_coverage and not chunks_cover(loop, plan.chunks):
-        raise AssertionError(
-            f"scheduler {getattr(sched, 'name', sched)!r} violated the todo-"
-            f"list invariant under wave planning")
-    return plan
+    eng = engine if engine is not None else get_engine()
+    return eng.plan(sched, loop, history=history, user_data=user_data,
+                    weights=weights, cost_model=cost_model,
+                    check_coverage=check_coverage)
 
 
 def plan_schedule(sched: UserDefinedSchedule, n: int, num_workers: int,

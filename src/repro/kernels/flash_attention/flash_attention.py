@@ -11,7 +11,12 @@ Online-softmax over KV blocks (Rabe-Staats/FlashAttention), mapped to TPU:
     f32 ≈ 1.3 MB at (512, 1024, 128) — double-bufferable in 16 MB/core.
 
 The q/kv block sizes are the UDS "chunk" parameters of the KV loop (the
-paper's grouping of iterations into scheduling items).
+paper's grouping of iterations into scheduling items), and the optional
+``q_block_order`` — a permutation produced from a ``SchedulePlan`` — is the
+UDS dequeue order of Q blocks: under causal masking block i carries O(i)
+work, so decreasing-cost orders (GSS/TSS-shaped) let a multi-kernel
+megacore split load-balance without recompiling.  The order is
+scalar-prefetched; every BlockSpec index_map reads it.
 
 Oracle: ref.py (also the model's blockwise_attention path).
 """
@@ -31,10 +36,14 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-            *, scale: float, causal: bool, block_q: int, block_kv: int,
-            kv_blocks: int):
-    qi = pl.program_id(1)
+def _kernel(*refs, scale: float, causal: bool, block_q: int, block_kv: int,
+            kv_blocks: int, has_order: bool):
+    if has_order:
+        order_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+        qi = order_ref[pl.program_id(1)]      # logical Q block (UDS order)
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+        qi = pl.program_id(1)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -79,12 +88,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                    static_argnames=("causal", "block_q", "block_kv",
                                     "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_block_order=None,
                     *, causal: bool = True,
                     block_q: int = 512, block_kv: int = 1024,
                     interpret: bool = False) -> jax.Array:
     """q/k/v: (B, H, S, d) (repeat GQA heads outside). Returns (B, H, S, d).
 
-    S must tile by the block sizes (production path pads first).
+    ``q_block_order``: optional (S // block_q,) int32 permutation — the UDS
+    dequeue order of Q blocks (defaults to identity = static block
+    schedule).  S must tile by the block sizes (production path pads first).
     """
     b, h, sq, d = q.shape
     sk = k.shape[2]
@@ -97,23 +109,52 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     q_blocks = sq // block_q
     kv_blocks = sk // block_kv
 
+    body = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_kv=block_kv,
+                             kv_blocks=kv_blocks,
+                             has_order=q_block_order is not None)
+    scratch = [
+        pltpu.VMEM((block_q, d), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+    ]
+    out_shape = jax.ShapeDtypeStruct((bh, sq, d), q.dtype)
+    if q_block_order is None:
+        kernel = pl.pallas_call(
+            body,
+            grid=(bh, q_blocks, kv_blocks),
+            in_specs=[
+                pl.BlockSpec((1, block_q, d), lambda b_, i, j: (b_, i, 0)),
+                pl.BlockSpec((1, block_kv, d), lambda b_, i, j: (b_, j, 0)),
+                pl.BlockSpec((1, block_kv, d), lambda b_, i, j: (b_, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, d),
+                                   lambda b_, i, j: (b_, i, 0)),
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )
+        return kernel(qr, kr, vr).reshape(b, h, sq, d)
+
     kernel = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, causal=causal,
-                          block_q=block_q, block_kv=block_kv,
-                          kv_blocks=kv_blocks),
-        grid=(bh, q_blocks, kv_blocks),
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda b_, i, j: (b_, i, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda b_, i, j: (b_, j, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda b_, i, j: (b_, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b_, i, j: (b_, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, d), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-        ],
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bh, q_blocks, kv_blocks),
+            in_specs=[
+                pl.BlockSpec((1, block_q, d),
+                             lambda b_, i, j, order: (b_, order[i], 0)),
+                pl.BlockSpec((1, block_kv, d),
+                             lambda b_, i, j, order: (b_, j, 0)),
+                pl.BlockSpec((1, block_kv, d),
+                             lambda b_, i, j, order: (b_, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, d),
+                                   lambda b_, i, j, order: (b_, order[i], 0)),
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
         interpret=interpret,
     )
-    return kernel(qr, kr, vr).reshape(b, h, sq, d)
+    return kernel(jnp.asarray(q_block_order, jnp.int32),
+                  qr, kr, vr).reshape(b, h, sq, d)

@@ -2,19 +2,28 @@
 
 On TPU the Pallas kernel runs natively; on CPU it runs in interpret mode
 (tests) or falls back to the jnp oracle (large shapes).
+
+The Q-block visit order is a UDS scheduling decision: under causal masking
+Q block i attends to O(i) KV blocks, so a decreasing-cost schedule
+(GSS/TSS) balances a multi-kernel megacore split.  ``mha(schedule=...)``
+plans the order through the PlanEngine (cached across identically-shaped
+calls) and scalar-prefetches it into the kernel.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import plan_worker_order
+from repro.core.interface import UserDefinedSchedule
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
-__all__ = ["mha", "flash_attention", "attention_ref"]
+__all__ = ["mha", "plan_q_block_order", "flash_attention", "attention_ref"]
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -26,11 +35,25 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def plan_q_block_order(sched: Union[str, UserDefinedSchedule],
+                       q_blocks: int, num_workers: int = 2,
+                       **sched_params):
+    """Worker-major Q-block visit order, planned (and cached) by the
+    engine: each of the ``num_workers`` kernel lanes (default 2 =
+    megacore) gets its worker's contiguous block run, so the lanes
+    inherit the schedule's load balance."""
+    return plan_worker_order(sched, q_blocks, num_workers=num_workers,
+                             loop_id=f"flash_attention/{q_blocks}",
+                             **sched_params)
+
+
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
         block_q: int = 512, block_kv: int = 1024,
+        schedule: Optional[Union[str, UserDefinedSchedule]] = None,
         use_kernel: bool = True, interpret: bool = False) -> jax.Array:
     """q: (B, S, H, d); k/v: (B, S, KV, d) (GQA repeated here).
-    Returns (B, S, H, d)."""
+    Returns (B, S, H, d).  ``schedule`` selects the UDS that orders the
+    kernel's Q-block visits (None = identity / static block order)."""
     b, s, hq, d = q.shape
     kv = k.shape[2]
     if hq != kv:
@@ -48,6 +71,10 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     qp = _pad_to(qt, 2, bq)
     kp = _pad_to(kt, 2, bkv)
     vp = _pad_to(vt, 2, bkv)
-    out = flash_attention(qp, kp, vp, causal=causal, block_q=bq,
+    order = None
+    if schedule is not None:
+        order = jnp.asarray(
+            plan_q_block_order(schedule, qp.shape[2] // bq), jnp.int32)
+    out = flash_attention(qp, kp, vp, order, causal=causal, block_q=bq,
                           block_kv=bkv, interpret=interpret)
     return out[:, :, :s].transpose(0, 2, 1, 3)

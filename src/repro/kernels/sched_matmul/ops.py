@@ -1,29 +1,44 @@
-"""Public op: UDS-scheduled matmul with padding + plan integration."""
+"""Public op: UDS-scheduled matmul with padding + plan-engine integration."""
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wave import SchedulePlan
+from repro.core.engine import PlanEngine, plan_worker_order
+from repro.core.interface import UserDefinedSchedule
+from repro.core.plan import SchedulePlan
 from repro.kernels.sched_matmul.sched_matmul import sched_matmul
 from repro.kernels.sched_matmul.ref import sched_matmul_ref
 
-__all__ = ["scheduled_matmul", "tile_order_from_plan", "sched_matmul",
-           "sched_matmul_ref"]
+__all__ = ["scheduled_matmul", "tile_order_from_plan", "plan_tile_order",
+           "sched_matmul", "sched_matmul_ref"]
 
 
 def tile_order_from_plan(plan: SchedulePlan, m_tiles: int) -> np.ndarray:
     """Flatten a UDS SchedulePlan over [0, m_tiles) into the kernel's
-    tile-visit order (dequeue order, chunks expanded to their tiles)."""
-    order = []
-    for c in plan.chunks:
-        order.extend(range(c.start, min(c.stop, m_tiles)))
-    assert sorted(order) == list(range(m_tiles)), "plan must tile exactly"
-    return np.asarray(order, dtype=np.int32)
+    tile-visit order (dequeue order, chunks expanded to their tiles) —
+    vectorized over the plan's flat arrays."""
+    order = plan.tile_order(m_tiles)
+    assert order.shape[0] == m_tiles and np.array_equal(
+        np.sort(order), np.arange(m_tiles)), "plan must tile exactly"
+    return order
+
+
+def plan_tile_order(sched: Union[str, UserDefinedSchedule], m_tiles: int,
+                    num_workers: int = 2, *,
+                    engine: Optional[PlanEngine] = None,
+                    **sched_params) -> np.ndarray:
+    """Worker-major M-tile visit order for a scheduler (by name or
+    instance), planned — and cached across kernel launches — by the
+    engine: each of the ``num_workers`` kernel lanes (default 2 = TPU
+    megacore) gets the contiguous tile run the UDS assigned to it."""
+    return plan_worker_order(sched, m_tiles, num_workers=num_workers,
+                             loop_id=f"sched_matmul/{m_tiles}",
+                             engine=engine, **sched_params)
 
 
 def scheduled_matmul(a: jax.Array, b: jax.Array,

@@ -145,9 +145,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    from repro.launch.hlo_analysis import normalize_cost_analysis
     hlo_text = compiled.as_text()
     print(compiled.memory_analysis())       # proves it fits (dry-run contract)
-    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+    print({k: v for k, v in normalize_cost_analysis(
+               compiled.cost_analysis()).items()
            if k in ("flops", "bytes accessed")})
     terms = roofline_terms(compiled, n_chips=n_chips,
                            model_flops_global=model_flops,

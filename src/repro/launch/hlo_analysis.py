@@ -33,7 +33,21 @@ import math
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HloStats"]
+__all__ = ["analyze_hlo", "normalize_cost_analysis", "HloStats"]
+
+
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Some versions (e.g. 0.4.3x) return a one-entry *list* of per-program
+    dicts, others a plain dict, and it may be None for empty programs —
+    always return a dict so callers can index ``["flops"]`` safely.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,

@@ -133,9 +133,9 @@ def roofline_terms(compiled, *, n_chips: int, model_flops_global: float,
     scanned-layer programs by ~num_layers×.  The raw cost_analysis values
     are retained as ``xla_*`` reference fields.
     """
-    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.hlo_analysis import analyze_hlo, normalize_cost_analysis
 
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     xla_flops = float(ca.get("flops", 0.0))              # per chip, loop=1
     xla_bytes = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import LoopSpec, SchedulerContext, make_scheduler
+from repro.core import LoopSpec, SchedulerContext, get_engine, make_scheduler
 from repro.launch.steps import make_serve_step
 from repro.models import get_model
 
@@ -70,7 +70,7 @@ class ServeLoop:
         sched = make_scheduler(self.sched_name)
         loop = LoopSpec(lb=0, ub=len(requests), num_workers=self.slots,
                         loop_id="serve")
-        state = sched.start(SchedulerContext(loop=loop))
+        stream = get_engine().open_stream(sched, SchedulerContext(loop=loop))
         queue: Deque[Request] = deque(requests)
         pending: Dict[int, Deque[Request]] = {s: deque()
                                               for s in range(self.slots)}
@@ -86,7 +86,7 @@ class ServeLoop:
                     continue
                 if s in exhausted:
                     continue
-                chunk = sched.next(state, s, elapsed[s])
+                chunk = stream.next(s, elapsed[s])
                 if chunk is None:
                     exhausted.add(s)
                     continue
@@ -118,7 +118,7 @@ class ServeLoop:
                 del self.active[s]
             if not progressed:
                 break
-        sched.finish(state)
+        stream.close()
         return results
 
 

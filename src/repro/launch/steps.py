@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +27,38 @@ from repro.configs.base import ShapeSpec
 from repro.sharding import constrain
 
 __all__ = ["chunked_softmax_ce", "make_train_step", "make_prefill_step",
-           "make_serve_step", "input_specs", "head_weights"]
+           "make_serve_step", "apply_microbatch_plan", "input_specs",
+           "head_weights"]
 
 Tree = Any
+
+
+# batch-dict keys with a leading batch dim (mirrors input_specs); keys not
+# listed here (e.g. the per-expert cap_e vector) pass through unpermuted
+_BATCH_MAJOR_KEYS = frozenset({"tokens", "embeds", "labels", "segment_ids"})
+
+
+def apply_microbatch_plan(batch: Dict[str, jax.Array], perm,
+                          extra_batch_keys: Sequence[str] = ()
+                          ) -> Dict[str, jax.Array]:
+    """Apply a UDS microbatch permutation (``sched.microbatch``, planned
+    through the engine) to a host-side batch: rows are reordered so the
+    compiled step's *static* equal split sees cost-balanced microbatches.
+    Permutes by explicit key (``_BATCH_MAJOR_KEYS`` + ``extra_batch_keys``;
+    ``positions_3d`` is (3, B, S) and permuted on its second axis) — never
+    by shape inference, so same-length non-batch vectors can't be
+    scrambled."""
+    perm = jnp.asarray(perm)
+    keys = _BATCH_MAJOR_KEYS | set(extra_batch_keys)
+    out: Dict[str, jax.Array] = {}
+    for k, v in batch.items():
+        if k == "positions_3d":
+            out[k] = v[:, perm]
+        elif k in keys:
+            out[k] = v[perm]
+        else:
+            out[k] = v
+    return out
 
 
 def head_weights(params: Tree, cfg: ModelConfig) -> jax.Array:
@@ -93,9 +122,10 @@ def make_train_step(model: Model, opt_update: Callable,
     (params, opt_state, metrics).
 
     ``batch``: tokens/embeds, labels, optional segment_ids / positions_3d /
-    cap_e (UDS-planned expert capacities).  ``num_microbatches`` > 1 runs
-    UDS-sized gradient accumulation (see sched/microbatch.py for the
-    planner; equal split here keeps the compiled shape static).
+    cap_e (engine-planned expert capacities).  ``num_microbatches`` > 1 runs
+    UDS-sized gradient accumulation: ``sched/microbatch.py`` plans the row
+    permutation host-side and ``apply_microbatch_plan`` applies it; the
+    equal split here keeps the compiled shape static.
     """
     cfg = model.cfg
 

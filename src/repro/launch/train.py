@@ -24,7 +24,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import LoopHistory, make_scheduler
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import make_mesh, rules_for, shardings_for
-from repro.launch.steps import make_train_step, opt_state_specs
+from repro.launch.steps import (apply_microbatch_plan, make_train_step,
+                                opt_state_specs)
 from repro.models import get_model
 from repro.models.moe import moe_capacity
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
@@ -105,7 +106,7 @@ class TrainLoop:
             perm = plan_microbatch_permutation(
                 make_scheduler("dynamic", chunk=1), costs,
                 self.num_microbatches)
-            batch = {k: v[perm] for k, v in batch.items()}
+            batch = apply_microbatch_plan(batch, perm)
         if self.capacity is not None:
             batch["cap_e"] = jnp.asarray(self.capacity.plan())
         if self.cfg.frontend != "none":

@@ -16,7 +16,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core import LoopHistory, LoopSpec, SchedulerContext
+from repro.core import LoopHistory, LoopSpec, SchedulerContext, get_engine
 from repro.core.interface import UserDefinedSchedule
 
 __all__ = ["plan_microbatch_permutation"]
@@ -32,7 +32,9 @@ def plan_microbatch_permutation(sched: UserDefinedSchedule,
 
     Rows are iterations; microbatches are workers; the UDS dequeues row
     chunks for the currently-lightest microbatch (longest-processing-time
-    order).  Returns (B,) int32 permutation.
+    order) through an engine ``ScheduleStream`` — measured bucket costs feed
+    back as the ``elapsed`` of the previous chunk.  Returns (B,) int32
+    permutation.
     """
     B = len(row_costs)
     assert B % num_microbatches == 0
@@ -40,8 +42,8 @@ def plan_microbatch_permutation(sched: UserDefinedSchedule,
     order = np.argsort([-c for c in row_costs], kind="stable")
     loop = LoopSpec(lb=0, ub=B, num_workers=num_microbatches,
                     loop_id="microbatch")
-    ctx = SchedulerContext(loop=loop, history=history)
-    state = sched.start(ctx)
+    stream = get_engine().open_stream(
+        sched, SchedulerContext(loop=loop, history=history))
 
     buckets: list[list[int]] = [[] for _ in range(num_microbatches)]
     load = np.zeros(num_microbatches)
@@ -49,7 +51,7 @@ def plan_microbatch_permutation(sched: UserDefinedSchedule,
     active = set(range(num_microbatches))
     while active:
         m = min(active, key=lambda i: (load[i], i))
-        chunk = sched.next(state, m, elapsed[m])
+        chunk = stream.next(m, elapsed[m])
         if chunk is None:
             active.discard(m)
             continue
@@ -64,7 +66,7 @@ def plan_microbatch_permutation(sched: UserDefinedSchedule,
             load[tgt] += row_costs[row]
             cost += row_costs[row]
         elapsed[m] = cost if cost else 1e-9
-    sched.finish(state)
+    stream.close()
     perm = [r for b in buckets for r in b]
     assert sorted(perm) == list(range(B))
     return np.asarray(perm, dtype=np.int32)

@@ -2,9 +2,13 @@
 
 Experts are units of processing with *measured* load (the fraction of
 tokens routed to each, returned by moe_ffn — the end-loop-body measurement);
-the capacity vector for the next step is planned by weighted factoring:
-persistently-hot experts get more slots, cold experts fewer, under a fixed
-total budget — reducing token dropping at equal memory.
+the capacity vector for the next step is planned by weighted factoring
+through the PlanEngine: the slot budget (E · C iterations) is scheduled
+over the experts (workers) with capability weights = normalized EWMA
+loads, and each expert's capacity is its ``worker_iters`` share of the
+plan.  Persistently-hot experts get more slots, cold experts fewer, under
+a fixed total budget — reducing token dropping at equal memory.  Identical
+load vectors across steps hit the engine's plan cache.
 
 This is the paper's heterogeneous-workers story (WF2 "can employ workload
 balancing information specified by the user") executing inside an MoE
@@ -17,7 +21,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import LoopHistory
+from repro.core import LoopHistory, LoopSpec, get_engine
+from repro.core.schedulers import WeightedFactoring
 from repro.models.config import ModelConfig
 from repro.models.moe import moe_buffer_capacity, moe_capacity
 
@@ -53,7 +58,14 @@ class CapacityPlanner:
             return np.full(E, self.C, np.int32)
         w = self.load / max(self.load.mean(), 1e-9)        # mean 1.0
         w = np.clip(w, self.floor, None)
-        cap = np.round(self.C * w * E / w.sum()).astype(np.int32)
+        # weighted-factoring plan over the slot budget: experts are the
+        # workers, slots the iterations; capacities = per-worker shares
+        loop = LoopSpec(lb=0, ub=E * self.C, num_workers=E,
+                        loop_id="moe_capacity")
+        plan = get_engine().plan(
+            WeightedFactoring(), loop,
+            weights=(w * E / w.sum()).tolist())       # normalized to sum E
+        cap = plan.worker_iters()
         return np.clip(cap, 1, self.C_buf).astype(np.int32)
 
     def drop_rate(self, loads: np.ndarray, cap: np.ndarray) -> float:

@@ -15,7 +15,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import LoopHistory, LoopSpec, SchedulerContext
+from repro.core import LoopHistory, LoopSpec, SchedulerContext, get_engine
 from repro.core.interface import UserDefinedSchedule
 from repro.data.pipeline import PackedBatch, pack_documents
 
@@ -35,8 +35,8 @@ def plan_packing(sched: UserDefinedSchedule, doc_lens: Sequence[int],
     order = np.argsort([-l for l in doc_lens], kind="stable")
     loop = LoopSpec(lb=0, ub=len(doc_lens), num_workers=batch,
                     loop_id="packing")
-    ctx = SchedulerContext(loop=loop, history=history)
-    state = sched.start(ctx)
+    stream = get_engine().open_stream(
+        sched, SchedulerContext(loop=loop, history=history))
 
     fill = np.zeros(batch, np.int64)
     assign = [-1] * len(doc_lens)
@@ -44,7 +44,7 @@ def plan_packing(sched: UserDefinedSchedule, doc_lens: Sequence[int],
     active = set(range(batch))
     while active:
         w = min(active, key=lambda r: fill[r])     # idle-most row dequeues
-        chunk = sched.next(state, w, elapsed[w])
+        chunk = stream.next(w, elapsed[w])
         if chunk is None:
             active.discard(w)
             continue
@@ -57,7 +57,7 @@ def plan_packing(sched: UserDefinedSchedule, doc_lens: Sequence[int],
                 fill[w] += n
                 cost += n
         elapsed[w] = float(cost) if cost else 1e-9
-    sched.finish(state)
+    stream.close()
     return assign
 
 

@@ -18,7 +18,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import ChunkRecord, LoopHistory
+from repro.core import ChunkRecord, LoopHistory, LoopSpec, get_engine
+from repro.core.schedulers import WeightedFactoring
 
 __all__ = ["StragglerMitigator"]
 
@@ -37,12 +38,14 @@ class StragglerMitigator:
     # ------------------------------------------------------------ measure
     def observe_step(self, host_times: Dict[int, float],
                      host_tokens: Optional[Dict[int, int]] = None) -> None:
-        """Record one training step's per-host wall times."""
-        inv = self.history.open_invocation(self.loop_id)
+        """Record one training step's per-host wall times (through
+        ``record`` so the history's measured-epoch counter advances)."""
+        self.history.open_invocation(self.loop_id)
         for h, t in host_times.items():
             n = (host_tokens or {}).get(h, 1)
-            inv.chunks.append(ChunkRecord(worker=h, start=0, stop=n,
-                                          elapsed=t))
+            self.history.record(self.loop_id,
+                                ChunkRecord(worker=h, start=0, stop=n,
+                                            elapsed=t))
         self._step += 1
 
     # ------------------------------------------------------------- detect
@@ -61,8 +64,14 @@ class StragglerMitigator:
             self.history.awf_weights(self.loop_id, self.num_hosts))
 
     def token_shares(self, total_tokens: int) -> np.ndarray:
-        """Integer per-host token budgets proportional to AWF weights."""
+        """Integer per-host token budgets proportional to AWF weights,
+        materialized as a WF2 plan over the token budget (hosts are the
+        workers) — the plan covers exactly, so shares always sum to
+        ``total_tokens``, and identical weight vectors hit the engine's
+        plan cache across steps."""
         w = self.weights()
-        shares = np.floor(total_tokens * w / w.sum()).astype(np.int64)
-        shares[: total_tokens - int(shares.sum())] += 1
-        return shares
+        loop = LoopSpec(lb=0, ub=total_tokens, num_workers=self.num_hosts,
+                        loop_id=f"{self.loop_id}/token_shares")
+        plan = get_engine().plan(WeightedFactoring(), loop,
+                                 weights=w.tolist())
+        return plan.worker_iters()

@@ -1,0 +1,237 @@
+"""PlanEngine: vectorized-vs-generic identity, plan caching + invalidation,
+plan views, and plan replay."""
+
+import numpy as np
+import pytest
+
+from repro.core import (LoopHistory, LoopSpec, SCHEDULER_FACTORIES,
+                        execute_plan, make_scheduler, plan_schedule,
+                        simulate_loop)
+from repro.core.engine import PlanEngine, has_compiler, scheduler_plan_key
+from repro.core.schedulers import AWF, GuidedSS, WeightedFactoring
+
+SHAPES = [(0, 3), (1, 1), (7, 3), (100, 8), (1000, 16), (37, 64), (4096, 5)]
+
+
+# ---------------------------------------------------- compilation invariant
+@pytest.mark.parametrize("name", sorted(SCHEDULER_FACTORIES))
+def test_vectorized_identical_to_generic(name):
+    """The tentpole invariant: for every scheduler in the registry with a
+    closed-form compiler, the vectorized chunk table is chunk-for-chunk
+    identical (starts, sizes, workers, waves) to the generic three-op
+    state-machine driver."""
+    eng = PlanEngine()
+    sched = make_scheduler(name)
+    if not has_compiler(sched):
+        pytest.skip(f"{name} has no closed form (adaptive/stealing)")
+    for n, p in SHAPES:
+        loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id=f"{name}/{n}/{p}")
+        vec = eng.plan(make_scheduler(name), loop, mode="vectorized")
+        gen = eng.plan(make_scheduler(name), loop, mode="generic")
+        assert vec.provenance.source == "vectorized"
+        assert gen.provenance.source == "generic"
+        assert vec.identical(gen), (name, n, p)
+        assert np.array_equal(vec.wave_ids, gen.wave_ids), (name, n, p)
+
+
+def test_validate_mode_cross_checks_every_plan():
+    eng = PlanEngine(validate=True)
+    for name in ("guided", "fac2", "tss", "rand", "wf2", "taper"):
+        plan = eng.plan(make_scheduler(name),
+                        LoopSpec(0, 777, num_workers=6, loop_id=name))
+        assert plan.coverage_ok()
+
+
+def test_generic_fallback_for_adaptive_and_stealing():
+    eng = PlanEngine()
+    for name in ("awf", "awf_c", "af", "static_steal"):
+        plan = eng.plan(make_scheduler(name),
+                        LoopSpec(0, 300, num_workers=4, loop_id=name))
+        assert plan.provenance.source == "generic"
+        assert plan.coverage_ok()
+
+
+# ------------------------------------------------------------------- cache
+def test_cache_hit_returns_same_plan_object():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 1000, num_workers=8, loop_id="hit")
+    p1 = eng.plan(make_scheduler("fac2"), loop)
+    p2 = eng.plan(make_scheduler("fac2"), loop)   # fresh instance, same config
+    assert p1 is p2
+    assert eng.cache_info().hits == 1 and eng.cache_info().misses == 1
+
+
+def test_cache_keys_distinguish_scheduler_params_and_loops():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 1000, num_workers=8, loop_id="k")
+    eng.plan(make_scheduler("dynamic", chunk=4), loop)
+    eng.plan(make_scheduler("dynamic", chunk=8), loop)          # param change
+    eng.plan(make_scheduler("dynamic", chunk=4),
+             LoopSpec(0, 1000, num_workers=4, loop_id="k"))     # loop change
+    assert eng.cache_info().misses == 3
+    assert eng.cache_info().hits == 0
+
+
+def test_cache_invalidated_by_weight_change():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 4000, num_workers=4, loop_id="w")
+    p1 = eng.plan(WeightedFactoring(), loop, weights=[2.0, 0.5, 1.0, 0.5])
+    p2 = eng.plan(WeightedFactoring(), loop, weights=[2.0, 0.5, 1.0, 0.5])
+    p3 = eng.plan(WeightedFactoring(), loop, weights=[1.0, 1.0, 1.0, 1.0])
+    assert p1 is p2
+    assert p3 is not p1
+    assert not np.array_equal(p1.sizes, p3.sizes)
+
+
+def test_cache_invalidated_by_history_epoch_bump():
+    """Adaptive schedulers key on the measurement epoch: recording a new
+    invocation of measurements must invalidate the cached plan."""
+    eng = PlanEngine()
+    hist = LoopHistory()
+    loop = LoopSpec(0, 800, num_workers=2, loop_id="aw")
+    sched = AWF(variant="timestep")
+    p1 = eng.plan(sched, loop, history=hist)
+    # a measured invocation: worker 0 twice as fast as worker 1
+    simulate_loop(AWF(variant="timestep"), loop, np.ones(800),
+                  speeds=[2.0, 1.0], history=hist)
+    p2 = eng.plan(sched, loop, history=hist)
+    assert p2 is not p1                       # epoch bumped -> replanned
+    w0_before = int(p1.worker_iters()[0])
+    w0_after = int(p2.worker_iters()[0])
+    assert w0_after > w0_before               # learned the 2:1 speeds
+
+
+def test_adaptive_plans_hit_without_new_measurements():
+    """Planning itself (elapsed=None records) must not invalidate an
+    adaptive plan: only *measured* invocations bump the cache epoch."""
+    eng = PlanEngine()
+    hist = LoopHistory()
+    loop = LoopSpec(0, 600, num_workers=3, loop_id="ac")
+    p1 = eng.plan(make_scheduler("awf_c"), loop, history=hist)
+    p2 = eng.plan(make_scheduler("awf_c"), loop, history=hist)
+    p3 = eng.plan(make_scheduler("awf_c"), loop, history=hist)
+    assert p1 is p2 is p3
+    assert eng.cache_info().hits == 2 and eng.cache_info().misses == 1
+
+
+def test_every_plan_path_opens_an_invocation():
+    """Generic, vectorized, and cache-hit plans all mark an invocation
+    boundary, so post-execution records keep per-step granularity."""
+    eng = PlanEngine()
+    hist = LoopHistory()
+    loop = LoopSpec(0, 100, num_workers=4, loop_id="inv")
+    eng.plan(make_scheduler("guided"), loop, history=hist)   # vectorized
+    eng.plan(make_scheduler("guided"), loop, history=hist)   # cache hit
+    eng.plan(make_scheduler("static_steal"), loop, history=hist)  # generic
+    assert hist.num_invocations("inv") == 3
+    assert hist.measured_invocations("inv") == 0
+
+
+def test_adaptive_plans_not_shared_across_distinct_histories():
+    """Two histories with the same loop_id and equal measured-epoch counts
+    but opposite learned speeds must not share cache entries."""
+    eng = PlanEngine()
+    loop = LoopSpec(0, 800, num_workers=2, loop_id="aw")
+    h1, h2 = LoopHistory(), LoopHistory()
+    simulate_loop(AWF(variant="timestep"), loop, np.ones(800),
+                  speeds=[4.0, 1.0], history=h1)
+    simulate_loop(AWF(variant="timestep"), loop, np.ones(800),
+                  speeds=[1.0, 4.0], history=h2)
+    p1 = eng.plan(AWF(variant="timestep"), loop, history=h1)
+    p2 = eng.plan(AWF(variant="timestep"), loop, history=h2)
+    assert p1 is not p2
+    assert p1.worker_iters()[0] > p1.worker_iters()[1]   # h1: worker 0 fast
+    assert p2.worker_iters()[0] < p2.worker_iters()[1]   # h2: worker 1 fast
+
+
+def test_non_adaptive_plans_hit_across_history_epochs():
+    eng = PlanEngine()
+    hist = LoopHistory()
+    loop = LoopSpec(0, 500, num_workers=4, loop_id="g")
+    p1 = eng.plan(GuidedSS(), loop, history=hist)
+    hist.open_invocation("g")                 # epoch bump is irrelevant here
+    p2 = eng.plan(GuidedSS(), loop, history=hist)
+    assert p1 is p2
+
+
+def test_unhashable_schedules_are_planned_fresh():
+    from repro.core import lambda_style as ls
+
+    calls = []
+
+    def dequeue():
+        if calls and calls[-1] == "done":
+            return None
+        ls.OMP_UDS_loop_chunk_start(0)
+        ls.OMP_UDS_loop_chunk_end(10)
+        calls.append("done")
+        return 1
+
+    eng = PlanEngine()
+    sched = ls.UDS(dequeue=dequeue)
+    assert scheduler_plan_key(sched) is None
+    eng.plan(sched, LoopSpec(0, 10, num_workers=1, loop_id="u"))
+    assert eng.cache_info().uncacheable == 1
+    assert len(eng) == 0
+
+
+def test_cache_lru_eviction():
+    eng = PlanEngine(cache_size=2)
+    for i in range(4):
+        eng.plan(make_scheduler("guided"),
+                 LoopSpec(0, 100 + i, num_workers=2, loop_id="lru"))
+    assert len(eng) == 2
+    assert eng.cache_info().evictions == 2
+
+
+# ------------------------------------------------------------ plan views
+def test_plan_views_are_consistent():
+    plan = plan_schedule(make_scheduler("fac2"), 1003, 8)
+    assert plan.num_chunks == len(plan.chunks)
+    assert int(plan.sizes.sum()) == 1003
+    assert int(plan.worker_iters().sum()) == 1003
+    # waves regroup to the same chunks in dequeue order
+    flat = [c for wave in plan.waves for c in wave]
+    assert flat == plan.chunks
+    tab = plan.padded_worker_table()
+    assert tab["starts"].shape == tab["sizes"].shape
+    assert tab["sizes"].sum() == 1003
+    order = plan.tile_order()
+    assert sorted(order.tolist()) == list(range(1003))
+    # worker-major expansion: a valid permutation, each worker's tiles
+    # contiguous, and (for a multi-worker central-queue plan) non-identity
+    worder = plan.tile_order(order="worker")
+    assert sorted(worder.tolist()) == list(range(1003))
+    assert worder.tolist() != list(range(1003))
+    per = plan.per_worker()
+    expect = [i for w in range(8) for c in per[w]
+              for i in range(c.start, c.stop)]
+    assert worder.tolist() == expect
+
+
+def test_plan_arrays_are_frozen():
+    plan = plan_schedule(make_scheduler("guided"), 100, 4)
+    with pytest.raises(ValueError):
+        plan.sizes[0] = 99
+
+
+# ------------------------------------------------------------ plan replay
+def test_execute_plan_conserves_work_and_matches_static_makespan():
+    rng = np.random.default_rng(0)
+    n, p = 1000, 8
+    costs = rng.uniform(0.1, 2.0, n)
+    plan = plan_schedule(make_scheduler("static_block"), n, p)
+    res = execute_plan(plan, costs, overhead=1e-4)
+    assert np.isclose(res.total_work, costs.sum())
+    # static assignment is identical under replay and under simulation
+    sim = simulate_loop(make_scheduler("static_block"),
+                        LoopSpec(0, n, num_workers=p), costs, overhead=1e-4)
+    assert np.isclose(res.makespan, sim.makespan)
+    assert sorted(c.size for c in res.chunks) == sorted(
+        c.size for c in sim.chunks)
+
+
+def test_execute_plan_respects_speeds():
+    plan = plan_schedule(make_scheduler("static_block"), 100, 2)
+    res = execute_plan(plan, np.ones(100), speeds=[2.0, 1.0])
+    assert res.worker_time[0] == pytest.approx(res.worker_time[1] / 2)

@@ -11,7 +11,7 @@
 
 import pytest
 
-from repro.core import LoopSpec, SchedulerContext, plan_waves
+from repro.core import LoopSpec, SchedulerContext, get_engine, plan_waves
 from repro.core.interface import three_op_from_six
 from repro.core.schedulers import StaticChunk, GuidedSS, as_three_op
 from repro.core import declare
@@ -148,10 +148,10 @@ def test_monotonic_violation_detected():
 
     sched = ls.UDS(dequeue=dequeue, monotonic=True)
     loop = LoopSpec(lb=0, ub=32, num_workers=1)
-    st = sched.start(SchedulerContext(loop=loop))
-    sched.next(st, 0)
+    stream = get_engine().open_stream(sched, SchedulerContext(loop=loop))
+    stream.next(0)
     with pytest.raises(RuntimeError, match="monotonic"):
-        sched.next(st, 0)
+        stream.next(0)
 
 
 def test_declare_argument_count_enforced(declared_mystatic):

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LoopSpec, make_scheduler, plan_schedule,
@@ -9,6 +13,26 @@ from repro.core.interface import chunks_cover
 
 SCHEDULERS = ["static", "dynamic", "guided", "tss", "tfss", "taper",
               "fac2", "wf2", "awf_b", "af", "rand", "fsc", "static_steal"]
+
+
+@given(name=st.sampled_from(SCHEDULERS),
+       n=st.integers(0, 2000),
+       p=st.integers(1, 48))
+@settings(max_examples=120, deadline=None)
+def test_vectorized_plan_identical_to_generic_driver(name, n, p):
+    """The engine's compilation invariant, fuzzed: for every scheduler with
+    a closed-form compiler and every (N, P), the vectorized chunk table is
+    chunk-for-chunk identical to the generic three-op state machine."""
+    from repro.core.engine import PlanEngine, has_compiler
+    eng = PlanEngine()
+    sched = make_scheduler(name)
+    if not has_compiler(sched):
+        return
+    loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id="prop")
+    vec = eng.plan(make_scheduler(name), loop, mode="vectorized")
+    gen = eng.plan(make_scheduler(name), loop, mode="generic")
+    assert vec.identical(gen)
+    assert np.array_equal(vec.wave_ids, gen.wave_ids)
 
 
 @given(name=st.sampled_from(SCHEDULERS),

@@ -6,8 +6,9 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import (LoopSpec, SchedulerContext, make_scheduler,
-                        plan_schedule, simulate_loop, LoopHistory)
+from repro.core import (LoopSpec, SchedulerContext, get_engine,
+                        make_scheduler, plan_schedule, simulate_loop,
+                        LoopHistory)
 from repro.core.interface import ceil_div, chunks_cover
 from repro.core.schedulers import (FAC2, AWF, GuidedSS, SelfScheduling,
                                    StaticChunk, TrapezoidSS, as_three_op)
@@ -16,11 +17,11 @@ from repro.core.schedulers import (FAC2, AWF, GuidedSS, SelfScheduling,
 def dequeue_all(sched, n, p, loop_id="t"):
     """Single-worker drain: the raw chunk-size sequence."""
     loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id=loop_id)
-    state = sched.start(SchedulerContext(loop=loop))
+    stream = get_engine().open_stream(sched, SchedulerContext(loop=loop))
     sizes = []
-    while (c := sched.next(state, 0, None)) is not None:
+    while (c := stream.next(0, None)) is not None:
         sizes.append(c.size)
-    sched.finish(state)
+    stream.close()
     return sizes
 
 

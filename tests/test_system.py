@@ -16,7 +16,9 @@ def test_train_loop_loss_decreases(tmp_path):
                      ckpt_dir=str(tmp_path), seed=0)
     losses = loop.run(15, log_every=100)
     assert np.isfinite(losses).all()
-    assert losses[-1] < losses[0]              # learning happened
+    # learning happened: compare smoothed windows, not two noisy samples
+    # (each step draws a fresh synthetic batch)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
     from repro.checkpoint import latest_step
     assert latest_step(str(tmp_path)) == 10    # checkpoint committed
 
