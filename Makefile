@@ -1,20 +1,32 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench bench-plan deps deps-dev
+.PHONY: test test-fast test-validate lint bench bench-plan bench-gate deps deps-dev
 
 test:           ## tier-1 verify (full suite, fail-fast)
 	$(PYTHON) -m pytest -x -q
 
-test-fast:      ## core scheduling + engine tests only
+test-fast:      ## core scheduling + engine + telemetry tests only
 	$(PYTHON) -m pytest -x -q tests/test_interfaces.py \
-	    tests/test_schedulers.py tests/test_engine.py
+	    tests/test_schedulers.py tests/test_engine.py tests/test_telemetry.py
 
-bench:          ## full benchmark harness (CSV to stdout)
+# REPRO_PLAN_VALIDATE=1 makes the engine cross-check every vectorized plan
+# chunk-for-chunk against the generic three-op driver (slow, exhaustive)
+test-validate:  ## tier-1 with plan validation on
+	REPRO_PLAN_VALIDATE=1 $(PYTHON) -m pytest -x -q
+
+lint:           ## ruff over the whole tree (rule set in ruff.toml)
+	ruff check .
+
+bench:          ## full benchmark harness (CSV stdout, JSON to benchmarks/results/)
 	$(PYTHON) benchmarks/run.py
 
 bench-plan:     ## plan-engine speedup + cache-hit acceptance check
 	$(PYTHON) benchmarks/plan_engine.py
+
+bench-gate:     ## CI regression gates: write BENCH_*.json, fail on regression
+	$(PYTHON) benchmarks/plan_engine.py --json BENCH_plan_engine.json --gate
+	$(PYTHON) benchmarks/serve_adapt.py --json BENCH_serve.json --gate
 
 deps:
 	pip install -r requirements.txt

@@ -233,12 +233,21 @@ def plan_engine() -> list:
     return pe.planning_speedup() + pe.cache_hit_rate()
 
 
+def serve_adapt() -> list:
+    """Telemetry -> history -> replan loop (executor stage; the full serve
+    stage runs via ``python benchmarks/serve_adapt.py``)."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).parent))
+    import serve_adapt as sa
+    return sa.rows(skip_serve=True)
+
+
 def main() -> None:
     RESULTS.mkdir(exist_ok=True)
     all_rows = []
     for fn in (chunk_tables, interface_equiv, makespan, overhead, packing,
-               moe_capacity_bench, straggler, plan_engine, kernels,
-               roofline):
+               moe_capacity_bench, straggler, plan_engine, serve_adapt,
+               kernels, roofline):
         try:
             all_rows.extend(fn())
         except Exception as e:  # pragma: no cover

@@ -10,7 +10,7 @@ sub-quadratic context).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.models.config import ModelConfig
 

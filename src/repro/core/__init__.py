@@ -9,6 +9,9 @@ JAX/TPU training & inference framework:
 * ``declare``      — declare-style specification (paper §4.2)
 * ``lambda_style`` — lambda-style specification (paper §4.1)
 * ``history``      — cross-invocation measurement store (paper §3)
+* ``telemetry``    — LoopTelemetry: the measure-stage recorder that flushes
+                     chunk timings into the history, bumping the epoch that
+                     invalidates cached adaptive plans
 * ``plan``         — the materialized SchedulePlan IR (flat chunk tables)
 * ``engine``       — PlanEngine: vectorized compilation + plan cache +
                      the single driver of the three-op state machine
@@ -27,6 +30,7 @@ from repro.core.interface import (
     three_op_from_six,
 )
 from repro.core.history import ChunkRecord, InvocationRecord, LoopHistory
+from repro.core.telemetry import ChunkLedger, LoopTelemetry
 from repro.core.plan import PlanProvenance, SchedulePlan
 from repro.core.engine import (
     PlanEngine,
@@ -42,6 +46,7 @@ __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
     "SixOpSchedule", "three_op_from_six", "chunks_cover",
     "ChunkRecord", "InvocationRecord", "LoopHistory",
+    "ChunkLedger", "LoopTelemetry",
     "PlanProvenance", "SchedulePlan",
     "PlanEngine", "ScheduleStream", "get_engine", "set_engine",
     "LoopResult", "execute_plan", "run_loop", "simulate_loop",

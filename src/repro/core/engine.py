@@ -56,8 +56,7 @@ import math
 import os
 import time
 from collections import OrderedDict
-from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
-                    Union)
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -88,11 +87,18 @@ class ScheduleStream:
     code that invokes the reduced interface's ``next`` operation — consumers
     dequeue through it and feed back measured ``elapsed`` times, exactly the
     paper's merged end-body/dequeue/begin-body operation.
+
+    A :class:`~repro.core.telemetry.LoopTelemetry` attached to the context
+    becomes the measurement sink for the stream's lifecycle: the scheduler
+    hook buffers chunk records into it, and ``close()`` flushes the buffer
+    into the history — bumping the measured epoch that invalidates cached
+    adaptive plans exactly once per invocation.
     """
 
     def __init__(self, sched: UserDefinedSchedule, ctx: SchedulerContext):
         self._sched = sched
         self.ctx = ctx
+        self.telemetry = ctx.telemetry
         self._state = sched.start(ctx)
         if ctx.history is not None:
             ctx.history.open_invocation(ctx.loop.loop_id)
@@ -109,6 +115,8 @@ class ScheduleStream:
         if not self._closed:
             self._closed = True
             self._sched.finish(self._state)
+            if self.telemetry is not None:
+                self.telemetry.flush()
 
     def __enter__(self) -> "ScheduleStream":
         return self
@@ -385,22 +393,44 @@ def _register_builtin_compilers() -> None:
 
     @register_compiler(Taper)
     def _taper(sched, ctx):
+        # Taper's size recurrence is sequential (size_k depends on R_k),
+        # but its tail is not: x(t) = t + v²/2 − v·sqrt(2t + v²/4) ≤ t for
+        # every v ≥ 0, so once R/P ≤ min_chunk the clamp max(mc, ceil(x))
+        # pins ALL remaining sizes to mc.  Emit the decaying head with a
+        # tight scalar loop (constants hoisted, ceil_div inlined) and the
+        # fixed tail as one NumPy fill — the same head/tail split that puts
+        # GSS past the 10× planning bar.
         n, p = ctx.loop.trip_count, ctx.loop.num_workers
+        if n <= 0:
+            return np.zeros(0, np.int64)
         mc, v = sched.min_chunk, sched.v
-        sizes: List[int] = []
+        head: List[int] = []
+        push = head.append
         r = n
-        while r > 0:
-            if v <= 0:
-                s = max(mc, ceil_div(r, p))
-            else:
+        if v <= 0:
+            while r > mc * p:
+                s = -(-r // p)                   # ceil(r / p), inlined
+                push(s)
+                r -= s
+        else:
+            half_v2 = 0.5 * v * v
+            quarter_v2 = 0.25 * v * v
+            sqrt, ceil = math.sqrt, math.ceil
+            while r > mc * p:
                 t = r / p
-                x = (t + v * v / 2.0
-                     - v * math.sqrt(2.0 * t + v * v / 4.0))
-                s = max(mc, int(math.ceil(x)))
-            s = max(1, min(s, r))
-            sizes.append(s)
-            r -= s
-        return np.asarray(sizes, np.int64)
+                s = int(ceil(t + half_v2 - v * sqrt(2.0 * t + quarter_v2)))
+                if s < mc:
+                    s = mc
+                push(s)
+                r -= s
+        sizes = np.asarray(head, np.int64)
+        if r > 0:
+            k, rem = divmod(r, mc)
+            tail = np.full(k + (1 if rem else 0), mc, np.int64)
+            if rem:
+                tail[-1] = rem
+            sizes = np.concatenate([sizes, tail])
+        return sizes
 
 
 # =========================================================================
@@ -439,11 +469,25 @@ class PlanEngine:
     # ------------------------------------------------------------- streams
     def open_stream(self, sched: UserDefinedSchedule,
                     ctx: Union[SchedulerContext, LoopSpec],
+                    telemetry: Any = None,
                     **ctx_kw: Any) -> ScheduleStream:
         """Chunk-at-a-time dequeue with measurement feedback (executor,
-        packing, microbatching, serving admission)."""
+        packing, microbatching, serving admission).
+
+        ``telemetry``: a ``LoopTelemetry`` to attach as the stream's
+        measurement sink (flushed into the history on ``close``).  A
+        telemetry with no history of its own inherits the context's.
+        """
         if isinstance(ctx, LoopSpec):
             ctx = SchedulerContext(loop=ctx, **ctx_kw)
+        if telemetry is not None:
+            if telemetry.history is None:
+                telemetry.history = ctx.history
+            if telemetry.loop_id is None:
+                telemetry.loop_id = ctx.loop.loop_id
+            if telemetry.num_workers is None:
+                telemetry.num_workers = ctx.loop.num_workers
+            ctx = dataclasses.replace(ctx, telemetry=telemetry)
         return ScheduleStream(sched, ctx)
 
     # ------------------------------------------------------------ planning

@@ -55,6 +55,7 @@ class LoopResult:
     worker_finish: List[float]     # virtual finish time per worker
     dequeues: int
     overhead_time: float           # total scheduling overhead charged
+    wave_times: Optional[List[float]] = None  # per-wave makespan (replay)
 
     @property
     def makespan(self) -> float:
@@ -95,7 +96,8 @@ def _drive(sched: UserDefinedSchedule,
            overhead: float,
            speeds: Optional[Sequence[float]],
            check_coverage: bool,
-           engine: Optional[PlanEngine] = None) -> LoopResult:
+           engine: Optional[PlanEngine] = None,
+           telemetry: Any = None) -> LoopResult:
     loop = ctx.loop
     p = loop.num_workers
     speeds = list(speeds) if speeds is not None else [1.0] * p
@@ -103,7 +105,7 @@ def _drive(sched: UserDefinedSchedule,
         raise ValueError("speeds must have one entry per worker")
 
     eng = engine if engine is not None else get_engine()
-    stream = eng.open_stream(sched, ctx)
+    stream = eng.open_stream(sched, ctx, telemetry=telemetry)
 
     # discrete-event simulation: (available_time, worker)
     pq: List = [(0.0, w) for w in range(p)]
@@ -151,6 +153,7 @@ def run_loop(sched: UserDefinedSchedule,
              history: Optional[LoopHistory] = None,
              user_data: Any = None,
              weights: Optional[Sequence[float]] = None,
+             telemetry: Any = None,
              check_coverage: bool = True) -> LoopResult:
     """Execute ``body(i)`` for every iteration under the given schedule,
     measuring real wall time per chunk (feeds adaptive schedulers)."""
@@ -165,7 +168,7 @@ def run_loop(sched: UserDefinedSchedule,
         return time.perf_counter() - t0
 
     return _drive(sched, ctx, cost, overhead=0.0, speeds=None,
-                  check_coverage=check_coverage)
+                  check_coverage=check_coverage, telemetry=telemetry)
 
 
 def simulate_loop(sched: UserDefinedSchedule,
@@ -178,6 +181,7 @@ def simulate_loop(sched: UserDefinedSchedule,
                   history: Optional[LoopHistory] = None,
                   user_data: Any = None,
                   weights: Optional[Sequence[float]] = None,
+                  telemetry: Any = None,
                   check_coverage: bool = True) -> LoopResult:
     """Deterministic virtual-time execution with per-iteration ``costs``,
     per-worker ``speeds`` (heterogeneity / stragglers) and per-dequeue
@@ -203,14 +207,16 @@ def simulate_loop(sched: UserDefinedSchedule,
         return float(prefix[chunk.stop] - prefix[chunk.start])
 
     return _drive(sched, ctx, chunk_cost, overhead=overhead, speeds=speeds,
-                  check_coverage=check_coverage)
+                  check_coverage=check_coverage, telemetry=telemetry)
 
 
 def execute_plan(plan: SchedulePlan,
                  costs: Union[Sequence[float], Callable[[int], float]],
                  *,
                  speeds: Optional[Sequence[float]] = None,
-                 overhead: float = 0.0) -> LoopResult:
+                 overhead: float = 0.0,
+                 history: Optional[LoopHistory] = None,
+                 telemetry: Any = None) -> LoopResult:
     """Replay a materialized (possibly cached) plan under virtual time.
 
     Unlike ``simulate_loop`` — where the assignment of chunks to workers
@@ -218,6 +224,13 @@ def execute_plan(plan: SchedulePlan,
     **fixed**, so the whole accounting vectorizes: no per-chunk Python.
     This is the host-side fast path for non-adaptive schedules and the
     mirror of how the SPMD substrates execute the very same plan arrays.
+
+    ``telemetry`` (or a bare ``history``) closes the measurement loop for
+    replays: every replayed chunk's modelled elapsed time is recorded and
+    flushed, bumping the history's measured epoch so cached adaptive plans
+    are invalidated and the next ``PlanEngine.plan()`` replans from this
+    replay's data.  The per-wave makespans are returned in
+    ``LoopResult.wave_times`` (the SPMD cadence timings).
     """
     loop = plan.loop
     p = loop.num_workers
@@ -235,17 +248,45 @@ def execute_plan(plan: SchedulePlan,
     sp = np.asarray(speeds if speeds is not None else np.ones(p), np.float64)
     if sp.shape[0] != p:
         raise ValueError("speeds must have one entry per worker")
-    busy = (np.bincount(plan.workers, weights=chunk_costs, minlength=p)
-            / np.maximum(sp, 1e-12))
+    chunk_elapsed = chunk_costs / np.maximum(sp[plan.workers], 1e-12)
+    busy = np.bincount(plan.workers, weights=chunk_elapsed, minlength=p)
     counts = plan.worker_chunk_counts()
     finish = busy + overhead * counts
+    # per-wave makespan: the SPMD cadence — each wave ends when its slowest
+    # worker finishes its chunk of the wave
+    wave_times: List[float] = []
+    if plan.num_chunks:
+        nw = plan.num_waves
+        per_wave_worker = np.zeros((nw, p), np.float64)
+        np.add.at(per_wave_worker, (plan.wave_ids, plan.workers),
+                  chunk_elapsed)
+        wave_times = per_wave_worker.max(axis=1).tolist()
+
+    if telemetry is None and history is not None:
+        from repro.core.telemetry import LoopTelemetry
+        telemetry = LoopTelemetry(history, loop_id=loop.loop_id,
+                                  num_workers=p)
+    if telemetry is not None:
+        if telemetry.history is None:
+            telemetry.history = history
+        if telemetry.loop_id is None:
+            telemetry.loop_id = loop.loop_id
+        if telemetry.num_workers is None:
+            telemetry.num_workers = p
+        # bulk-record from plain lists — one zip pass, no per-chunk
+        # ndarray scalar indexing on the replay fast path
+        telemetry.record_chunks(plan.workers.tolist(), plan.starts.tolist(),
+                                plan.stops.tolist(), chunk_elapsed.tolist())
+        telemetry.flush()
+
     # each worker also pays one terminal None-dequeue, as in the stream path
     dequeues = plan.num_chunks + p
     return LoopResult(loop=loop, chunks=plan.chunks,
                       worker_time=busy.tolist(),
                       worker_finish=finish.tolist(),
                       dequeues=dequeues,
-                      overhead_time=overhead * dequeues)
+                      overhead_time=overhead * dequeues,
+                      wave_times=wave_times)
 
 
 def _as_loop(loop: Union[LoopSpec, range, int],

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 __all__ = ["ChunkRecord", "InvocationRecord", "LoopHistory"]
 

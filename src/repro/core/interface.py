@@ -22,8 +22,7 @@ a UDS be implementable "without having to alter the OpenMP runtime library".
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Iterator, NamedTuple, Optional, Protocol, Sequence
+from typing import Any, NamedTuple, Optional, Protocol, Sequence
 
 __all__ = [
     "LoopSpec",
@@ -107,13 +106,18 @@ class SchedulerContext:
     mechanism to store and access the history of loop timings or other
     statistics across multiple loop iterations and/or invocations").
     ``user_data`` is the paper's custom-data pointer (``uds_data(void*)`` /
-    ``omp_argN``).
+    ``omp_argN``).  ``telemetry`` (a ``core.telemetry.LoopTelemetry``), when
+    attached, becomes the recording sink for the end-loop-body measurement
+    hook: chunk records are buffered there and flushed into the history at
+    invocation end (one epoch bump per invocation) instead of being written
+    chunk-by-chunk.
     """
 
     loop: LoopSpec
     history: Any = None          # core.history.LoopHistory | None
     user_data: Any = None
     weights: Optional[Sequence[float]] = None  # per-worker capability weights
+    telemetry: Any = None        # core.telemetry.LoopTelemetry | None
 
 
 class UserDefinedSchedule(Protocol):

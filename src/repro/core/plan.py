@@ -28,7 +28,7 @@ Array layout (all 1-D, length = number of chunks, dequeue order):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 

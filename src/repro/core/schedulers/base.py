@@ -14,17 +14,10 @@ schedulers use thread-private counters (paper Fig. 2 style).
 
 from __future__ import annotations
 
-import math
 from types import SimpleNamespace
-from typing import Any, Dict, List, Optional
+from typing import Any, Optional
 
-from repro.core.interface import (
-    Chunk,
-    LoopSpec,
-    SchedulerContext,
-    ceil_div,
-    three_op_from_six,
-)
+from repro.core.interface import Chunk, SchedulerContext, three_op_from_six
 from repro.core.history import ChunkRecord
 
 __all__ = ["SixOpBase", "CentralQueueSchedule", "as_three_op"]
@@ -66,6 +59,12 @@ class SixOpBase:
                       token: Any, elapsed: Optional[float]) -> None:
         if elapsed is not None:
             self.observe(state, worker, chunk, elapsed)
+        tel = getattr(state.ctx, "telemetry", None)
+        if tel is not None:
+            # telemetry buffers and flushes at invocation end — one history
+            # epoch bump per invocation instead of per chunk
+            tel.observe_chunk(worker, chunk, elapsed)
+            return
         hist = state.ctx.history
         if hist is not None:
             hist.record(

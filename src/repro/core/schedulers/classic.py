@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from types import SimpleNamespace
-from typing import Any, List, Optional
+from typing import Any, Optional
 
 import numpy as np
 

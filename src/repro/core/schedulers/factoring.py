@@ -24,7 +24,6 @@ begin/end hooks + history object — no side channels.
 from __future__ import annotations
 
 import math
-from types import SimpleNamespace
 from typing import Any, Dict, Optional
 
 from repro.core.interface import SchedulerContext, ceil_div

@@ -12,7 +12,6 @@ calls) and scalar-prefetches it into the kernel.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Union
 
 import jax

@@ -23,7 +23,7 @@ The chunk size is the UDS-schedulable parameter (cfg.scan_chunk).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

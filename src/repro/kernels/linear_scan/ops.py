@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -11,10 +11,7 @@ from repro.kernels.linear_scan.linear_scan import (
     linear_scan_scalar,
     linear_scan_vector,
 )
-from repro.kernels.linear_scan.ref import (
-    chunked_linear_attention,
-    linear_attention_ref,
-)
+from repro.kernels.linear_scan.ref import chunked_linear_attention
 
 __all__ = ["wkv", "ssd", "linear_scan_scalar", "linear_scan_vector"]
 

@@ -13,11 +13,10 @@ that uses it.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.models.config import ModelConfig
 
@@ -54,8 +53,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
 
 
 # A rule maps a logical axis name to a mesh axis (or tuple of axes, or None).
-from repro.sharding import (Rules, axis_rules, constrain, shardings_for,
-                            spec_for, _sizes)
+from repro.sharding import Rules, shardings_for, spec_for, _sizes
 
 
 def base_rules(mesh: Mesh) -> Rules:

@@ -25,9 +25,8 @@ the HLO text parse (assignment spec).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 __all__ = ["HW", "parse_collectives", "roofline_terms", "CollectiveStats"]
 

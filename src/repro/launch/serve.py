@@ -7,6 +7,17 @@ finish (EOS / max tokens) immediately dequeue the next request chunk, i.e.
 ``schedule(dynamic, 1)``; guided/factoring variants admit several requests
 per dequeue when the queue is deep.
 
+The loop is instrumented with :class:`~repro.core.telemetry.LoopTelemetry`:
+every chunk's **full wall time** — the prefill of each of its requests plus
+every decode step of their generations — is attributed to the slot that
+served it, fed back through ``stream.next`` (so within-invocation adaptive
+strategies like AWF-B rebalance admission mid-run), and flushed into the
+loop's ``LoopHistory`` when the stream closes.  The flush bumps the
+history's measured epoch, so a cached adaptive plan for this loop is
+invalidated and the *next* ``run()`` replans admission from the measured
+slot speeds (AWF timestep).  ``ServeLoop.history`` persists across calls —
+pass one in to persist across processes (it serializes with checkpoints).
+
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 16
 """
 
@@ -16,14 +27,15 @@ import argparse
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import LoopSpec, SchedulerContext, get_engine, make_scheduler
+from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
+                        SchedulerContext, get_engine, make_scheduler)
 from repro.launch.steps import make_serve_step
 from repro.models import get_model
 
@@ -39,10 +51,17 @@ class Request:
 
 
 class ServeLoop:
-    """Continuous batching over a fixed decode-slot count."""
+    """Continuous batching over a fixed decode-slot count.
+
+    ``history`` carries measured per-slot chunk times across ``run()``
+    invocations — the serving steady state's feedback channel.  After each
+    run, ``last_stats`` holds the telemetry summary (per-slot busy time,
+    tokens, tok/s, measured epoch).
+    """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
-                 scheduler: str = "dynamic", seed: int = 0):
+                 scheduler: str = "dynamic", seed: int = 0,
+                 history: Optional[LoopHistory] = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.slots = slots
@@ -51,6 +70,9 @@ class ServeLoop:
         self.params, _ = self.model.init(key, jnp.float32)
         self._decode = jax.jit(make_serve_step(self.model))
         self.sched_name = scheduler
+        self.loop_id = "serve"
+        self.history = history if history is not None else LoopHistory()
+        self.last_stats: Dict[str, Any] = {}
         # per-slot state: one cache per slot (batch=1) so admission is
         # independent; production batches slots into one cache
         self.caches = [self.model.init_decode(1, max_len, dtype=jnp.float32)[0]
@@ -69,27 +91,38 @@ class ServeLoop:
         """Schedule + serve all requests to completion."""
         sched = make_scheduler(self.sched_name)
         loop = LoopSpec(lb=0, ub=len(requests), num_workers=self.slots,
-                        loop_id="serve")
-        stream = get_engine().open_stream(sched, SchedulerContext(loop=loop))
+                        loop_id=self.loop_id)
+        telemetry = LoopTelemetry(self.history, loop_id=self.loop_id,
+                                  num_workers=self.slots)
+        stream = get_engine().open_stream(
+            sched, SchedulerContext(loop=loop, history=self.history),
+            telemetry=telemetry)
         queue: Deque[Request] = deque(requests)
         pending: Dict[int, Deque[Request]] = {s: deque()
                                               for s in range(self.slots)}
-        elapsed = {s: None for s in range(self.slots)}
+        # per-chunk wall time of the slot's *previous* chunk (prefill +
+        # all decode steps), consumed by the next dequeue and then cleared
+        # — never a stale prefill-only value
+        elapsed: Dict[int, Optional[float]] = {s: None
+                                               for s in range(self.slots)}
         results: Dict[int, List[int]] = {}
         slots_open = set(range(self.slots))
         exhausted = set()
 
         while len(results) < len(requests):
-            # admission: idle slots dequeue request chunks via the UDS
+            # admission: idle slots dequeue request chunks via the UDS,
+            # reporting the measured wall time of their previous chunk
             for s in list(slots_open):
                 if s in self.active or pending[s]:
                     continue
                 if s in exhausted:
                     continue
                 chunk = stream.next(s, elapsed[s])
+                elapsed[s] = None              # consumed by this dequeue
                 if chunk is None:
                     exhausted.add(s)
                     continue
+                telemetry.begin(s, chunk)
                 for i in range(chunk.start, chunk.stop):
                     pending[s].append(requests[i])
             progressed = False
@@ -98,28 +131,40 @@ class ServeLoop:
                     req = pending[s].popleft()
                     t0 = time.perf_counter()
                     self._prefill_into(s, req)
-                    elapsed[s] = time.perf_counter() - t0
+                    telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
                     self.active[s] = req
                     progressed = True
             # one decode step across active slots
             done_slots = []
             for s, req in list(self.active.items()):
                 last = req.generated[-1]
+                t0 = time.perf_counter()
                 tok, cache = self._decode(
                     self.params, {"tokens": jnp.asarray([[last]])},
                     self.caches[s])
                 self.caches[s] = cache
                 req.generated.append(int(tok[0]))
+                telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
                 progressed = True
                 if len(req.generated) >= req.max_new:
                     results[req.rid] = req.generated
                     done_slots.append(s)
             for s in done_slots:
                 del self.active[s]
+                if not pending[s]:
+                    # the chunk is fully served: close its ledger and hand
+                    # its wall time to the slot's next dequeue
+                    elapsed[s] = telemetry.end(s)
             if not progressed:
                 break
-        stream.close()
+        stream.close()        # flushes telemetry -> history epoch bump
+        self.last_stats = telemetry.summary()
         return results
+
+    def measured_epoch(self) -> int:
+        """Measured-invocation count for the serve loop — the plan-cache
+        epoch adaptive admission schedules key on."""
+        return self.history.measured_invocations(self.loop_id)
 
 
 def main() -> None:
@@ -146,7 +191,9 @@ def main() -> None:
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s) under schedule({loop.sched_name})")
+          f"({toks/dt:.1f} tok/s) under schedule({loop.sched_name}); "
+          f"measured epoch {loop.measured_epoch()}, "
+          f"imbalance {loop.last_stats.get('imbalance')}")
 
 
 if __name__ == "__main__":

@@ -14,8 +14,6 @@ Memory-critical design choices (each is a §Perf lever):
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -149,13 +147,13 @@ def make_train_step(model: Model, opt_update: Callable,
             # (aux = E * sum_e f_e^2; f = p approximation documented)
             f = loads.mean(axis=0)
             aux = cfg.num_experts * jnp.sum(f * f)
-        return ce + aux_loss_weight * aux, (ce, aux, loads)
+        return ce + aux_loss_weight * aux, (ce, aux, loads, cnt)
 
     def microbatch_grads(params, batch):
         if num_microbatches == 1:
-            grads, (ce, aux, loads) = jax.grad(
+            grads, (ce, aux, loads, cnt) = jax.grad(
                 loss_fn, has_aux=True)(params, batch)
-            return grads, ce, aux
+            return grads, ce, aux, cnt
         # static equal split (UDS plans sizes host-side by permuting work
         # into the microbatches; compiled shapes stay uniform)
         def split(v):
@@ -170,24 +168,28 @@ def make_train_step(model: Model, opt_update: Callable,
               for k, v in batch.items()}
 
         def one(carry, mbi):
-            g_acc, ce_acc, aux_acc = carry
-            grads, (ce, aux, _) = jax.grad(loss_fn, has_aux=True)(params, mbi)
+            g_acc, ce_acc, aux_acc, cnt_acc = carry
+            grads, (ce, aux, _, cnt) = jax.grad(
+                loss_fn, has_aux=True)(params, mbi)
             g_acc = jax.tree.map(jnp.add, g_acc, grads)
-            return (g_acc, ce_acc + ce, aux_acc + aux), None
+            return (g_acc, ce_acc + ce, aux_acc + aux, cnt_acc + cnt), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (g, ce, aux), _ = jax.lax.scan(
-            one, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+        (g, ce, aux, cnt), _ = jax.lax.scan(
+            one, (zeros, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), mb)
         inv = 1.0 / num_microbatches
-        return jax.tree.map(lambda x: x * inv, g), ce * inv, aux * inv
+        return jax.tree.map(lambda x: x * inv, g), ce * inv, aux * inv, cnt
 
     def train_step(params, opt_state, step, batch):
-        grads, ce, aux = microbatch_grads(params, batch)
+        grads, ce, aux, cnt = microbatch_grads(params, batch)
         updates, opt_state, om = opt_update(grads, opt_state, params, step)
         params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
                           ).astype(p.dtype), params, updates)
-        metrics = {"loss": ce, "aux_loss": aux, "step": step + 1, **om}
+        # "tokens": labelled (non-masked) tokens this step — the measure
+        # stage's tok/s numerator, threaded out for the telemetry loop
+        metrics = {"loss": ce, "aux_loss": aux, "step": step + 1,
+                   "tokens": cnt, **om}
         return params, opt_state, metrics
 
     return train_step

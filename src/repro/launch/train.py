@@ -12,27 +12,24 @@ TPU pods by picking a production mesh and full config:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import LoopHistory, make_scheduler
+from repro.core import LoopHistory, LoopTelemetry, make_scheduler
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import make_mesh, rules_for, shardings_for
 from repro.launch.steps import (apply_microbatch_plan, make_train_step,
                                 opt_state_specs)
 from repro.models import get_model
-from repro.models.moe import moe_capacity
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
 from repro.sched import (CapacityPlanner, StragglerMitigator,
                          pack_with_scheduler, plan_microbatch_permutation)
 from repro.sharding import axis_rules
-from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.checkpoint import AsyncCheckpointer
 
 __all__ = ["TrainLoop", "main"]
 
@@ -49,6 +46,13 @@ class TrainLoop:
         self.batch, self.seq_len = batch, seq_len
         self.model = get_model(cfg)
         self.history = LoopHistory()
+        # the measure stage: per-step wall time + token counts flushed into
+        # the history under "train_step" — each flush bumps the measured
+        # epoch, so adaptive schedules planning against this history replan
+        # from real step times (and the packing history's own records feed
+        # the AWF document packer)
+        self.telemetry = LoopTelemetry(self.history, loop_id="train_step",
+                                       num_workers=1)
         self.pack_sched = make_scheduler(scheduler)
         self.num_microbatches = num_microbatches
         self.capacity = (CapacityPlanner(cfg, seq_len) if cfg.is_moe else None)
@@ -132,9 +136,14 @@ class TrainLoop:
                     jnp.asarray(self.step, jnp.int32), batch)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
-                self.mitigator.observe_step({0: dt})
-                if self.capacity is not None:
-                    pass  # loads available via metrics extension
+                tokens = int(metrics.get("tokens", self.batch * self.seq_len))
+                # measure: one record per step (host 0, size = tokens),
+                # flushed immediately so each step is one measured epoch
+                self.telemetry.record_chunk(0, 0, max(tokens, 1), dt,
+                                            tokens=tokens)
+                self.telemetry.flush()
+                self.mitigator.observe_step({0: dt},
+                                            host_tokens={0: max(tokens, 1)})
                 losses.append(loss)
                 self.step += 1
                 if self.ckpt and self.step % 10 == 0:
@@ -142,7 +151,8 @@ class TrainLoop:
                                                "opt": self.opt_state})
                 if self.step % log_every == 0:
                     print(f"step {self.step:5d} loss {loss:.4f} "
-                          f"({dt*1e3:.0f} ms)", flush=True)
+                          f"({dt*1e3:.0f} ms, {tokens/max(dt,1e-9):.0f} "
+                          f"tok/s)", flush=True)
         if self.ckpt:
             self.ckpt.wait()
         return losses

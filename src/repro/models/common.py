@@ -17,16 +17,13 @@ Conventions
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import ModelConfig
 from repro.sharding import constrain
 
 __all__ = [

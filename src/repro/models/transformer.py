@@ -11,27 +11,15 @@ One implementation, feature-flagged by ``ModelConfig``:
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.common import (
-    ParamBuilder,
-    apply_mrope,
-    apply_rope,
-    attention,
-    decode_attention,
-    make_rope,
-    mlp_gelu,
-    mlp_swiglu,
-    rms_norm,
-    sinusoidal_positions,
-)
+from repro.models.common import (ParamBuilder, apply_mrope, apply_rope,
+                                 decode_attention, make_rope, mlp_gelu,
+                                 mlp_swiglu, rms_norm, sinusoidal_positions)
 from repro.models.moe import moe_ffn
 from repro.sharding import constrain, current_rules
 

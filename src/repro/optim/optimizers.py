@@ -17,8 +17,7 @@ apply verbatim (ZeRO-1 comes free from the 2-D param sharding).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,8 @@ team).
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
-import jax
 
 from repro.launch.mesh import make_mesh
 

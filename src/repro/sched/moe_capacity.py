@@ -21,7 +21,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import LoopHistory, LoopSpec, get_engine
+from repro.core import LoopSpec, get_engine
 from repro.core.schedulers import WeightedFactoring
 from repro.models.config import ModelConfig
 from repro.models.moe import moe_buffer_capacity, moe_capacity

@@ -18,7 +18,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import ChunkRecord, LoopHistory, LoopSpec, get_engine
+from repro.core import LoopHistory, LoopSpec, LoopTelemetry, get_engine
 from repro.core.schedulers import WeightedFactoring
 
 __all__ = ["StragglerMitigator"]
@@ -33,20 +33,28 @@ class StragglerMitigator:
 
     def __post_init__(self):
         self.history = LoopHistory()
+        self.telemetry = LoopTelemetry(self.history, loop_id=self.loop_id,
+                                       num_workers=self.num_hosts)
         self._step = 0
 
     # ------------------------------------------------------------ measure
     def observe_step(self, host_times: Dict[int, float],
                      host_tokens: Optional[Dict[int, int]] = None) -> None:
-        """Record one training step's per-host wall times (through
-        ``record`` so the history's measured-epoch counter advances)."""
+        """Record one training step's per-host wall times through the
+        telemetry recorder: each step flushes as one measured invocation,
+        advancing the history epoch that invalidates cached adaptive
+        plans keyed on this mitigator's history."""
         self.history.open_invocation(self.loop_id)
         for h, t in host_times.items():
             n = (host_tokens or {}).get(h, 1)
-            self.history.record(self.loop_id,
-                                ChunkRecord(worker=h, start=0, stop=n,
-                                            elapsed=t))
+            self.telemetry.record_chunk(h, 0, n, t, tokens=n)
+        self.telemetry.flush()
         self._step += 1
+
+    def epoch(self) -> int:
+        """Measured epoch — how many flushed step observations the plan
+        cache has seen for this loop."""
+        return self.telemetry.epoch()
 
     # ------------------------------------------------------------- detect
     def stragglers(self) -> List[int]:

@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import LoopSpec, SchedulerContext, get_engine, plan_waves
 from repro.core.interface import three_op_from_six
-from repro.core.schedulers import StaticChunk, GuidedSS, as_three_op
+from repro.core.schedulers import StaticChunk, GuidedSS
 from repro.core import declare
 from repro.core.declare import (ARG, OMP_CHUNKSZ, OMP_INCR, OMP_LB,
                                 OMP_LB_CHUNK, OMP_NUM_WORKERS, OMP_UB,

@@ -1,7 +1,6 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True on the CPU host;
 TPU is the compile target).  Shape/dtype sweeps via hypothesis."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,7 +14,6 @@ from repro.kernels.sched_matmul.ops import (scheduled_matmul,
                                             tile_order_from_plan)
 from repro.kernels.sched_matmul.ref import sched_matmul_ref
 from repro.kernels.flash_attention.ops import mha
-from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.linear_scan.ops import ssd, wkv
 from repro.kernels.linear_scan.ref import linear_attention_ref
 

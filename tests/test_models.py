@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.launch.steps import chunked_softmax_ce, head_weights
+from repro.launch.steps import chunked_softmax_ce
 from repro.models import get_model
 
 KEY = jax.random.PRNGKey(0)
@@ -127,7 +127,7 @@ def test_ssm_prefill_decode_matches_forward(arch):
 
 
 def test_blockwise_attention_equals_full():
-    from repro.models.common import attention, blockwise_attention
+    from repro.models.common import attention
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)

@@ -11,7 +11,7 @@ from repro.core import (LoopSpec, SchedulerContext, get_engine,
                         LoopHistory)
 from repro.core.interface import ceil_div, chunks_cover
 from repro.core.schedulers import (FAC2, AWF, GuidedSS, SelfScheduling,
-                                   StaticChunk, TrapezoidSS, as_three_op)
+                                   TrapezoidSS)
 
 
 def dequeue_all(sched, n, p, loop_id="t"):

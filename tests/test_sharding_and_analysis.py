@@ -139,7 +139,6 @@ def test_small_mesh_train_lowering_has_expected_collectives():
 
 def test_padded_attention_matches_unpadded_under_mesh():
     """Head padding (indivisible head counts) must not change results."""
-    import dataclasses
     import numpy as np
     from repro.configs import get_smoke_config
     from repro.models import get_model

@@ -1,15 +1,13 @@
 """Substrate tests: optimizers, schedules, packing, microbatching, MoE
 capacity planning, checkpointing, fault tolerance, elasticity."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim import (adafactor, adamw, cosine_schedule, make_optimizer,
-                         wsd_schedule)
+from repro.optim import adafactor, make_optimizer, wsd_schedule
 from repro.optim.specs import opt_state_specs
 
 

@@ -1,10 +1,7 @@
 """End-to-end behaviour tests: real training runs on reduced configs, with
 UDS scheduling, checkpoint/restart, and serving."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 
