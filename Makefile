@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-validate lint bench bench-plan bench-gate deps deps-dev
+.PHONY: test test-fast test-validate lint smoke bench bench-plan bench-gate deps deps-dev
 
 test:           ## tier-1 verify (full suite, fail-fast)
 	$(PYTHON) -m pytest -x -q
@@ -17,6 +17,16 @@ test-validate:  ## tier-1 with plan validation on
 
 lint:           ## ruff over the whole tree (rule set in ruff.toml)
 	ruff check .
+
+smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job)
+	$(PYTHON) examples/quickstart.py
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 4
+	$(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 4 --seq-len 64 --scheduler "guided,4"
+	REPRO_UDS_MODULES=examples.uds_blocks PYTHONPATH=src:. \
+	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 4 --seq-len 64 --scheduler "uds:blocks,8"
 
 bench:          ## full benchmark harness (CSV stdout, JSON to benchmarks/results/)
 	$(PYTHON) benchmarks/run.py

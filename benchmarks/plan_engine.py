@@ -44,10 +44,10 @@ SCHEDULERS = ("guided", "fac2", "tss", "static", "dynamic_64", "wf2",
 
 
 def _make(name):
-    from repro.core import make_scheduler
+    from repro.core import resolve
     if name == "dynamic_64":
-        return make_scheduler("dynamic", chunk=64)
-    return make_scheduler(name)
+        return resolve("dynamic,64")
+    return resolve(name)
 
 
 def _timeit(fn, n):

@@ -40,13 +40,13 @@ def _timeit(fn, n=5):
 
 # ---------------------------------------------------------------- tables
 def chunk_tables() -> list:
-    from repro.core import plan_schedule, make_scheduler
+    from repro.core import plan_schedule, resolve
     rows = []
     out = {}
     for name in ("static", "dynamic", "guided", "tss", "fac2", "wf2",
                  "awf_b", "af", "rand", "fsc"):
-        sched = make_scheduler(name)
-        us = _timeit(lambda: plan_schedule(make_scheduler(name), 1000, 8))
+        sched = resolve(name)
+        us = _timeit(lambda: plan_schedule(resolve(name), 1000, 8))
         plan = plan_schedule(sched, 1000, 8)
         sizes = [c.size for c in plan.chunks]
         out[name] = sizes[:12]
@@ -87,7 +87,7 @@ def interface_equiv() -> list:
 
 def makespan() -> list:
     """Scheduler × workload matrix (virtual-time makespans, P=8)."""
-    from repro.core import LoopSpec, make_scheduler, simulate_loop
+    from repro.core import LoopSpec, resolve, simulate_loop
     rng = np.random.default_rng(0)
     n, p = 2000, 8
     workloads = {
@@ -105,7 +105,7 @@ def makespan() -> list:
     for wname, costs in workloads.items():
         table[wname] = {}
         for sname in scheds:
-            res = simulate_loop(make_scheduler(sname),
+            res = simulate_loop(resolve(sname),
                                 LoopSpec(0, n, num_workers=p,
                                          loop_id=f"{wname}-{sname}"),
                                 costs, overhead=1e-4)
@@ -121,14 +121,14 @@ def makespan() -> list:
 def overhead() -> list:
     """Per-dequeue cost of each scheduler implementation (host-side),
     measured through the engine's ScheduleStream."""
-    from repro.core import LoopSpec, SchedulerContext, get_engine, make_scheduler
+    from repro.core import LoopSpec, SchedulerContext, get_engine, resolve
     rows = []
     for name in ("static", "dynamic", "guided", "fac2", "awf_c", "af"):
         loop = LoopSpec(lb=0, ub=10_000, num_workers=8, loop_id=name)
 
         def drain():
             stream = get_engine().open_stream(
-                make_scheduler(name), SchedulerContext(loop=loop))
+                resolve(name), SchedulerContext(loop=loop))
             w = 0
             while stream.next(w % 8, 0.001) is not None:
                 w += 1
@@ -143,7 +143,6 @@ def overhead() -> list:
 
 
 def packing() -> list:
-    from repro.core import make_scheduler
     from repro.data import pack_documents
     from repro.sched import pack_with_scheduler
     rng = np.random.default_rng(0)
@@ -152,7 +151,7 @@ def packing() -> list:
         docs = [rng.integers(1, 100, size=int(l)).astype(np.int32)
                 for l in np.clip(rng.lognormal(5.0, sigma, 128), 8, 2048)]
         ff = pack_documents(docs, 8, 2048).fill_fraction
-        uds = pack_with_scheduler(make_scheduler("static_steal", chunk=1),
+        uds = pack_with_scheduler("static_steal,1",
                                   docs, 8, 2048).fill_fraction
         rows.append((f"packing/sigma={sigma}", 0.0,
                      f"first_fit={ff:.3f};uds={uds:.3f}"))

@@ -42,13 +42,13 @@ def executor_steady_state(n_iter: int = N_ITER, workers: int = WORKERS,
     """plan -> execute_plan -> flush, ``steps`` times, under skewed speeds."""
     import numpy as np
     from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
-                            execute_plan, make_scheduler)
+                            execute_plan, resolve)
     from repro.core.engine import PlanEngine
 
     eng = PlanEngine()
     hist = LoopHistory()
     loop = LoopSpec(0, n_iter, num_workers=workers, loop_id="serve_adapt")
-    sched = make_scheduler("awf")
+    sched = resolve("awf")
     speeds = [1.0] * workers
     speeds[SLOW_WORKER] = SLOW_SPEED
     costs = np.ones(n_iter)

@@ -1,0 +1,51 @@
+"""A paper-Fig.-2 user-defined schedule, registered for by-name use.
+
+The declare-style ``mystatic`` of the paper (static chunking written by
+the user, state in a loop record passed as ``omp_arg0``), declared with a
+``make_args`` factory so the unified ScheduleSpec registry can conjure a
+fresh loop record whenever the schedule is selected *by name* — e.g. from
+a CLI entry point::
+
+    REPRO_UDS_MODULES=examples.uds_blocks \
+        python -m repro.launch.train --arch qwen2.5-3b --smoke --steps 2 \
+        --scheduler "uds:blocks,8"
+
+(``REPRO_UDS_MODULES`` is the late registration point: comma-separated
+modules imported before the first registry lookup.)
+"""
+
+from repro.core import declare
+
+
+class LoopRecord:
+    """The user's loop record (the paper's ``uds_data`` / ``&lr``)."""
+
+    next = 0
+    ub = 0
+    chunk = 1
+
+
+def my_init(lb, ub, inc, chunk, nw, lr):
+    lr.next = lb
+    lr.ub, lr.chunk = ub, max(chunk, 1)
+
+
+def my_next(lower, upper, step, lr):
+    if lr.next >= lr.ub:
+        return 0                      # the paper's "return 0"
+    lower.set(lr.next)
+    upper.set(min(lr.next + lr.chunk, lr.ub))
+    lr.next = upper.value
+    return 1
+
+
+if "blocks" not in declare.registered_schedules():
+    declare.declare_schedule(
+        "blocks", arguments=1,
+        init=declare.call(my_init, declare.OMP_LB, declare.OMP_UB,
+                          declare.OMP_INCR, declare.OMP_CHUNKSZ,
+                          declare.OMP_NUM_WORKERS, declare.ARG(0)),
+        next=declare.call(my_next, declare.OMP_LB_CHUNK,
+                          declare.OMP_UB_CHUNK, declare.OMP_CHUNK_INCR,
+                          declare.ARG(0)),
+        make_args=lambda: (LoopRecord(),))

@@ -6,6 +6,9 @@ A standard interface for user-defined scheduling (UDS), reproduced from
 JAX/TPU training & inference framework:
 
 * ``interface``    — the six-op / reduced three-op UDS protocol
+* ``spec``         — ScheduleSpec: the unified schedule clause (OpenMP-style
+                     parsing, one registry, ``resolve``, ``runtime``
+                     late-binding via $REPRO_SCHEDULE)
 * ``declare``      — declare-style specification (paper §4.2)
 * ``lambda_style`` — lambda-style specification (paper §4.1)
 * ``history``      — cross-invocation measurement store (paper §3)
@@ -41,6 +44,15 @@ from repro.core.engine import (
 from repro.core.executor import LoopResult, execute_plan, run_loop, simulate_loop
 from repro.core.wave import plan_schedule, plan_waves
 from repro.core.schedulers import SCHEDULER_FACTORIES, make_scheduler
+from repro.core.spec import (
+    ScheduleSpec,
+    SpecLike,
+    describe,
+    register_schedule,
+    registered_names,
+    resolve,
+)
+from repro.core.spec import parse as parse_schedule
 
 __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
@@ -51,5 +63,7 @@ __all__ = [
     "PlanEngine", "ScheduleStream", "get_engine", "set_engine",
     "LoopResult", "execute_plan", "run_loop", "simulate_loop",
     "plan_schedule", "plan_waves",
+    "ScheduleSpec", "SpecLike", "parse_schedule", "resolve", "describe",
+    "register_schedule", "registered_names",
     "SCHEDULER_FACTORIES", "make_scheduler",
 ]

@@ -125,20 +125,46 @@ class DeclaredSchedule:
     init: Optional[_BoundCall]
     next: _BoundCall
     fini: Optional[_BoundCall]
+    # Optional per-use argument factory: conjures fresh omp_argN values
+    # (e.g. a new loop record) when the schedule is instantiated *by name*
+    # through the unified ScheduleSpec registry ("uds:name") rather than
+    # at a use site that passes the arguments itself.
+    make_args: Optional[Callable[[], Sequence[Any]]] = None
 
 
 def declare_schedule(name: str, *, arguments: int = 0,
                      init: Optional[_BoundCall] = None,
                      next: _BoundCall = None,
                      fini: Optional[_BoundCall] = None,
+                     make_args: Optional[Callable[[], Sequence[Any]]] = None,
                      replace: bool = False) -> DeclaredSchedule:
     if next is None:
         raise ValueError("a UDS must define the next (dequeue) operation")
     if name in _REGISTRY and not replace:
         raise ValueError(f"schedule {name!r} already declared")
-    decl = DeclaredSchedule(name, arguments, init, next, fini)
+    decl = DeclaredSchedule(name, arguments, init, next, fini, make_args)
+    # mirror first: it validates the name against the unified registry
+    # (builtin shadowing), and must not leave a half-registered schedule
+    _mirror_into_spec_registry(decl)
     _REGISTRY[name] = decl
     return decl
+
+
+def _mirror_into_spec_registry(decl: DeclaredSchedule) -> None:
+    """Absorb a declaration into the unified ScheduleSpec registry so it
+    is reachable by name (``resolve("uds:<name>")``) from every substrate."""
+    from repro.core import spec as _spec
+
+    def factory(*user_args: Any, chunk: Optional[int] = None):
+        if not user_args and decl.make_args is not None:
+            user_args = tuple(decl.make_args())
+        return _DeclaredAdapter(decl, user_args, chunk=chunk)
+
+    # replace=True only replaces same-source entries: the registry itself
+    # rejects shadowing a builtin / user / template name, atomically
+    # (this runs before the declaration enters the declare registry)
+    _spec.register_schedule(decl.name, source="declare",
+                            chunk_param="chunk", replace=True)(factory)
 
 
 def registered_schedules() -> List[str]:
@@ -153,13 +179,15 @@ class _DeclaredAdapter:
     functions into the standard loop transformation pattern.
     """
 
-    def __init__(self, decl: DeclaredSchedule, user_args: Sequence[Any]):
+    def __init__(self, decl: DeclaredSchedule, user_args: Sequence[Any],
+                 chunk: Optional[int] = None):
         if len(user_args) != decl.arguments:
             raise TypeError(
                 f"schedule {decl.name!r} declared with arguments"
                 f"({decl.arguments}) but used with {len(user_args)}")
         self._decl = decl
         self._args = list(user_args)
+        self.chunk = chunk      # spec chunksize, overrides loop.chunk
         self.name = decl.name
 
     def plan_key(self) -> None:
@@ -192,6 +220,8 @@ class _DeclaredAdapter:
     # -- three-op interface -------------------------------------------------
     def start(self, ctx: SchedulerContext) -> Any:
         loop = ctx.loop
+        if self.chunk is not None:
+            loop = dataclasses.replace(loop, chunk=self.chunk)
         if self._decl.init is not None:
             _set_thread_num(0)
             self._decl.init.fn(*self._resolve(self._decl.init, loop, {}))
@@ -223,8 +253,16 @@ class _DeclaredAdapter:
 
 
 def use_schedule(name: str, *user_args: Any) -> _DeclaredAdapter:
-    """``schedule(mystatic(&lr))`` — instantiate a declared schedule."""
+    """``schedule(mystatic(&lr))`` — instantiate a declared schedule.
+
+    When called with no arguments and the declaration supplied
+    ``make_args``, fresh arguments are conjured from it (the by-name
+    late-binding path the unified ScheduleSpec registry uses).
+    """
     if name not in _REGISTRY:
         raise KeyError(f"no schedule declared under name {name!r}; "
                        f"known: {registered_schedules()}")
-    return _DeclaredAdapter(_REGISTRY[name], user_args)
+    decl = _REGISTRY[name]
+    if not user_args and decl.make_args is not None and decl.arguments:
+        user_args = tuple(decl.make_args())
+    return _DeclaredAdapter(decl, user_args)

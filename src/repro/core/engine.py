@@ -64,6 +64,7 @@ from repro.core.history import LoopHistory
 from repro.core.interface import (Chunk, LoopSpec, SchedulerContext,
                                   UserDefinedSchedule, ceil_div)
 from repro.core.plan import PlanProvenance, SchedulePlan
+from repro.core.spec import ScheduleSpec, SpecLike, resolve
 
 __all__ = [
     "PlanEngine",
@@ -149,12 +150,22 @@ def _freeze(v: Any) -> Any:
 def scheduler_plan_key(sched: Any) -> Optional[tuple]:
     """Hashable identity of a scheduler *configuration* (not instance).
 
-    Two instances with the same class and the same public parameters plan
-    identically (schedulers are deterministic state machines over their
-    parameters + context), so they share cache entries.  A scheduler may
-    override this by defining ``plan_key() -> tuple``.  Returns None for
-    schedulers carrying unhashable state (e.g. lambda-style closures) —
-    such schedules are planned fresh every time.
+    Priority order:
+
+    1. an explicit ``plan_key()`` override (lambda-/declare-style UDS
+       return None here: user closures are never plan-cacheable);
+    2. the :class:`~repro.core.spec.ScheduleSpec` the scheduler was
+       resolved from (``sched._spec``) — the schedule-clause identity, so
+       two structurally-equal specs built independently share cache
+       entries regardless of instance identity.  The frozen *live* public
+       parameters stay part of the key, so mutating a resolved scheduler
+       after the fact cannot silently hit the stale spec's plan;
+    3. otherwise the class + frozen public constructor parameters
+       (schedulers are deterministic state machines over their parameters
+       + context).
+
+    Returns None for schedulers carrying unhashable state (e.g.
+    lambda-style closures) — such schedules are planned fresh every time.
     """
     fn = getattr(sched, "plan_key", None)
     if callable(fn):
@@ -165,6 +176,13 @@ def scheduler_plan_key(sched: Any) -> Optional[tuple]:
             if not k.startswith("_")))
     except _Unfreezable:
         return None
+    spec = getattr(sched, "_spec", None)
+    if spec is not None and isinstance(spec, ScheduleSpec):
+        try:
+            hash(spec)
+            return ("spec", spec, params)
+        except TypeError:
+            pass        # non-scalar spec params: fall through
     return (type(sched).__module__, type(sched).__qualname__, params)
 
 
@@ -681,20 +699,19 @@ class PlanEngine:
 _register_builtin_compilers()
 
 
-def plan_worker_order(sched: Any, n: int, *, num_workers: int = 2,
+def plan_worker_order(sched: SpecLike, n: int, *, num_workers: int = 2,
                       loop_id: str = "tiles",
                       engine: Optional["PlanEngine"] = None,
                       **sched_params: Any) -> np.ndarray:
-    """Worker-major tile-visit order for ``sched`` (name or instance) over
-    [0, n) — the shared front-end of the Pallas kernel table plumbing
+    """Worker-major tile-visit order for ``sched`` (a ScheduleSpec, clause
+    string like ``"guided,4"``, or scheduler instance) over [0, n) — the
+    shared front-end of the Pallas kernel table plumbing
     (``sched_matmul.plan_tile_order`` / ``flash_attention
     .plan_q_block_order``).  Each of the ``num_workers`` kernel lanes
     (default 2 = TPU megacore) gets its worker's contiguous tile run, so
     the lanes inherit the schedule's load balance.  Plans are cached by
-    the engine across launches."""
-    if isinstance(sched, str):
-        from repro.core.schedulers import make_scheduler
-        sched = make_scheduler(sched, **sched_params)
+    the engine across launches, keyed on the spec."""
+    sched = resolve(sched, **sched_params)
     eng = engine if engine is not None else get_engine()
     loop = LoopSpec(lb=0, ub=n, num_workers=num_workers, loop_id=loop_id)
     order = eng.plan(sched, loop).tile_order(n, order="worker")

@@ -34,6 +34,7 @@ elements of an existing UDS template for a specific loop" — paper §4.1):
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import threading
 from typing import Any, Callable, Dict, List, Optional
@@ -141,8 +142,33 @@ def schedule_template(name: str, *, init: Optional[Callable] = None,
     if name in _TEMPLATES and not replace:
         raise ValueError(f"template {name!r} already declared")
     tmpl = _Template(name, init, dequeue, finalize, uds_data)
+    # mirror first: it validates the name against the unified registry
+    # (builtin shadowing), and must not leave a half-registered template
+    _mirror_into_spec_registry(tmpl)
     _TEMPLATES[name] = tmpl
     return tmpl
+
+
+def _mirror_into_spec_registry(tmpl: _Template) -> None:
+    """Absorb a template into the unified ScheduleSpec registry so it is
+    reachable by name (``resolve("uds:<name>[,chunk]")``) everywhere."""
+    from repro.core import spec as _spec
+
+    def factory(*, chunk=None, **overrides):
+        # chunk is keyword-only: it must arrive through the spec's
+        # validated chunksize (positional clause params are rejected for
+        # templates).  A clause denotes a *fresh* schedule instance, so
+        # the template's uds_data seed is copied per resolution — state
+        # must not leak between independent loops selected by name.
+        if "uds_data" not in overrides and tmpl.uds_data is not None:
+            overrides["uds_data"] = copy.deepcopy(tmpl.uds_data)
+        return UDS(template=tmpl.name, chunk=chunk, **overrides)
+
+    # replace=True only replaces same-source entries: the registry itself
+    # rejects shadowing a builtin / user / declare name, atomically
+    # (this runs before the template enters the template registry)
+    _spec.register_schedule(tmpl.name, source="template",
+                            chunk_param="chunk", replace=True)(factory)
 
 
 def registered_templates() -> List[str]:

@@ -28,8 +28,10 @@ __all__ = [
     "SCHEDULER_FACTORIES", "make_scheduler",
 ]
 
-# Factory registry: the framework-facing way to choose a strategy by name
-# (what a config file's ``scheduler: fac2`` resolves through).
+# Builtin factory table.  This is ABSORBED into the unified ScheduleSpec
+# registry (``repro.core.spec``) at import time; it is kept as a module
+# attribute only for backward compatibility — new code selects strategies
+# through ``repro.core.spec.resolve`` / ``@register_schedule``.
 SCHEDULER_FACTORIES: Dict[str, Callable[..., Any]] = {
     "static": StaticChunk,
     "static_block": StaticBlock,
@@ -57,7 +59,27 @@ SCHEDULER_FACTORIES: Dict[str, Callable[..., Any]] = {
 
 
 def make_scheduler(name: str, **params: Any):
-    if name not in SCHEDULER_FACTORIES:
-        raise KeyError(f"unknown scheduler {name!r}; "
-                       f"known: {sorted(SCHEDULER_FACTORIES)}")
-    return SCHEDULER_FACTORIES[name](**params)
+    """DEPRECATED shim — use ``repro.core.spec.resolve`` instead.
+
+    Delegates to the unified ScheduleSpec registry: unknown names raise a
+    ``KeyError`` listing every registered schedule (builtins AND
+    declare-/lambda-style UDS registrations), and clause-expressible
+    parameters gain a spec identity so their plans share the engine cache
+    with clause-string selections (``make_scheduler("guided", chunk=4)``
+    and ``resolve("guided,4")`` hit the same cached plan).  Spec
+    validation applies on that path (e.g. ``chunk`` must be >= 1);
+    parameters the clause cannot express (arbitrary objects) construct
+    directly with no spec identity.
+    """
+    from repro.core import spec as _spec
+    entry = _spec.lookup(name)          # rich unknown-name error
+
+    def clause_expressible(v: Any) -> bool:
+        if isinstance(v, (dict, list, tuple)):
+            return all(isinstance(x, (int, float)) for x in
+                       (v.values() if isinstance(v, dict) else v))
+        return v is None or isinstance(v, (bool, int, float, str))
+
+    if all(clause_expressible(v) for v in params.values()):
+        return _spec.resolve(_spec.ScheduleSpec.make(name, **params))
+    return entry.factory(**params)

@@ -33,10 +33,16 @@ class SixOpBase:
     their cache key so new measurements invalidate cached plans.  Custom
     history-reading schedulers must set it, or their plans may be served
     stale from the cache.
+
+    ``spec_chunk_param`` names the constructor keyword a schedule-clause
+    chunksize (``"name,N"``) maps to — the knowledge lives with the class
+    so the unified registry never guesses.  ``None`` means the strategy
+    takes no chunksize and the clause form is rejected.
     """
 
     name: str = "uds"
     adaptive: bool = False
+    spec_chunk_param: Optional[str] = "chunk"
 
     # -- operations subclasses typically override -------------------------
     def init(self, ctx: SchedulerContext) -> Any:

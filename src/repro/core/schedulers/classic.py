@@ -68,6 +68,7 @@ class StaticBlock(StaticChunk):
     """OpenMP ``schedule(static)``: one block of ceil(N/P) per thread."""
 
     name = "static_block"
+    spec_chunk_param = None
 
     def __init__(self):
         super().__init__(chunk=None)
@@ -77,6 +78,7 @@ class StaticCyclic(StaticChunk):
     """``schedule(static, 1)``: iteration i -> thread i mod P."""
 
     name = "static_cyclic"
+    spec_chunk_param = None
 
     def __init__(self):
         super().__init__(chunk=1)
@@ -122,6 +124,7 @@ class TrapezoidSS(CentralQueueSchedule):
     """
 
     name = "tss"
+    spec_chunk_param = None
 
     def __init__(self, first: Optional[int] = None, last: int = 1):
         self.first = first
@@ -150,6 +153,7 @@ class RandSS(CentralQueueSchedule):
     libGOMP.  Deterministic under ``seed`` (required for SPMD replay)."""
 
     name = "rand"
+    spec_chunk_param = "min_chunk"
 
     def __init__(self, min_chunk: int = 1, max_chunk: Optional[int] = None,
                  seed: int = 0):
@@ -184,6 +188,7 @@ class FixedSizeChunking(CentralQueueSchedule):
     """
 
     name = "fsc"
+    spec_chunk_param = None
 
     def __init__(self, overhead: float = 1e-5, sigma: float = 1e-4):
         self.h = overhead
@@ -211,6 +216,7 @@ class TrapezoidFactoring(CentralQueueSchedule):
     from the DLS literature the paper's taxonomy covers."""
 
     name = "tfss"
+    spec_chunk_param = None
 
     def __init__(self, first: Optional[int] = None, last: int = 1):
         self.first = first
@@ -245,6 +251,7 @@ class Taper(CentralQueueSchedule):
     Non-adaptive variant: (mu, sigma) are user-supplied estimates."""
 
     name = "taper"
+    spec_chunk_param = "min_chunk"
 
     def __init__(self, mu: float = 1.0, sigma: float = 0.0,
                  alpha: float = 1.3, min_chunk: int = 1):

@@ -37,6 +37,7 @@ class FAC2(CentralQueueSchedule):
     schedules half of what remained when the batch opened."""
 
     name = "fac2"
+    spec_chunk_param = None
 
     def init(self, ctx: SchedulerContext) -> Any:
         state = super().init(ctx)
@@ -211,6 +212,7 @@ class AF(CentralQueueSchedule):
     adaptive = True
 
     name = "af"
+    spec_chunk_param = None
 
     def __init__(self, warmup: int = 1):
         self.warmup = warmup

@@ -1,0 +1,595 @@
+"""One schedule clause: the unified ``ScheduleSpec`` selection surface.
+
+The paper argues that a *standard interface* for picking a scheduling
+strategy matters as much as the strategy machinery itself: OpenMP's
+``schedule`` clause is the one place a user names a strategy, and the
+proposal extends that single clause — not a new API per strategy family —
+to user-defined schedules.  This module is that clause for this framework.
+Every substrate (serve admission, train packing, microbatching, MoE
+capacity, straggler mitigation, Pallas tile orders) selects its strategy
+through one value — a :class:`ScheduleSpec` — resolved by one function —
+:func:`resolve` — against one registry — :func:`register_schedule`.
+
+Clause grammar, mapped to the OpenMP syntax each form mirrors::
+
+    spec string                  OpenMP form it mirrors
+    -----------------------      -----------------------------------------
+    "guided,4"                   schedule(guided, 4)
+    "static"                     schedule(static)
+    "fac2"                       schedule(<literature strategy>)   [paper §2]
+    "taper(mu=1.0,sigma=0.5)"    strategy parameters beyond chunksize,
+                                 impossible in today's clause    [paper §1]
+    "wf2(weights=2:1:1)"         WF2 capability weights (the user-specified
+                                 workload balancing of [Hummel et al. 96])
+    "uds:mystatic(2,3)"          schedule(mystatic(2,3)) — a declare-style
+                                 UDS (paper §4.2, Fig. 2 right)
+    "uds:mytemplate,16"          schedule(UDS:16, template(mytemplate)) —
+                                 a lambda-style template (paper §4.1)
+    "runtime"                    schedule(runtime) + OMP_SCHEDULE: the kind
+                                 is late-bound from the REPRO_SCHEDULE
+                                 environment variable at resolve time
+
+Resolution accepts a spec, a clause string, an already-built scheduler
+instance, or a zero-argument factory callable; it returns a scheduler
+implementing the reduced three-op interface.  Schedulers built from a spec
+carry the (frozen, hashable) spec as their plan-cache identity, so two
+structurally-equal specs built independently share a cached
+:class:`~repro.core.plan.SchedulePlan` in the engine.
+
+Late registration: ``REPRO_UDS_MODULES`` (comma-separated module names) is
+imported before the first failed lookup, so user schedules shipped as
+plain modules are reachable by name from any CLI entry point —
+``REPRO_UDS_MODULES=examples.uds_blocks train --scheduler uds:blocks``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+import os
+import re
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+__all__ = [
+    "ScheduleSpec",
+    "SpecLike",
+    "parse",
+    "resolve",
+    "register_schedule",
+    "registered_names",
+    "lookup",
+    "describe",
+    "RUNTIME_ENV_VAR",
+    "UDS_MODULES_ENV_VAR",
+    "DEFAULT_RUNTIME_SCHEDULE",
+]
+
+RUNTIME_ENV_VAR = "REPRO_SCHEDULE"
+UDS_MODULES_ENV_VAR = "REPRO_UDS_MODULES"
+DEFAULT_RUNTIME_SCHEDULE = "dynamic"
+
+# the "uds:" namespace restricts lookup to user-defined registrations
+# (declare-style, lambda-style templates, @register_schedule users)
+_UDS_SOURCES = ("declare", "template", "user")
+
+_Scalar = Union[None, bool, int, float, str]
+
+# string parameter values must render/re-parse losslessly in a clause
+_SAFE_TOKEN_RE = re.compile(r"^[\w.+\-]+$")
+
+
+# =========================================================================
+# The spec
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Frozen, hashable identity of one schedule-clause instance.
+
+    Fields mirror the information the OpenMP clause (and the paper's
+    extension of it) can carry:
+
+    * ``kind``    — the strategy name (``guided``, ``fac2``, ``runtime``,
+      ``uds:mystatic`` ...).  The ``uds:`` prefix namespaces user-defined
+      registrations, mirroring ``schedule(UDS, ...)``.
+    * ``chunk``   — the clause's optional chunksize parameter.
+    * ``params``  — positional strategy arguments (a declare-style UDS's
+      ``omp_argN`` values; ``schedule(mystatic(2,3))``).
+    * ``kwargs``  — named strategy parameters, stored as a sorted tuple of
+      ``(name, value)`` pairs so the spec stays hashable.
+    * ``weights`` — the per-worker capability-weights policy (WF2/AWF
+      family), normalized to a tuple of floats.
+
+    Use :meth:`make` to build one with plain dicts/lists; the dataclass
+    constructor expects the canonical (hashable) field types.
+    """
+
+    kind: str
+    chunk: Optional[int] = None
+    params: Tuple[Any, ...] = ()
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+    weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.kind, str) or not self.kind:
+            raise ValueError("schedule kind must be a non-empty string")
+        # string parameter values must be clause-safe tokens, or the
+        # documented parse(str(spec)) round-trip would break
+        for v in self.params + tuple(v for _, v in self.kwargs):
+            if isinstance(v, str) and not _SAFE_TOKEN_RE.match(v):
+                raise ValueError(
+                    f"string parameter {v!r} is not a clause-safe token "
+                    f"(allowed: letters, digits, '_', '.', '+', '-')")
+        if self.chunk is not None:
+            if not isinstance(self.chunk, int) or isinstance(self.chunk, bool):
+                raise ValueError(
+                    f"chunk must be an int, got {type(self.chunk).__name__}")
+            if self.chunk < 1:
+                raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.weights is not None:
+            if not self.weights:
+                raise ValueError("weights must be non-empty when given")
+            if any(w <= 0 for w in self.weights):
+                raise ValueError(f"weights must be positive: {self.weights}")
+        if self.is_runtime and (self.chunk is not None or self.params
+                                or self.kwargs or self.weights is not None):
+            raise ValueError(
+                "schedule 'runtime' takes no parameters (the late-bound "
+                f"clause comes whole from ${RUNTIME_ENV_VAR})")
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def make(cls, kind: Union[str, "ScheduleSpec"],
+             chunk: Optional[int] = None,
+             params: Sequence[Any] = (),
+             weights: Optional[Union[Sequence[float],
+                                     Mapping[int, float]]] = None,
+             **kwargs: Any) -> "ScheduleSpec":
+        """Build a spec from convenient Python values.
+
+        ``kind`` may itself be a clause string (parsed first) or a spec
+        (used as the base); explicit arguments override the parsed parts.
+        ``weights`` accepts a sequence or a worker->weight mapping.
+        """
+        base = (kind if isinstance(kind, ScheduleSpec)
+                else parse(kind) if ("," in kind or "(" in kind)
+                else cls(kind=kind))
+        if isinstance(weights, Mapping):
+            n = max(weights) + 1 if weights else 0
+            weights = tuple(float(weights.get(i, 1.0)) for i in range(n))
+        elif weights is not None:
+            weights = tuple(float(w) for w in weights)
+        merged = dict(base.kwargs)
+        merged.update(kwargs)
+        return cls(
+            kind=base.kind,
+            chunk=chunk if chunk is not None else base.chunk,
+            params=tuple(params) if params else base.params,
+            kwargs=tuple(sorted(merged.items())),
+            weights=weights if weights is not None else base.weights,
+        )
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def is_runtime(self) -> bool:
+        return self.kind == "runtime"
+
+    @property
+    def is_uds(self) -> bool:
+        return self.kind.startswith("uds:")
+
+    @property
+    def name(self) -> str:
+        """Registry lookup name (the kind without the ``uds:`` namespace)."""
+        return self.kind[4:] if self.is_uds else self.kind
+
+    def kwargs_dict(self) -> Dict[str, Any]:
+        return dict(self.kwargs)
+
+    # ------------------------------------------------------------ rendering
+    def __str__(self) -> str:
+        """Canonical clause string; ``parse(str(spec)) == spec``."""
+        inner = [_render_value(v) for v in self.params]
+        inner += [f"{k}={_render_value(v)}" for k, v in self.kwargs]
+        if self.weights is not None:
+            inner.append("weights=" + ":".join(_render_number(w)
+                                               for w in self.weights))
+        s = self.kind
+        if inner:
+            s += "(" + ",".join(inner) + ")"
+        if self.chunk is not None:
+            s += f",{self.chunk}"
+        return s
+
+    def __repr__(self) -> str:
+        return f"ScheduleSpec({str(self)!r})"
+
+
+SpecLike = Union[ScheduleSpec, str, Any]
+
+
+def _render_number(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) else repr(f)
+
+
+def _render_value(v: Any) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return repr(v)
+    return str(v)
+
+
+# =========================================================================
+# The parser
+# =========================================================================
+_CLAUSE_RE = re.compile(
+    r"""^\s*
+        (?P<kind>(?:uds:)?[A-Za-z_][\w.\-]*)      # name, optional namespace
+        \s*
+        (?:\((?P<args>.*)\))?                     # optional (arg, ...)
+        \s*
+        (?:,\s*(?P<chunk>\S+)\s*)?                # optional , chunksize
+        $""",
+    re.VERBOSE,
+)
+
+_NUM_RE = re.compile(r"^[+-]?(\d+\.?\d*|\.\d+)([eE][+-]?\d+)?$")
+
+
+def _parse_scalar(tok: str) -> _Scalar:
+    tok = tok.strip()
+    if tok.lower() in ("true", "false"):
+        return tok.lower() == "true"
+    if tok.lower() == "none":
+        return None
+    if _NUM_RE.match(tok):
+        if re.match(r"^[+-]?\d+$", tok):
+            return int(tok)
+        return float(tok)
+    return tok
+
+
+def _split_args(args: str) -> List[str]:
+    """Split a paren arg list on top-level commas (no nesting in the
+    grammar, so this is a plain split with whitespace hygiene)."""
+    return [a for a in (p.strip() for p in args.split(",")) if a]
+
+
+def parse(clause: str) -> ScheduleSpec:
+    """Parse one OpenMP-style schedule clause string into a spec.
+
+    Raises ``ValueError`` with the offending clause on any malformed
+    input — an unbalanced paren, a non-integer or non-positive chunk, a
+    malformed weights list.
+    """
+    if not isinstance(clause, str):
+        raise TypeError(f"expected a clause string, got "
+                        f"{type(clause).__name__}")
+    m = _CLAUSE_RE.match(clause)
+    if (m is None or clause.count("(") != clause.count(")")
+            # the grammar has no nesting: parens inside the arg list mean
+            # a malformed clause, not string-valued params
+            or (m.group("args") is not None
+                and ("(" in m.group("args") or ")" in m.group("args")))):
+        raise ValueError(
+            f"malformed schedule clause {clause!r} (expected "
+            f"'kind', 'kind,chunk', 'kind(arg,...)[,chunk]', or "
+            f"'uds:name(arg,...)[,chunk]')")
+    kind = m.group("kind")
+    chunk: Optional[int] = None
+    if m.group("chunk") is not None:
+        tok = _parse_scalar(m.group("chunk"))
+        if not isinstance(tok, int) or isinstance(tok, bool):
+            raise ValueError(
+                f"schedule clause {clause!r}: chunksize must be an "
+                f"integer, got {m.group('chunk')!r}")
+        chunk = tok          # range-checked by ScheduleSpec.__post_init__
+    params: List[Any] = []
+    kwargs: Dict[str, Any] = {}
+    weights: Optional[Tuple[float, ...]] = None
+    if m.group("args") is not None:
+        for tok in _split_args(m.group("args")):
+            if "=" in tok:
+                key, _, val = tok.partition("=")
+                key = key.strip()
+                if not key.isidentifier():
+                    raise ValueError(
+                        f"schedule clause {clause!r}: bad parameter "
+                        f"name {key!r}")
+                if key == "weights":
+                    if weights is not None:
+                        raise ValueError(
+                            f"schedule clause {clause!r}: duplicate "
+                            f"parameter 'weights'")
+                    try:
+                        weights = tuple(float(w)
+                                        for w in val.split(":") if w.strip())
+                    except ValueError:
+                        raise ValueError(
+                            f"schedule clause {clause!r}: weights must be "
+                            f"a ':'-separated number list, got {val!r}")
+                    if not weights:
+                        raise ValueError(
+                            f"schedule clause {clause!r}: empty weights")
+                else:
+                    if key in kwargs:
+                        raise ValueError(
+                            f"schedule clause {clause!r}: duplicate "
+                            f"parameter {key!r}")
+                    kwargs[key] = _parse_scalar(val)
+            else:
+                if kwargs or weights is not None:
+                    raise ValueError(
+                        f"schedule clause {clause!r}: positional argument "
+                        f"{tok!r} after a named parameter")
+                params.append(_parse_scalar(tok))
+    try:
+        return ScheduleSpec(kind=kind, chunk=chunk, params=tuple(params),
+                            kwargs=tuple(sorted(kwargs.items())),
+                            weights=weights)
+    except ValueError as e:
+        raise ValueError(f"schedule clause {clause!r}: {e}") from None
+
+
+# =========================================================================
+# The unified registry
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class RegisteredSchedule:
+    """One registry entry: how to build a scheduler from a spec."""
+
+    name: str
+    factory: Callable[..., Any]
+    source: str = "user"            # builtin | declare | template | user
+    chunk_param: Optional[str] = "chunk"   # ctor kwarg the chunksize maps to
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, RegisteredSchedule] = {}
+_uds_modules_state = "unloaded"      # -> "loading" -> "loaded"
+
+
+def register_schedule(name: Optional[str] = None, *,
+                      source: str = "user",
+                      chunk_param: Optional[str] = "chunk",
+                      replace: bool = False,
+                      doc: str = "") -> Callable:
+    """Register a scheduler factory under ``name`` in the unified registry.
+
+    Usable as a decorator (``@register_schedule("myname")``) or called
+    directly (``register_schedule("myname")(factory)``).  The factory is
+    invoked with the spec's positional ``params`` and named ``kwargs``;
+    a spec chunksize is passed as the ``chunk_param`` keyword (set
+    ``chunk_param=None`` for strategies that take no chunksize).
+
+    ``replace=True`` may only replace a registration of the *same*
+    source: no registration path can shadow a builtin or silently
+    clobber another style's entry of the same name.
+    """
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        key = name or getattr(factory, "name", None) or factory.__name__
+        prev = _REGISTRY.get(key)
+        if prev is not None and (not replace or prev.source != source):
+            raise ValueError(
+                f"schedule name {key!r} already registered "
+                f"(source: {prev.source})"
+                + ("; replace=True may only replace a registration of "
+                   "the same source" if replace else ""))
+        _REGISTRY[key] = RegisteredSchedule(
+            name=key, factory=factory, source=source,
+            chunk_param=chunk_param,
+            doc=doc or (inspect.getdoc(factory) or "").split("\n")[0])
+        return factory
+
+    return deco
+
+
+def unregister_schedule(name: str) -> None:
+    """Remove a registration (tests and template redefinition)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_names(source: Optional[str] = None) -> List[str]:
+    """All registered schedule names, optionally filtered by source."""
+    _load_uds_modules()
+    return sorted(n for n, e in _REGISTRY.items()
+                  if source is None or e.source == source)
+
+
+def _load_uds_modules() -> None:
+    """Import ``REPRO_UDS_MODULES`` once — the late registration point
+    that makes user schedules reachable by name from CLI entry points.
+
+    The loaded flag is only committed after every import succeeds, so an
+    ImportError propagates to the caller AND the load is retried on the
+    next lookup (a long-lived process is not silently stuck with a
+    half-configured registry).  Reentrant lookups during loading (a UDS
+    module that itself resolves a schedule at import time) fall through
+    to the registry as-is.
+    """
+    global _uds_modules_state
+    if _uds_modules_state != "unloaded":
+        return
+    _uds_modules_state = "loading"
+    try:
+        for mod in os.environ.get(UDS_MODULES_ENV_VAR, "").split(","):
+            mod = mod.strip()
+            if mod:
+                importlib.import_module(mod)
+    except BaseException:
+        _uds_modules_state = "unloaded"
+        raise
+    _uds_modules_state = "loaded"
+
+
+def _unknown_name_error(name: str, uds_only: bool) -> KeyError:
+    by_source: Dict[str, List[str]] = {}
+    for n, e in sorted(_REGISTRY.items()):
+        by_source.setdefault(e.source, []).append(n)
+    parts = []
+    order = ("builtin", "declare", "template", "user")
+    for src in order:
+        if src in by_source and not (uds_only and src == "builtin"):
+            parts.append(f"{src}: {by_source[src]}")
+    scope = "UDS " if uds_only else ""
+    return KeyError(
+        f"unknown {scope}schedule {name!r}; registered schedules — "
+        + "; ".join(parts))
+
+
+def lookup(name: str, *, uds_only: bool = False) -> RegisteredSchedule:
+    """Find a registry entry by name; ``uds_only`` restricts to the
+    user-defined sources (the ``uds:`` namespace).  Raises a ``KeyError``
+    that lists every registered name, grouped by source."""
+    _load_uds_modules()
+    entry = _REGISTRY.get(name)
+    if entry is not None and uds_only and entry.source not in _UDS_SOURCES:
+        entry = None
+    if entry is None:
+        raise _unknown_name_error(name, uds_only)
+    return entry
+
+
+# =========================================================================
+# Resolution
+# =========================================================================
+def _is_scheduler(obj: Any) -> bool:
+    # a scheduler *instance*: classes (whose attributes also match) are
+    # treated as factory callables and instantiated by resolve()
+    return (not isinstance(obj, type)
+            and hasattr(obj, "start") and hasattr(obj, "next")
+            and hasattr(obj, "finish"))
+
+
+def _runtime_spec() -> ScheduleSpec:
+    clause = os.environ.get(RUNTIME_ENV_VAR, "").strip() \
+        or DEFAULT_RUNTIME_SCHEDULE
+    spec = parse(clause)
+    if spec.is_runtime:
+        raise ValueError(
+            f"${RUNTIME_ENV_VAR}={clause!r} resolves to 'runtime' — "
+            f"the late-bound clause must name a concrete schedule")
+    return spec
+
+
+def _instantiate(spec: ScheduleSpec) -> Any:
+    entry = lookup(spec.name, uds_only=spec.is_uds)
+    kwargs = spec.kwargs_dict()
+    if spec.weights is not None and "weights" not in kwargs:
+        # WF2-family constructors take a worker->weight mapping
+        kwargs["weights"] = {i: w for i, w in enumerate(spec.weights)}
+    if spec.chunk is not None:
+        if entry.chunk_param is None:
+            raise ValueError(
+                f"schedule {spec.kind!r} does not take a chunksize "
+                f"(got {spec})")
+        kwargs[entry.chunk_param] = spec.chunk
+    try:
+        sched = entry.factory(*spec.params, **kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"schedule {spec.kind!r} rejected parameters of {spec}: {e}"
+        ) from None
+    if not _is_scheduler(sched):
+        raise TypeError(
+            f"factory for schedule {spec.kind!r} returned "
+            f"{type(sched).__name__}, not a three-op scheduler")
+    return sched
+
+
+def resolve(spec_like: SpecLike, /, **overrides: Any) -> Any:
+    """The one call path from "how the user names a schedule" to a
+    scheduler implementing the reduced three-op interface.
+
+    Accepts:
+
+    * a :class:`ScheduleSpec`,
+    * a clause string (``"guided,4"``, ``"uds:mystatic(2,3)"``,
+      ``"runtime"`` — see the module docstring for the grammar),
+    * an already-built scheduler instance (returned as-is; no overrides
+      allowed), or
+    * a zero-argument factory callable returning a scheduler.
+
+    ``overrides`` merge into the spec before instantiation
+    (``resolve("guided", chunk=4)`` == ``resolve("guided,4")``).
+
+    The returned scheduler carries the normalized spec as ``_spec``: the
+    engine keys its plan cache on it, so equal specs share cached plans.
+    """
+    if _is_scheduler(spec_like):
+        if overrides:
+            raise TypeError(
+                "cannot apply spec overrides to an already-built "
+                f"scheduler instance ({getattr(spec_like, 'name', spec_like)!r})")
+        return spec_like
+    if isinstance(spec_like, ScheduleSpec):
+        spec = spec_like
+    elif isinstance(spec_like, str):
+        spec = parse(spec_like)
+    elif callable(spec_like):
+        if overrides:
+            raise TypeError(
+                "cannot apply spec overrides to a schedule factory "
+                "callable (build the spec explicitly instead)")
+        sched = spec_like()
+        if not _is_scheduler(sched):
+            raise TypeError(
+                f"schedule factory {spec_like!r} returned "
+                f"{type(sched).__name__}, not a three-op scheduler")
+        return sched
+    else:
+        raise TypeError(
+            f"cannot resolve a schedule from {type(spec_like).__name__!r} "
+            f"(expected ScheduleSpec, clause string, scheduler instance, "
+            f"or factory callable)")
+    if overrides:
+        spec = ScheduleSpec.make(spec, **overrides)
+    if spec.is_runtime:
+        spec = _runtime_spec()
+    sched = _instantiate(spec)
+    try:
+        sched._spec = spec       # plan-cache identity (see engine.py)
+    except (AttributeError, TypeError):   # __slots__ etc.: still usable
+        pass
+    return sched
+
+
+def describe(spec_like: SpecLike) -> str:
+    """Human-readable name of a spec-like (for logs and CLI echo)."""
+    if isinstance(spec_like, (ScheduleSpec, str)):
+        try:
+            spec = (spec_like if isinstance(spec_like, ScheduleSpec)
+                    else parse(spec_like))
+            return str(spec)
+        except ValueError:
+            return str(spec_like)
+    return str(getattr(spec_like, "name", spec_like))
+
+
+# =========================================================================
+# Builtin absorption: SCHEDULER_FACTORIES -> unified registry
+# =========================================================================
+def _register_builtins() -> None:
+    from repro.core.schedulers import SCHEDULER_FACTORIES
+
+    # each scheduler class declares its own clause-chunksize mapping
+    # (``spec_chunk_param``); non-class factories (the awf_* variant
+    # lambdas) default to None — rejecting ``name,N`` beats mis-mapping it
+    for name, factory in SCHEDULER_FACTORIES.items():
+        register_schedule(
+            name, source="builtin",
+            chunk_param=getattr(factory, "spec_chunk_param", None),
+            replace=True,
+        )(factory)
+
+
+_register_builtins()
+
+# declare-style and lambda-style registrations mirror themselves in at
+# declaration time (declare_schedule / schedule_template import this
+# module before touching their own registries), so no pre-existing
+# entries can be missed here.

@@ -12,13 +12,13 @@ calls) and scalar-prefetches it into the kernel.
 
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import plan_worker_order
-from repro.core.interface import UserDefinedSchedule
+from repro.core.spec import SpecLike
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -34,13 +34,14 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def plan_q_block_order(sched: Union[str, UserDefinedSchedule],
+def plan_q_block_order(sched: SpecLike,
                        q_blocks: int, num_workers: int = 2,
                        **sched_params):
-    """Worker-major Q-block visit order, planned (and cached) by the
-    engine: each of the ``num_workers`` kernel lanes (default 2 =
-    megacore) gets its worker's contiguous block run, so the lanes
-    inherit the schedule's load balance."""
+    """Worker-major Q-block visit order for a schedule clause (spec,
+    string like ``"tss"`` / ``"guided,4"``, or scheduler instance),
+    planned (and cached) by the engine: each of the ``num_workers``
+    kernel lanes (default 2 = megacore) gets its worker's contiguous
+    block run, so the lanes inherit the schedule's load balance."""
     return plan_worker_order(sched, q_blocks, num_workers=num_workers,
                              loop_id=f"flash_attention/{q_blocks}",
                              **sched_params)
@@ -48,11 +49,12 @@ def plan_q_block_order(sched: Union[str, UserDefinedSchedule],
 
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
         block_q: int = 512, block_kv: int = 1024,
-        schedule: Optional[Union[str, UserDefinedSchedule]] = None,
+        schedule: Optional[SpecLike] = None,
         use_kernel: bool = True, interpret: bool = False) -> jax.Array:
     """q: (B, S, H, d); k/v: (B, S, KV, d) (GQA repeated here).
-    Returns (B, S, H, d).  ``schedule`` selects the UDS that orders the
-    kernel's Q-block visits (None = identity / static block order)."""
+    Returns (B, S, H, d).  ``schedule`` is the schedule clause that orders
+    the kernel's Q-block visits — a ScheduleSpec, a clause string, or a
+    scheduler instance (None = identity / static block order)."""
     b, s, hq, d = q.shape
     kv = k.shape[2]
     if hq != kv:

@@ -2,15 +2,15 @@
 
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import PlanEngine, plan_worker_order
-from repro.core.interface import UserDefinedSchedule
 from repro.core.plan import SchedulePlan
+from repro.core.spec import SpecLike
 from repro.kernels.sched_matmul.sched_matmul import sched_matmul
 from repro.kernels.sched_matmul.ref import sched_matmul_ref
 
@@ -28,13 +28,14 @@ def tile_order_from_plan(plan: SchedulePlan, m_tiles: int) -> np.ndarray:
     return order
 
 
-def plan_tile_order(sched: Union[str, UserDefinedSchedule], m_tiles: int,
+def plan_tile_order(sched: SpecLike, m_tiles: int,
                     num_workers: int = 2, *,
                     engine: Optional[PlanEngine] = None,
                     **sched_params) -> np.ndarray:
-    """Worker-major M-tile visit order for a scheduler (by name or
-    instance), planned — and cached across kernel launches — by the
-    engine: each of the ``num_workers`` kernel lanes (default 2 = TPU
+    """Worker-major M-tile visit order for a schedule clause (a
+    ScheduleSpec, a string like ``"guided,4"`` / ``"uds:name"``, or a
+    scheduler instance), planned — and cached across kernel launches — by
+    the engine: each of the ``num_workers`` kernel lanes (default 2 = TPU
     megacore) gets the contiguous tile run the UDS assigned to it."""
     return plan_worker_order(sched, m_tiles, num_workers=num_workers,
                              loop_id=f"sched_matmul/{m_tiles}",

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
-                        SchedulerContext, get_engine, make_scheduler)
+                        SchedulerContext, get_engine)
+from repro.core.spec import SpecLike, describe, resolve
 from repro.launch.steps import make_serve_step
 from repro.models import get_model
 
@@ -60,7 +61,7 @@ class ServeLoop:
     """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
-                 scheduler: str = "dynamic", seed: int = 0,
+                 scheduler: SpecLike = "dynamic", seed: int = 0,
                  history: Optional[LoopHistory] = None):
         self.cfg = cfg
         self.model = get_model(cfg)
@@ -69,7 +70,10 @@ class ServeLoop:
         key = jax.random.PRNGKey(seed)
         self.params, _ = self.model.init(key, jnp.float32)
         self._decode = jax.jit(make_serve_step(self.model))
-        self.sched_name = scheduler
+        # any schedule-clause form: spec, "guided,4", "uds:name", "runtime",
+        # or a scheduler instance
+        self.scheduler = scheduler
+        self.sched_name = describe(scheduler)
         self.loop_id = "serve"
         self.history = history if history is not None else LoopHistory()
         self.last_stats: Dict[str, Any] = {}
@@ -89,7 +93,7 @@ class ServeLoop:
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Schedule + serve all requests to completion."""
-        sched = make_scheduler(self.sched_name)
+        sched = resolve(self.scheduler)
         loop = LoopSpec(lb=0, ub=len(requests), num_workers=self.slots,
                         loop_id=self.loop_id)
         telemetry = LoopTelemetry(self.history, loop_id=self.loop_id,
@@ -173,7 +177,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--scheduler", default="dynamic")
+    ap.add_argument("--scheduler", default="dynamic",
+                    help='schedule clause: "dynamic", "guided,4", '
+                         '"uds:name(args)", or "runtime" '
+                         "(late-bound from $REPRO_SCHEDULE)")
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 

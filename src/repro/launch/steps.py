@@ -22,11 +22,12 @@ import jax.numpy as jnp
 from repro.models import Model, ModelConfig
 from repro.optim.specs import opt_state_specs  # noqa: F401  (re-export)
 from repro.configs.base import ShapeSpec
+from repro.core.spec import SpecLike
 from repro.sharding import constrain
 
 __all__ = ["chunked_softmax_ce", "make_train_step", "make_prefill_step",
-           "make_serve_step", "apply_microbatch_plan", "input_specs",
-           "head_weights"]
+           "make_serve_step", "apply_microbatch_plan", "plan_microbatches",
+           "input_specs", "head_weights"]
 
 Tree = Any
 
@@ -57,6 +58,25 @@ def apply_microbatch_plan(batch: Dict[str, jax.Array], perm,
         else:
             out[k] = v
     return out
+
+
+def plan_microbatches(batch: Dict[str, jax.Array], costs, num_microbatches: int,
+                      scheduler: SpecLike = "dynamic,1",
+                      history=None,
+                      extra_batch_keys: Sequence[str] = ()
+                      ) -> Dict[str, jax.Array]:
+    """Plan and apply the UDS microbatch assignment in one step.
+
+    ``scheduler`` is a schedule clause (spec / string / instance) resolved
+    through the unified registry; the permutation it plans over
+    ``costs`` (per-row work estimates) is applied so the compiled step's
+    *static* equal split sees cost-balanced microbatches.
+    """
+    from repro.sched.microbatch import plan_microbatch_permutation
+    perm = plan_microbatch_permutation(scheduler, costs, num_microbatches,
+                                       history=history)
+    return apply_microbatch_plan(batch, perm,
+                                 extra_batch_keys=extra_batch_keys)
 
 
 def head_weights(params: Tree, cfg: ModelConfig) -> jax.Array:

@@ -19,15 +19,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import LoopHistory, LoopTelemetry, make_scheduler
+from repro.core import LoopHistory, LoopTelemetry
+from repro.core.spec import SpecLike, resolve
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import make_mesh, rules_for, shardings_for
-from repro.launch.steps import (apply_microbatch_plan, make_train_step,
-                                opt_state_specs)
+from repro.launch.steps import (make_train_step, opt_state_specs,
+                                plan_microbatches)
 from repro.models import get_model
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
 from repro.sched import (CapacityPlanner, StragglerMitigator,
-                         pack_with_scheduler, plan_microbatch_permutation)
+                         pack_with_scheduler)
 from repro.sharding import axis_rules
 from repro.checkpoint import AsyncCheckpointer
 
@@ -38,7 +39,8 @@ class TrainLoop:
     """Composable training loop; examples and tests drive this class."""
 
     def __init__(self, cfg, *, batch: int, seq_len: int,
-                 mesh_shape=None, scheduler: str = "fac2",
+                 mesh_shape=None, scheduler: SpecLike = "fac2",
+                 microbatch_scheduler: SpecLike = "dynamic,1",
                  num_microbatches: int = 1, lr: float = 3e-4,
                  ckpt_dir: Optional[str] = None, seed: int = 0,
                  data_sigma: float = 1.0):
@@ -53,7 +55,11 @@ class TrainLoop:
         # the AWF document packer)
         self.telemetry = LoopTelemetry(self.history, loop_id="train_step",
                                        num_workers=1)
-        self.pack_sched = make_scheduler(scheduler)
+        # ``scheduler`` / ``microbatch_scheduler`` accept any schedule
+        # clause form: a spec, "guided,4", "uds:name(args)", "runtime"
+        # (late-bound from $REPRO_SCHEDULE), or a scheduler instance
+        self.pack_sched = resolve(scheduler)
+        self.microbatch_sched = microbatch_scheduler
         self.num_microbatches = num_microbatches
         self.capacity = (CapacityPlanner(cfg, seq_len) if cfg.is_moe else None)
 
@@ -107,10 +113,8 @@ class TrainLoop:
                  "segment_ids": jnp.asarray(packed.segment_ids)}
         if self.num_microbatches > 1:
             costs = (packed.segment_ids > 0).sum(axis=1).astype(float)
-            perm = plan_microbatch_permutation(
-                make_scheduler("dynamic", chunk=1), costs,
-                self.num_microbatches)
-            batch = apply_microbatch_plan(batch, perm)
+            batch = plan_microbatches(batch, costs, self.num_microbatches,
+                                      scheduler=self.microbatch_sched)
         if self.capacity is not None:
             batch["cap_e"] = jnp.asarray(self.capacity.plan())
         if self.cfg.frontend != "none":
@@ -166,7 +170,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--scheduler", default="fac2")
+    ap.add_argument("--scheduler", default="fac2",
+                    help='schedule clause: "fac2", "guided,4", '
+                         '"uds:name(args)", or "runtime" '
+                         "(late-bound from $REPRO_SCHEDULE)")
+    ap.add_argument("--microbatch-scheduler", default="dynamic,1",
+                    help="schedule clause for the microbatch assignment")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
@@ -175,6 +184,7 @@ def main() -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     loop = TrainLoop(cfg, batch=args.batch, seq_len=args.seq_len,
                      scheduler=args.scheduler,
+                     microbatch_scheduler=args.microbatch_scheduler,
                      num_microbatches=args.microbatches, lr=args.lr,
                      ckpt_dir=args.ckpt_dir)
     losses = loop.run(args.steps)

@@ -17,12 +17,12 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import LoopHistory, LoopSpec, SchedulerContext, get_engine
-from repro.core.interface import UserDefinedSchedule
+from repro.core.spec import SpecLike, resolve
 
 __all__ = ["plan_microbatch_permutation"]
 
 
-def plan_microbatch_permutation(sched: UserDefinedSchedule,
+def plan_microbatch_permutation(sched: SpecLike,
                                 row_costs: Sequence[float],
                                 num_microbatches: int,
                                 history: Optional[LoopHistory] = None
@@ -30,12 +30,14 @@ def plan_microbatch_permutation(sched: UserDefinedSchedule,
     """Permutation of batch rows such that consecutive equal-size slices
     (the compiled microbatches) have near-equal total cost.
 
+    ``sched`` is a ScheduleSpec / clause string / scheduler instance.
     Rows are iterations; microbatches are workers; the UDS dequeues row
     chunks for the currently-lightest microbatch (longest-processing-time
     order) through an engine ``ScheduleStream`` — measured bucket costs feed
     back as the ``elapsed`` of the previous chunk.  Returns (B,) int32
     permutation.
     """
+    sched = resolve(sched)
     B = len(row_costs)
     assert B % num_microbatches == 0
     per = B // num_microbatches

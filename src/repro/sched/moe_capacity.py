@@ -22,7 +22,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import LoopSpec, get_engine
-from repro.core.schedulers import WeightedFactoring
+from repro.core.spec import SpecLike, resolve
 from repro.models.config import ModelConfig
 from repro.models.moe import moe_buffer_capacity, moe_capacity
 
@@ -30,15 +30,22 @@ __all__ = ["CapacityPlanner"]
 
 
 class CapacityPlanner:
-    """Plans per-expert capacities from an EWMA of measured loads."""
+    """Plans per-expert capacities from an EWMA of measured loads.
+
+    ``scheduler`` selects the weight-aware strategy that distributes the
+    slot budget over experts (spec / clause string / instance); the
+    default preserves the WF2 behavior.
+    """
 
     def __init__(self, cfg: ModelConfig, seq_len: int,
-                 ewma: float = 0.9, floor: float = 0.25):
+                 ewma: float = 0.9, floor: float = 0.25,
+                 scheduler: SpecLike = "wf2"):
         self.cfg = cfg
         self.C = moe_capacity(cfg, seq_len)              # uniform budget / expert
         self.C_buf = moe_buffer_capacity(cfg, seq_len)   # hard buffer bound
         self.ewma = ewma
         self.floor = floor
+        self.scheduler = scheduler
         self.load: Optional[np.ndarray] = None           # (E,) EWMA of loads
 
     def observe(self, loads: np.ndarray) -> None:
@@ -50,20 +57,20 @@ class CapacityPlanner:
             self.load = self.ewma * self.load + (1 - self.ewma) * mean
 
     def plan(self) -> np.ndarray:
-        """(E,) int32 capacities: WF2 weights = normalized expert loads;
-        slot budget = E * C (same as uniform), hot experts may rise to the
-        buffer bound C_buf = C * headroom."""
+        """(E,) int32 capacities: capability weights = normalized expert
+        loads; slot budget = E * C (same as uniform), hot experts may rise
+        to the buffer bound C_buf = C * headroom."""
         E = self.cfg.num_experts
         if self.load is None:
             return np.full(E, self.C, np.int32)
         w = self.load / max(self.load.mean(), 1e-9)        # mean 1.0
         w = np.clip(w, self.floor, None)
-        # weighted-factoring plan over the slot budget: experts are the
+        # weight-aware plan over the slot budget: experts are the
         # workers, slots the iterations; capacities = per-worker shares
         loop = LoopSpec(lb=0, ub=E * self.C, num_workers=E,
                         loop_id="moe_capacity")
         plan = get_engine().plan(
-            WeightedFactoring(), loop,
+            resolve(self.scheduler), loop,
             weights=(w * E / w.sum()).tolist())       # normalized to sum E
         cap = plan.worker_iters()
         return np.clip(cap, 1, self.C_buf).astype(np.int32)

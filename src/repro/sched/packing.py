@@ -16,22 +16,26 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core import LoopHistory, LoopSpec, SchedulerContext, get_engine
-from repro.core.interface import UserDefinedSchedule
+from repro.core.spec import SpecLike, resolve
 from repro.data.pipeline import PackedBatch, pack_documents
 
 __all__ = ["plan_packing", "pack_with_scheduler"]
 
 
-def plan_packing(sched: UserDefinedSchedule, doc_lens: Sequence[int],
+def plan_packing(sched: SpecLike, doc_lens: Sequence[int],
                  batch: int, seq_len: int,
                  history: Optional[LoopHistory] = None) -> List[int]:
     """Assign each document to a batch row using a UDS.
 
-    Documents are sorted by length (longest-first, the classic LPT trick),
-    then dequeued: the scheduler decides how many documents (the chunk) the
-    currently least-loaded row takes.  Returns per-document row ids, -1 for
-    documents that did not fit.
+    ``sched`` is any schedule selection the unified clause accepts — a
+    ``ScheduleSpec``, a clause string (``"guided,4"``, ``"uds:myname"``),
+    or a scheduler instance.  Documents are sorted by length
+    (longest-first, the classic LPT trick), then dequeued: the scheduler
+    decides how many documents (the chunk) the currently least-loaded row
+    takes.  Returns per-document row ids, -1 for documents that did not
+    fit.
     """
+    sched = resolve(sched)
     order = np.argsort([-l for l in doc_lens], kind="stable")
     loop = LoopSpec(lb=0, ub=len(doc_lens), num_workers=batch,
                     loop_id="packing")
@@ -61,7 +65,7 @@ def plan_packing(sched: UserDefinedSchedule, doc_lens: Sequence[int],
     return assign
 
 
-def pack_with_scheduler(sched: UserDefinedSchedule,
+def pack_with_scheduler(sched: SpecLike,
                         docs: Sequence[np.ndarray], batch: int, seq_len: int,
                         history: Optional[LoopHistory] = None) -> PackedBatch:
     assign = plan_packing(sched, [len(d) for d in docs], batch, seq_len,

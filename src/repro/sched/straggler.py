@@ -14,22 +14,27 @@ the straggler detector.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from repro.core import LoopHistory, LoopSpec, LoopTelemetry, get_engine
-from repro.core.schedulers import WeightedFactoring
+from repro.core.spec import resolve
 
 __all__ = ["StragglerMitigator"]
 
 
 @dataclasses.dataclass
 class StragglerMitigator:
+    """``scheduler`` selects the strategy that turns AWF weights into
+    integer token shares — any weight-aware schedule clause (spec, clause
+    string, or instance); the default preserves the WF2 behavior."""
+
     num_hosts: int
     loop_id: str = "train_step"
     threshold: float = 1.15      # flag hosts >15% slower than median
     window: int = 16
+    scheduler: Any = "wf2"       # SpecLike; must honor ctx.weights
 
     def __post_init__(self):
         self.history = LoopHistory()
@@ -67,19 +72,20 @@ class StragglerMitigator:
     # --------------------------------------------------------------- plan
     def weights(self) -> np.ndarray:
         """AWF capability weights, normalized to sum num_hosts — feed these
-        to the packing scheduler (WeightedFactoring) or the batch splitter."""
+        to a weight-aware packing schedule (e.g. "wf2") or the batch
+        splitter."""
         return np.asarray(
             self.history.awf_weights(self.loop_id, self.num_hosts))
 
     def token_shares(self, total_tokens: int) -> np.ndarray:
         """Integer per-host token budgets proportional to AWF weights,
-        materialized as a WF2 plan over the token budget (hosts are the
-        workers) — the plan covers exactly, so shares always sum to
-        ``total_tokens``, and identical weight vectors hit the engine's
-        plan cache across steps."""
+        materialized as a plan of ``self.scheduler`` (default WF2) over
+        the token budget (hosts are the workers) — the plan covers
+        exactly, so shares always sum to ``total_tokens``, and identical
+        weight vectors hit the engine's plan cache across steps."""
         w = self.weights()
         loop = LoopSpec(lb=0, ub=total_tokens, num_workers=self.num_hosts,
                         loop_id=f"{self.loop_id}/token_shares")
-        plan = get_engine().plan(WeightedFactoring(), loop,
+        plan = get_engine().plan(resolve(self.scheduler), loop,
                                  weights=w.tolist())
         return plan.worker_iters()

@@ -1,0 +1,517 @@
+"""The unified ScheduleSpec API: parsing, registry, resolution, caching."""
+
+import numpy as np
+import pytest
+
+from repro.core import (LoopSpec, ScheduleSpec, make_scheduler,
+                        parse_schedule, plan_schedule, register_schedule,
+                        registered_names, resolve, simulate_loop)
+from repro.core import declare, lambda_style as ls
+from repro.core.engine import PlanEngine, scheduler_plan_key
+from repro.core.schedulers import (AWF, FAC2, GuidedSS, SelfScheduling,
+                                   StaticChunk, Taper, WeightedFactoring)
+from repro.core.spec import RUNTIME_ENV_VAR, describe, unregister_schedule
+
+
+# =========================================================================
+# parsing
+# =========================================================================
+@pytest.mark.parametrize("clause,kind,chunk", [
+    ("static", "static", None),
+    ("guided,4", "guided", 4),
+    ("dynamic, 8", "dynamic", 8),
+    ("fac2", "fac2", None),
+    ("uds:mystatic", "uds:mystatic", None),
+    ("uds:mytemplate,16", "uds:mytemplate", 16),
+])
+def test_parse_kind_chunk(clause, kind, chunk):
+    spec = parse_schedule(clause)
+    assert spec.kind == kind
+    assert spec.chunk == chunk
+
+
+def test_parse_params_and_kwargs():
+    spec = parse_schedule("uds:mystatic(2,3)")
+    assert spec.params == (2, 3) and spec.is_uds and spec.name == "mystatic"
+    spec = parse_schedule("taper(mu=1.0,sigma=0.5),8")
+    assert spec.kwargs_dict() == {"mu": 1.0, "sigma": 0.5}
+    assert spec.chunk == 8
+    spec = parse_schedule("wf2(weights=2:1:0.5)")
+    assert spec.weights == (2.0, 1.0, 0.5)
+
+
+@pytest.mark.parametrize("clause", [
+    "guided,4",
+    "fac2",
+    "uds:mystatic(2,3)",
+    "taper(mu=1.0,sigma=0.5),8",
+    "wf2(weights=2:1:0.5)",
+    "awf(variant=B)",
+    "rand(seed=7),2",
+    "uds:tmpl,16",
+])
+def test_parse_str_roundtrip(clause):
+    spec = parse_schedule(clause)
+    assert parse_schedule(str(spec)) == spec
+    # and re-rendering is a fixed point
+    assert str(parse_schedule(str(spec))) == str(spec)
+
+
+@pytest.mark.parametrize("bad", [
+    "",                      # empty
+    "guided,0",              # chunk must be >= 1
+    "guided,-3",             # negative chunk
+    "guided,x",              # non-integer chunk
+    "guided,4.5",            # non-integer chunk
+    "taper(mu=1.0",          # unbalanced paren
+    "wf2(weights=)",         # empty weights
+    "wf2(weights=a:b)",      # non-numeric weights
+    "wf2(weights=2:-1)",     # non-positive weight
+    "runtime,4",             # runtime takes no parameters
+    "taper(mu=1.0,2)",       # positional after named
+    "(4)",                   # no kind
+    "uds:f(g(1,2),3)",       # nested parens: the grammar has no nesting
+    "wf2(weights=1:2,weights=3:4)",   # duplicate weights
+    "taper(mu=1,mu=2)",      # duplicate named parameter
+])
+def test_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        parse_schedule(bad)
+
+
+def test_spec_is_frozen_and_hashable():
+    a = parse_schedule("guided,4")
+    b = parse_schedule("guided,4")
+    assert a == b and hash(a) == hash(b)
+    assert a != parse_schedule("guided,8")
+    with pytest.raises(Exception):
+        a.chunk = 2
+    assert ScheduleSpec.make("guided", chunk=4) == a
+
+
+def test_spec_make_weights_mapping():
+    spec = ScheduleSpec.make("wf2", weights={0: 4, 2: 2})
+    assert spec.weights == (4.0, 1.0, 2.0)   # gaps fill with weight 1.0
+
+
+def test_spec_rejects_clause_unsafe_string_values():
+    # values that could not survive parse(str(spec)) are rejected upfront
+    for bad in ("a,b", "a(b", "a b", "k=v", "a:b"):
+        with pytest.raises(ValueError):
+            ScheduleSpec.make("guided", label=bad)
+    spec = ScheduleSpec.make("awf", variant="B")       # safe token: fine
+    assert parse_schedule(str(spec)) == spec
+
+
+def test_chunk_param_mapping_lives_on_the_class():
+    r = resolve("rand(seed=7),2")
+    assert r.min_chunk == 2 and r.seed == 7
+    # awf_* variant lambdas take no chunksize: clause form rejected
+    with pytest.raises(ValueError):
+        resolve("awf_b,4")
+
+
+# =========================================================================
+# resolution
+# =========================================================================
+def test_resolve_builtin_forms():
+    assert isinstance(resolve("guided,4"), GuidedSS)
+    assert resolve("guided,4").min_chunk == 4
+    assert isinstance(resolve("dynamic"), SelfScheduling)
+    assert isinstance(resolve(parse_schedule("fac2")), FAC2)
+    t = resolve("taper(mu=1.0,sigma=0.5),8")
+    assert isinstance(t, Taper) and t.min_chunk == 8
+    w = resolve("wf2(weights=2:1:1)")
+    assert isinstance(w, WeightedFactoring)
+    assert w.weights == {0: 2.0, 1: 1.0, 2: 1.0}
+    a = resolve("awf(variant=B)")
+    assert isinstance(a, AWF) and a.variant == "B"
+
+
+def test_resolve_instance_and_callable():
+    inst = GuidedSS(chunk=2)
+    assert resolve(inst) is inst
+    made = resolve(lambda: StaticChunk(chunk=3))
+    assert isinstance(made, StaticChunk) and made.chunk == 3
+    with pytest.raises(TypeError):
+        resolve(inst, chunk=5)       # overrides need a spec, not an instance
+    with pytest.raises(TypeError):
+        resolve(lambda: StaticChunk(chunk=3), chunk=5)   # ... nor a factory
+    with pytest.raises(TypeError):
+        resolve(12345)
+
+
+def test_resolve_overrides_merge():
+    s = resolve("guided", chunk=4)
+    assert s.min_chunk == 4
+    assert s._spec == parse_schedule("guided,4")
+
+
+def test_resolve_rejects_chunk_where_unsupported():
+    with pytest.raises(ValueError):
+        resolve("fac2,4")            # factoring has no chunksize parameter
+
+
+def test_unknown_name_lists_all_registrations():
+    if "spec_test_tmpl" not in ls.registered_templates():
+        ls.schedule_template("spec_test_tmpl",
+                             dequeue=lambda: ls.OMP_UDS_loop_dequeue_done())
+    with pytest.raises(KeyError) as ei:
+        resolve("definitely_not_registered")
+    msg = str(ei.value)
+    assert "guided" in msg and "fac2" in msg          # builtins listed
+    assert "spec_test_tmpl" in msg                    # UDS registrations too
+    with pytest.raises(KeyError) as ei:
+        make_scheduler("definitely_not_registered")   # shim shares the error
+    assert "spec_test_tmpl" in str(ei.value)
+
+
+def test_uds_namespace_excludes_builtins():
+    with pytest.raises(KeyError):
+        resolve("uds:guided")
+
+
+def test_runtime_env_var_resolution(monkeypatch):
+    monkeypatch.setenv(RUNTIME_ENV_VAR, "guided,4")
+    s = resolve("runtime")
+    assert isinstance(s, GuidedSS) and s.min_chunk == 4
+    assert s._spec == parse_schedule("guided,4")
+    monkeypatch.setenv(RUNTIME_ENV_VAR, "runtime")
+    with pytest.raises(ValueError):
+        resolve("runtime")           # must late-bind to a concrete clause
+    monkeypatch.delenv(RUNTIME_ENV_VAR)
+    assert resolve("runtime") is not None   # documented default applies
+
+
+def test_runtime_spec_rejects_parameters():
+    with pytest.raises(ValueError):
+        parse_schedule("runtime,4")
+
+
+def test_describe():
+    assert describe("guided, 4") == "guided,4"
+    assert describe(GuidedSS(chunk=2)) == "guided"
+
+
+def test_builtin_shadow_rejection_leaves_no_half_registration():
+    # a declaration that shadows a builtin must fail atomically: neither
+    # the declare registry nor the template registry may keep the name
+    with pytest.raises(ValueError):
+        declare.declare_schedule(
+            "guided", arguments=0,
+            next=declare.call(lambda lo, hi, st: 0, declare.OMP_LB_CHUNK,
+                              declare.OMP_UB_CHUNK, declare.OMP_CHUNK_INCR))
+    assert "guided" not in declare.registered_schedules()
+    with pytest.raises(KeyError):
+        declare.use_schedule("guided")
+    with pytest.raises(ValueError):
+        ls.schedule_template("guided",
+                             dequeue=lambda: ls.OMP_UDS_loop_dequeue_done())
+    assert "guided" not in ls.registered_templates()
+    assert isinstance(resolve("guided"), GuidedSS)     # builtin untouched
+
+
+def test_mutated_resolved_scheduler_misses_stale_plan():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 1024, num_workers=4, loop_id="spec_mutate")
+    s = resolve("guided,4")
+    p1 = eng.plan(s, loop)
+    s.min_chunk = 8                       # off-API, but must not corrupt
+    p2 = eng.plan(s, loop)
+    assert p2 is not p1
+    assert max(c.size for c in p2.chunks[-2:]) <= 8
+    assert min(c.size for c in p2.chunks[:-1]) >= 8
+
+
+def test_register_schedule_decorator_and_conflicts():
+    @register_schedule("spec_test_custom", chunk_param="chunk")
+    def _factory(chunk=5):
+        return StaticChunk(chunk=chunk)
+
+    try:
+        s = resolve("spec_test_custom,7")
+        assert isinstance(s, StaticChunk) and s.chunk == 7
+        assert "spec_test_custom" in registered_names(source="user")
+        with pytest.raises(ValueError):
+            register_schedule("spec_test_custom")(_factory)   # duplicate
+        with pytest.raises(ValueError):
+            register_schedule("guided")(_factory)             # builtin clash
+        with pytest.raises(ValueError):
+            # replace=True must not cross sources (builtin shadowing)
+            register_schedule("guided", replace=True)(_factory)
+        assert isinstance(resolve("guided"), GuidedSS)
+    finally:
+        unregister_schedule("spec_test_custom")
+
+
+def test_make_scheduler_shim_equivalence():
+    a = make_scheduler("guided", chunk=4)
+    b = resolve("guided,4")
+    assert type(a) is type(b) and a.min_chunk == b.min_chunk
+    assert a._spec == b._spec
+    w = make_scheduler("wf2", weights={0: 4, 1: 1})
+    assert isinstance(w, WeightedFactoring)
+
+
+def test_make_scheduler_shim_validates_like_resolve():
+    # spec validation is not silently bypassed by the fallback path
+    with pytest.raises(ValueError):
+        make_scheduler("dynamic", chunk=0)
+    with pytest.raises(ValueError):
+        make_scheduler("dynamic", chunk=-5)
+
+
+def test_declare_cannot_shadow_user_registration():
+    @register_schedule("spec_user_owned")
+    def _factory():
+        return StaticChunk(chunk=2)
+
+    try:
+        with pytest.raises(ValueError):
+            declare.declare_schedule(
+                "spec_user_owned", arguments=0,
+                next=declare.call(lambda lo, hi, st: 0,
+                                  declare.OMP_LB_CHUNK,
+                                  declare.OMP_UB_CHUNK,
+                                  declare.OMP_CHUNK_INCR))
+        assert "spec_user_owned" not in declare.registered_schedules()
+        with pytest.raises(ValueError):
+            ls.schedule_template(
+                "spec_user_owned",
+                dequeue=lambda: ls.OMP_UDS_loop_dequeue_done())
+        assert "spec_user_owned" not in ls.registered_templates()
+        # the user's registration is untouched
+        assert isinstance(resolve("uds:spec_user_owned"), StaticChunk)
+    finally:
+        unregister_schedule("spec_user_owned")
+
+
+# =========================================================================
+# plan-cache identity
+# =========================================================================
+def test_plan_key_equal_for_equivalent_specs():
+    k1 = scheduler_plan_key(resolve("guided,4"))
+    k2 = scheduler_plan_key(resolve(ScheduleSpec.make("guided", chunk=4)))
+    assert k1 == k2 and k1 is not None
+
+
+def test_plan_cache_hit_across_equivalent_specs():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 4096, num_workers=8, loop_id="spec_cache")
+    p1 = eng.plan(resolve("guided,4"), loop)
+    # structurally-equal spec built independently, different instance
+    p2 = eng.plan(resolve(ScheduleSpec.make("guided", chunk=4)), loop)
+    assert p2 is p1
+    assert eng.cache_info().hits == 1
+    # the deprecated shim shares the same cache entries
+    p3 = eng.plan(make_scheduler("guided", chunk=4), loop)
+    assert p3 is p1
+    # a different chunk is a different spec -> miss
+    eng.plan(resolve("guided,8"), loop)
+    assert eng.cache_info().misses == 2
+
+
+def test_plan_cache_distinguishes_param_specs():
+    eng = PlanEngine()
+    loop = LoopSpec(0, 2048, num_workers=4, loop_id="spec_cache2")
+    eng.plan(resolve("taper(mu=1.0,sigma=0.5)"), loop)
+    p = eng.plan(resolve("taper(sigma=0.5,mu=1.0)"), loop)  # order-insensitive
+    assert eng.cache_info().hits == 1
+    eng.plan(resolve("taper(mu=1.0,sigma=0.9)"), loop)
+    assert eng.cache_info().misses == 2
+    assert p.coverage_ok()
+
+
+# =========================================================================
+# UDS registries absorbed: by-name through substrates
+# =========================================================================
+def _declare_quarters():
+    """Fig.-2-style declare-style schedule with a conjurable loop record."""
+    class Rec:
+        next = 0
+        ub = 0
+        chunk = 1
+
+    def init(lb, ub, inc, chunk, rec):
+        rec.next, rec.ub = lb, ub
+        rec.chunk = max(chunk, 1)
+
+    def nxt(lower, upper, step, rec):
+        if rec.next >= rec.ub:
+            return 0
+        lower.set(rec.next)
+        upper.set(min(rec.next + rec.chunk, rec.ub))
+        rec.next = upper.value
+        return 1
+
+    if "spec_quarters" not in declare.registered_schedules():
+        declare.declare_schedule(
+            "spec_quarters", arguments=1,
+            init=declare.call(init, declare.OMP_LB, declare.OMP_UB,
+                              declare.OMP_INCR, declare.OMP_CHUNKSZ,
+                              declare.ARG(0)),
+            next=declare.call(nxt, declare.OMP_LB_CHUNK,
+                              declare.OMP_UB_CHUNK,
+                              declare.OMP_CHUNK_INCR, declare.ARG(0)),
+            make_args=lambda: (Rec(),))
+
+
+def test_declare_style_resolved_by_name():
+    _declare_quarters()
+    sched = resolve("uds:spec_quarters,8")
+    plan = plan_schedule(sched, 100, 4)
+    sizes = [c.size for c in plan.chunks]
+    assert sizes == [8] * 12 + [4]
+    # by name through a host loop
+    res = simulate_loop(resolve("uds:spec_quarters,8"),
+                        LoopSpec(0, 64, num_workers=4), np.ones(64))
+    assert res.makespan > 0
+
+
+def test_declare_style_by_name_through_packing_substrate():
+    _declare_quarters()
+    from repro.sched import pack_with_scheduler
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(1, 50, size=int(n)).astype(np.int32)
+            for n in rng.integers(8, 120, 32)]
+    packed = pack_with_scheduler("uds:spec_quarters,2", docs, 4, 512)
+    assert 0.0 < packed.fill_fraction <= 1.0
+
+
+def test_lambda_style_by_name_through_packing_substrate():
+    def t_init():
+        ls.OMP_UDS_user_ptr()["next"] = ls.OMP_UDS_loop_start()
+
+    def t_dequeue():
+        ptr = ls.OMP_UDS_user_ptr()
+        if ptr["next"] >= ls.OMP_UDS_loop_end():
+            return 0
+        c = ls.OMP_UDS_chunksize()
+        ls.OMP_UDS_loop_chunk_start(ptr["next"])
+        ls.OMP_UDS_loop_chunk_end(min(ptr["next"] + c,
+                                      ls.OMP_UDS_loop_end()))
+        ptr["next"] += c
+        return 1
+
+    if "spec_ltmpl" not in ls.registered_templates():
+        ls.schedule_template("spec_ltmpl", init=t_init, dequeue=t_dequeue,
+                             uds_data={"next": 0})
+    from repro.sched import pack_with_scheduler
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(1, 50, size=int(n)).astype(np.int32)
+            for n in rng.integers(8, 120, 32)]
+    packed = pack_with_scheduler("uds:spec_ltmpl,4", docs, 4, 512)
+    assert 0.0 < packed.fill_fraction <= 1.0
+    # the template instance honors the clause chunksize
+    uds = resolve("uds:spec_ltmpl,4")
+    assert uds.chunk == 4
+
+
+def test_uds_by_name_usable_as_train_pack_scheduler():
+    """The acceptance path: a declare-style schedule selected by clause
+    string drives the training-batch packing substrate (the same resolve
+    call ``launch/train.py --scheduler`` goes through)."""
+    _declare_quarters()
+    from repro.sched import pack_with_scheduler
+    sched = resolve("uds:spec_quarters")     # what TrainLoop.__init__ does
+    rng = np.random.default_rng(2)
+    docs = [rng.integers(1, 50, size=int(n)).astype(np.int32)
+            for n in rng.integers(8, 120, 24)]
+    for _ in range(2):                       # reusable across steps
+        packed = pack_with_scheduler(sched, docs, 4, 512)
+        assert 0.0 < packed.fill_fraction <= 1.0
+
+
+def test_uds_schedules_are_not_plan_cached():
+    _declare_quarters()
+    assert scheduler_plan_key(resolve("uds:spec_quarters")) is None
+
+
+def test_resolve_scheduler_class_is_instantiated():
+    s = resolve(StaticChunk)               # zero-arg class as factory
+    assert isinstance(s, StaticChunk) and not isinstance(s, type)
+    plan = plan_schedule(s, 64, 4)
+    assert plan.coverage_ok()
+
+
+def test_template_by_name_gets_fresh_state_per_resolve():
+    # no init hook: the cursor lives purely in uds_data, so a shared dict
+    # across resolutions would leave the second loop with nothing to do
+    def dequeue():
+        ptr = ls.OMP_UDS_user_ptr()
+        if ptr["next"] >= ls.OMP_UDS_loop_end():
+            return 0
+        c = ls.OMP_UDS_chunksize()
+        ls.OMP_UDS_loop_chunk_start(ptr["next"])
+        ls.OMP_UDS_loop_chunk_end(min(ptr["next"] + c,
+                                      ls.OMP_UDS_loop_end()))
+        ptr["next"] += c
+        return 1
+
+    if "spec_noinit" not in ls.registered_templates():
+        ls.schedule_template("spec_noinit", dequeue=dequeue,
+                             uds_data={"next": 0})
+    for _ in range(2):       # second resolution must start from scratch
+        plan = plan_schedule(resolve("uds:spec_noinit,4"), 32, 2)
+        assert plan.coverage_ok()
+
+
+def test_template_rejects_positional_clause_params():
+    if "spec_noargs" not in ls.registered_templates():
+        ls.schedule_template("spec_noargs",
+                             dequeue=lambda: ls.OMP_UDS_loop_dequeue_done())
+    with pytest.raises(ValueError):
+        resolve("uds:spec_noargs(0)")      # chunk must come via ',chunk'
+    with pytest.raises(ValueError):
+        resolve("uds:spec_noargs,0")       # and is validated there
+
+
+def test_failed_uds_module_import_is_retried(monkeypatch):
+    from repro.core import spec as spec_mod
+    monkeypatch.setattr(spec_mod, "_uds_modules_state", "unloaded")
+    monkeypatch.setenv(spec_mod.UDS_MODULES_ENV_VAR, "no_such_module_xyz")
+    with pytest.raises(ImportError):
+        registered_names()
+    # the flag was not committed: the configured module is retried (and
+    # the real error keeps surfacing) instead of being silently skipped
+    with pytest.raises(ImportError):
+        resolve("uds:whatever")
+
+
+# =========================================================================
+# substrates that previously hardcoded WeightedFactoring
+# =========================================================================
+def test_straggler_accepts_scheduler_spec():
+    from repro.sched import StragglerMitigator
+    default = StragglerMitigator(num_hosts=4)
+    alt = StragglerMitigator(num_hosts=4, scheduler="fac2")
+    for m in (default, alt):
+        for _ in range(3):
+            m.observe_step({0: 1.0, 1: 1.0, 2: 1.5, 3: 1.0})
+    s_def = default.token_shares(1000)
+    s_alt = alt.token_shares(1000)
+    assert s_def.sum() == 1000 and s_alt.sum() == 1000
+    # default (wf2) respects the AWF weights: the slow host gets less
+    assert s_def[2] < s_def[0]
+    # fac2 ignores weights: near-equal shares
+    assert abs(int(s_alt[2]) - int(s_alt[0])) <= 1
+
+
+def test_capacity_planner_accepts_scheduler_spec():
+    from repro.configs import get_smoke_config
+    from repro.sched import CapacityPlanner
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    for spec in ("wf2", "fac2"):
+        pl = CapacityPlanner(cfg, 64, scheduler=spec)
+        E = cfg.num_experts
+        load = np.ones(E)
+        load[0] *= 4.0
+        load /= load.sum()
+        pl.observe(np.tile(load, (2, 1)))
+        cap = pl.plan()
+        assert cap.shape == (E,) and (cap >= 1).all()
+    # the default (wf2) gives the hot expert more slots
+    pl = CapacityPlanner(cfg, 64)
+    pl.observe(np.tile(load, (2, 1)))
+    cap = pl.plan()
+    assert cap[0] > cap[1]
