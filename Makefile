@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-validate lint smoke bench bench-plan bench-gate deps deps-dev
+.PHONY: test test-fast test-validate coverage lint smoke bench bench-plan bench-gate deps deps-dev
 
 test:           ## tier-1 verify (full suite, fail-fast)
 	$(PYTHON) -m pytest -x -q
@@ -15,6 +15,10 @@ test-fast:      ## core scheduling + engine + telemetry tests only
 test-validate:  ## tier-1 with plan validation on
 	REPRO_PLAN_VALIDATE=1 $(PYTHON) -m pytest -x -q
 
+coverage:       ## tier-1 under coverage; fails below the CI floor (80%)
+	$(PYTHON) -m pytest -q --cov=repro --cov-report=term-missing \
+	    --cov-report=xml --cov-fail-under=80
+
 lint:           ## ruff over the whole tree (rule set in ruff.toml)
 	ruff check .
 
@@ -22,6 +26,9 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	$(PYTHON) examples/quickstart.py
 	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
 	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 4
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 4 --per-slot
+	$(PYTHON) -m pytest -q tests/test_serve.py
 	$(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --scheduler "guided,4"
 	REPRO_UDS_MODULES=examples.uds_blocks PYTHONPATH=src:. \

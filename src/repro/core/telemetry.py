@@ -135,6 +135,20 @@ class LoopTelemetry:
             self._t_first = now - dt
         self._t_last = now
 
+    def add_time_split(self, workers, dt: float, tokens: int = 0) -> None:
+        """Split one measured wall time equally across the open ledgers of
+        ``workers`` — the batched serve step issues ONE jitted call that
+        advances every active slot in lockstep, so each slot is charged
+        ``dt / len(workers)`` (and credited ``tokens`` tokens).  Per-slot
+        attribution stays intact: AWF-family admission still replans from
+        per-slot busy times."""
+        ws = [w for w in workers if w in self._open]
+        if not ws:
+            return
+        share = float(dt) / len(ws)
+        for w in ws:
+            self.add_time(w, share, tokens=tokens)
+
     def end(self, worker: int) -> Optional[float]:
         """Close the worker's ledger, buffer its record, and return the
         chunk's total elapsed time (the value to feed ``stream.next`` so

@@ -7,6 +7,19 @@ finish (EOS / max tokens) immediately dequeue the next request chunk, i.e.
 ``schedule(dynamic, 1)``; guided/factoring variants admit several requests
 per dequeue when the queue is deep.
 
+Decode runs **batched** by default: all slots share one stacked
+``[slots, max_len]`` KV cache with per-slot lengths, and each generated
+token is ONE jitted decode call across the whole team with an active-slot
+mask (``make_batched_serve_step``).  Admission prefills a request at
+batch=1 and scatters its cache into the slot's row
+(``model.insert_prefill``), so in-flight slots are untouched.  The batched
+path is token-for-token identical to the per-slot escape hatch
+(``batched=False`` / ``--per-slot``: one jit call per active slot per
+token over per-slot batch-1 caches) — the equivalence is locked down in
+``tests/test_serve.py``.  UDS admission semantics are IDENTICAL in both
+modes: the scheduler sees the same slots, the same dequeue order, and the
+same chunk feedback protocol.
+
 The loop is instrumented with :class:`~repro.core.telemetry.LoopTelemetry`:
 every chunk's **full wall time** — the prefill of each of its requests plus
 every decode step of their generations — is attributed to the slot that
@@ -37,7 +50,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
                         SchedulerContext, get_engine)
 from repro.core.spec import SpecLike, describe, resolve
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import (make_batched_serve_step, make_prefill_step,
+                                make_serve_step)
 from repro.models import get_model
 
 __all__ = ["ServeLoop", "main"]
@@ -62,14 +76,14 @@ class ServeLoop:
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
                  scheduler: SpecLike = "dynamic", seed: int = 0,
-                 history: Optional[LoopHistory] = None):
+                 history: Optional[LoopHistory] = None,
+                 batched: bool = True):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
         key = jax.random.PRNGKey(seed)
         self.params, _ = self.model.init(key, jnp.float32)
-        self._decode = jax.jit(make_serve_step(self.model))
         # any schedule-clause form: spec, "guided,4", "uds:name", "runtime",
         # or a scheduler instance
         self.scheduler = scheduler
@@ -77,16 +91,54 @@ class ServeLoop:
         self.loop_id = "serve"
         self.history = history if history is not None else LoopHistory()
         self.last_stats: Dict[str, Any] = {}
-        # per-slot state: one cache per slot (batch=1) so admission is
-        # independent; production batches slots into one cache
-        self.caches = [self.model.init_decode(1, max_len, dtype=jnp.float32)[0]
-                       for _ in range(slots)]
+        # jitted prefill: compiled once per distinct prompt length (an
+        # eager lax.scan re-traces AND re-compiles on every admission —
+        # measured ~0.8s per prefill on the smoke config, dwarfing decode)
+        self._prefill = jax.jit(make_prefill_step(self.model,
+                                                  max_len=max_len))
+        # SSM/hybrid families have no stacked-cache decode yet: fall back
+        # to the per-slot path rather than refuse to serve
+        self.batched = bool(batched and self.model.batched_decode is not None)
+        if self.batched:
+            # one stacked [slots, max_len] cache, per-slot lengths; ONE
+            # jitted decode call per token across all active slots
+            self._decode_batched = jax.jit(make_batched_serve_step(self.model))
+            self._insert = jax.jit(self.model.insert_prefill)
+            self.cache = self.model.init_batched_decode(
+                slots, max_len, dtype=jnp.float32)[0]
+            self.caches = None
+        else:
+            # per-slot state: one cache per slot (batch=1), one jit call
+            # per active slot per token — the escape hatch / SSM path
+            self._decode = jax.jit(make_serve_step(self.model))
+            self.caches = [self.model.init_decode(1, max_len,
+                                                  dtype=jnp.float32)[0]
+                           for _ in range(slots)]
         self.active: Dict[int, Request] = {}
 
+    @property
+    def mode(self) -> str:
+        return "batched" if self.batched else "per_slot"
+
     def _prefill_into(self, slot: int, req: Request) -> int:
+        # the cache holds the prompt plus one KV per decode step; past
+        # max_len the two decode paths would each clamp/drop DIFFERENTLY
+        # (silently wrong tokens) — refuse loudly instead
+        need = int(req.prompt.size) + req.max_new - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({req.prompt.size} tokens) + "
+                f"max_new ({req.max_new}) needs a cache of {need} "
+                f"positions > max_len={self.max_len}; raise ServeLoop "
+                f"max_len or shorten the request")
         inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, cache = self.model.prefill(self.params, inputs, self.max_len)
-        self.caches[slot] = cache
+        logits, cache = self._prefill(self.params, inputs)
+        if self.batched:
+            # masked scatter into the slot's row of the stacked cache;
+            # every other (possibly in-flight) slot is untouched
+            self.cache = self._insert(self.cache, cache, slot)
+        else:
+            self.caches[slot] = cache
         tok = int(jnp.argmax(logits, -1)[0])
         req.generated = [tok]
         return tok
@@ -140,19 +192,43 @@ class ServeLoop:
                     progressed = True
             # one decode step across active slots
             done_slots = []
-            for s, req in list(self.active.items()):
-                last = req.generated[-1]
+            if self.batched and self.active:
+                act = sorted(self.active)
+                last = np.zeros((self.slots, 1), np.int32)
+                mask = np.zeros((self.slots,), bool)
+                for s in act:
+                    last[s, 0] = self.active[s].generated[-1]
+                    mask[s] = True
                 t0 = time.perf_counter()
-                tok, cache = self._decode(
-                    self.params, {"tokens": jnp.asarray([[last]])},
-                    self.caches[s])
-                self.caches[s] = cache
-                req.generated.append(int(tok[0]))
-                telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
+                tok, self.cache = self._decode_batched(
+                    self.params, {"tokens": jnp.asarray(last)},
+                    self.cache, jnp.asarray(mask))
+                tok = np.asarray(tok)       # device sync: true wall time
+                # one call served every active slot: equal wall-time shares
+                # keep per-slot attribution (AWF still replans per slot)
+                telemetry.add_time_split(act, time.perf_counter() - t0,
+                                         tokens=1)
                 progressed = True
-                if len(req.generated) >= req.max_new:
-                    results[req.rid] = req.generated
-                    done_slots.append(s)
+                for s in act:
+                    req = self.active[s]
+                    req.generated.append(int(tok[s]))
+                    if len(req.generated) >= req.max_new:
+                        results[req.rid] = req.generated
+                        done_slots.append(s)
+            else:
+                for s, req in list(self.active.items()):
+                    last = req.generated[-1]
+                    t0 = time.perf_counter()
+                    tok, cache = self._decode(
+                        self.params, {"tokens": jnp.asarray([[last]])},
+                        self.caches[s])
+                    self.caches[s] = cache
+                    req.generated.append(int(tok[0]))
+                    telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
+                    progressed = True
+                    if len(req.generated) >= req.max_new:
+                        results[req.rid] = req.generated
+                        done_slots.append(s)
             for s in done_slots:
                 del self.active[s]
                 if not pending[s]:
@@ -163,6 +239,7 @@ class ServeLoop:
                 break
         stream.close()        # flushes telemetry -> history epoch bump
         self.last_stats = telemetry.summary()
+        self.last_stats["mode"] = self.mode
         return results
 
     def measured_epoch(self) -> int:
@@ -182,6 +259,13 @@ def main() -> None:
                          '"uds:name(args)", or "runtime" '
                          "(late-bound from $REPRO_SCHEDULE)")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batched", dest="batched", action="store_true",
+                    default=True,
+                    help="one jitted decode call per token across all "
+                         "active slots over a stacked KV cache (default)")
+    ap.add_argument("--per-slot", dest="batched", action="store_false",
+                    help="escape hatch: one decode call per active slot "
+                         "per token over per-slot batch-1 caches")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -192,13 +276,15 @@ def main() -> None:
                                         ).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler)
+    loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler,
+                     batched=args.batched)
     t0 = time.perf_counter()
     out = loop.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s) under schedule({loop.sched_name}); "
+          f"({toks/dt:.1f} tok/s, {loop.mode} decode) "
+          f"under schedule({loop.sched_name}); "
           f"measured epoch {loop.measured_epoch()}, "
           f"imbalance {loop.last_stats.get('imbalance')}")
 

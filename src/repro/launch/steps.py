@@ -26,7 +26,8 @@ from repro.core.spec import SpecLike
 from repro.sharding import constrain
 
 __all__ = ["chunked_softmax_ce", "make_train_step", "make_prefill_step",
-           "make_serve_step", "apply_microbatch_plan", "plan_microbatches",
+           "make_serve_step", "make_batched_serve_step",
+           "apply_microbatch_plan", "plan_microbatches",
            "input_specs", "head_weights"]
 
 Tree = Any
@@ -227,6 +228,26 @@ def make_serve_step(model: Model) -> Callable:
     def serve_step(params, batch, cache):
         logits, cache = model.decode(params, batch, cache,
                                      cap_e=batch.get("cap_e"))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, cache
+    return serve_step
+
+
+def make_batched_serve_step(model: Model) -> Callable:
+    """One decode step across ALL serving slots of a stacked cache: greedy
+    token per slot + updated cache.  ``active (slots,) bool`` masks the
+    cache/length update for idle slots; their token output is meaningless
+    and discarded by the caller.  One jitted call per generated token for
+    the whole team — the batched ``ServeLoop`` hot path."""
+    if model.batched_decode is None:
+        raise ValueError(
+            f"{model.name}: model family has no batched decode path "
+            f"(use the per-slot serve step)")
+
+    def serve_step(params, batch, cache, active):
+        logits, cache = model.batched_decode(params, batch, cache,
+                                             active=active,
+                                             cap_e=batch.get("cap_e"))
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return token, cache
     return serve_step

@@ -8,6 +8,17 @@ training/serving steps, dry-run, and tests never branch on architecture:
     model.init_decode(batch, max_len) -> (cache/state, specs)
     model.decode(params, inputs, st)  -> (logits, new st)
     model.prefill(params, inputs, max_len) -> (logits, cache)  # attn archs
+
+Attention (KV-cache) archs additionally expose the batched serving path —
+one stacked cache with per-slot lengths, one decode call for all slots:
+
+    model.init_batched_decode(slots, max_len) -> (cache, specs)
+    model.batched_decode(params, inputs, cache, active=mask)
+                                      -> (logits (B,V), new cache)
+    model.insert_prefill(cache, prefill_cache, slot) -> cache
+
+They are ``None`` for state-space / hybrid families (``ServeLoop`` falls
+back to per-slot decode there).
 """
 
 from __future__ import annotations
@@ -32,6 +43,11 @@ class Model:
     init_decode: Callable
     decode: Callable
     prefill: Optional[Callable] = None
+    # batched serving path (stacked cache, per-slot lengths); None when the
+    # family has no batched decode implementation
+    init_batched_decode: Optional[Callable] = None
+    batched_decode: Optional[Callable] = None
+    insert_prefill: Optional[Callable] = None
 
     @property
     def name(self) -> str:
@@ -77,4 +93,11 @@ def get_model(cfg: ModelConfig) -> Model:
                 transformer.decode_step(params, cfg, inputs, cache, **kw)),
         prefill=(lambda params, inputs, max_len=None, **kw:
                  transformer.prefill(params, cfg, inputs, max_len, **kw)),
+        init_batched_decode=(lambda slots, max_len, **kw:
+                             transformer.init_batched_cache(cfg, slots,
+                                                            max_len, **kw)),
+        batched_decode=(lambda params, inputs, cache, **kw:
+                        transformer.batched_decode_step(params, cfg, inputs,
+                                                        cache, **kw)),
+        insert_prefill=transformer.insert_prefill,
     )

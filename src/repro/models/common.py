@@ -29,7 +29,7 @@ from repro.sharding import constrain
 __all__ = [
     "ParamBuilder", "rms_norm", "make_rope", "apply_rope", "apply_mrope",
     "sinusoidal_positions", "attention", "blockwise_attention", "mlp_swiglu",
-    "mlp_gelu", "decode_attention",
+    "mlp_gelu", "decode_attention", "scatter_kv",
 ]
 
 Tree = Dict[str, Any]
@@ -296,17 +296,35 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cur_len: jax.Array) -> jax.Array:
     """Single-token decode: q (B, 1, H, hd) vs cache (B, S, KV, hd); positions
-    >= cur_len are masked out."""
+    >= cur_len are masked out.  ``cur_len`` is a scalar shared by every row
+    or a (B,) vector of per-row lengths (the batched serving cache, where
+    each slot's sequence has its own fill)."""
     groups = q.shape[2] // k_cache.shape[2]
     k = _repeat_kv(k_cache, groups)
     v = _repeat_kv(v_cache, groups)
     scale = 1.0 / math.sqrt(q.shape[-1])
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
+    cur_len = jnp.reshape(cur_len, (-1, 1, 1, 1))   # () -> (1,..); (B,) -> (B,..)
     valid = jnp.arange(k.shape[1])[None, None, None, :] < cur_len
     logits = jnp.where(valid, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def scatter_kv(cache: jax.Array, new: jax.Array, cur: jax.Array,
+               active: jax.Array) -> jax.Array:
+    """Masked per-row KV append: write ``new`` (B, 1, C) into ``cache``
+    (B, S, C) at position ``cur[b]`` for every row with ``active[b]``;
+    inactive rows (and every other position) pass through untouched.
+
+    This is the batched-decode twin of ``dynamic_update_slice_in_dim``: each
+    slot of a stacked serving cache appends at its *own* sequence position.
+    """
+    S = cache.shape[1]
+    hit = (jnp.arange(S)[None, :] == jnp.reshape(cur, (-1, 1)))   # (B, S)
+    hit = hit & jnp.reshape(active, (-1, 1))
+    return jnp.where(hit[..., None], new.astype(cache.dtype), cache)
 
 
 # ----------------------------------------------------------------- MLPs

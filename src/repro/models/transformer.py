@@ -19,11 +19,13 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.common import (ParamBuilder, apply_mrope, apply_rope,
                                  decode_attention, make_rope, mlp_gelu,
-                                 mlp_swiglu, rms_norm, sinusoidal_positions)
+                                 mlp_swiglu, rms_norm, scatter_kv,
+                                 sinusoidal_positions)
 from repro.models.moe import moe_ffn
 from repro.sharding import constrain, current_rules
 
-__all__ = ["init_params", "forward", "init_cache", "decode_step", "prefill"]
+__all__ = ["init_params", "forward", "init_cache", "init_batched_cache",
+           "decode_step", "batched_decode_step", "insert_prefill", "prefill"]
 
 Tree = Dict[str, Any]
 
@@ -277,18 +279,57 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache, specs
 
 
-def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
-                cache: Tree, *, cap_e: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, Tree]:
-    """One-token decode: inputs token (B,1) (or embeds (B,1,D)); returns
-    (logits (B,V), updated cache)."""
-    cur = cache["len"]
+def init_batched_cache(cfg: ModelConfig, slots: int, max_len: int,
+                       dtype: jnp.dtype = jnp.bfloat16,
+                       abstract: bool = False) -> Tuple[Tree, Tree]:
+    """Stacked serving cache: one ``(L, slots, max_len, KV*hd)`` buffer per
+    k/v shared by every decode slot, with a **per-slot** length vector
+    ``len (slots,)`` — each slot's sequence has its own fill, so one jitted
+    decode call serves all slots at their respective positions (the batched
+    ``ServeLoop`` layout; see ``batched_decode_step``)."""
+    cache, specs = init_cache(cfg, slots, max_len, dtype, abstract=abstract)
+    z = (jax.ShapeDtypeStruct if abstract
+         else (lambda s, d: jnp.zeros(s, d)))
+    cache["len"] = z((slots,), jnp.int32)
+    specs["len"] = ("batch",)
+    return cache, specs
+
+
+def insert_prefill(cache: Tree, pref: Tree, slot: jax.Array) -> Tree:
+    """Admission scatter: copy a single-request prefill cache (batch=1,
+    same ``max_len``) into row ``slot`` of a stacked batched cache and set
+    that slot's fill to the prompt length.  Other slots are untouched, so
+    admission composes with in-flight decode on every other slot."""
+    k = jax.lax.dynamic_update_index_in_dim(
+        cache["k"], pref["k"][:, 0].astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_index_in_dim(
+        cache["v"], pref["v"][:, 0].astype(cache["v"].dtype), slot, axis=1)
+    ln = jax.lax.dynamic_update_index_in_dim(
+        cache["len"], pref["len"].astype(jnp.int32), slot, axis=0)
+    return {"k": k, "v": v, "len": ln}
+
+
+def _decode_forward(params: Tree, cfg: ModelConfig,
+                    inputs: Dict[str, jax.Array], cache: Tree,
+                    positions: jax.Array, kv_append, attend_len: jax.Array,
+                    cap_e: Optional[jax.Array]
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The one-token decode body shared by the per-slot and batched paths.
+
+    The two paths differ ONLY in how a layer's new K/V row lands in the
+    cache (``kv_append(cache_2d, new_(B,1,kv))``: ``dynamic_update_slice``
+    at a scalar length vs a masked per-row scatter) and in the
+    position/length values fed to rotary and attention masking — everything
+    else (qkv, attention, residual, MLP/MoE, final norm, head) is this one
+    function, so the engines cannot drift apart.
+
+    Returns (logits (B, V), new_k, new_v).
+    """
     if cfg.frontend != "none":
         x = inputs["embeds"].astype(params["embed"]["tok"].dtype)
     else:
         x = params["embed"]["tok"][inputs["tokens"]]
     B = x.shape[0]
-    positions = jnp.full((B, 1), cur, dtype=jnp.int32)
     if cfg.positional == "sinusoidal":
         x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
     pos3d = inputs.get("positions_3d")  # (3,B,1) for qwen2-vl
@@ -298,10 +339,8 @@ def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
         h = rms_norm(x, lp["ln1"])
         q, k, v = _attn_qkv(lp, cfg, h)
         q, k = _position_rotate(cfg, q, k, positions, pos3d)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kc, k.reshape(B, 1, cfg.kv_dim).astype(kc.dtype), cur, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            vc, v.reshape(B, 1, cfg.kv_dim).astype(vc.dtype), cur, axis=1)
+        kc = kv_append(kc, k.reshape(B, 1, cfg.kv_dim))
+        vc = kv_append(vc, v.reshape(B, 1, cfg.kv_dim))
         S_max = kc.shape[1]
         a = decode_attention(
             q,
@@ -309,7 +348,7 @@ def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
                        ).astype(q.dtype),
             vc.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
                        ).astype(q.dtype),
-            cur + 1)
+            attend_len)
         a = a.reshape(B, 1, cfg.q_dim)
         x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
         h = rms_norm(x, lp["ln2"])
@@ -330,6 +369,56 @@ def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
     head = (params["embed"]["tok"].T if cfg.tie_embeddings
             else params["lm_head"])
     logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0, :cfg.vocab_size]
+    return logits, new_k, new_v
+
+
+def batched_decode_step(params: Tree, cfg: ModelConfig,
+                        inputs: Dict[str, jax.Array], cache: Tree, *,
+                        active: Optional[jax.Array] = None,
+                        cap_e: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Tree]:
+    """One-token decode across every slot of a stacked cache.
+
+    ``cache`` comes from :func:`init_batched_cache`: per-slot lengths
+    ``len (B,)``.  ``active (B,) bool`` masks the update: inactive slots
+    neither append to their KV rows nor advance their length (their logits
+    row is computed but meaningless — the serve loop discards it), so the
+    math of every active slot is bit-identical to a batch-1 ``decode_step``
+    on that slot's cache — the tested equivalence guarantee.
+
+    Returns (logits (B, V), updated cache).
+    """
+    cur = cache["len"]                              # (B,) per-slot fill
+    B = cur.shape[0]
+    active = (jnp.ones((B,), bool) if active is None
+              else jnp.asarray(active).astype(bool))
+    logits, new_k, new_v = _decode_forward(
+        params, cfg, inputs, cache,
+        positions=cur[:, None],                     # (B, 1) per-slot
+        kv_append=lambda c, new: scatter_kv(c, new, cur, active),
+        attend_len=cur + 1,
+        cap_e=cap_e)
+    new_cache = {"k": new_k, "v": new_v,
+                 "len": cur + active.astype(jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                cache: Tree, *, cap_e: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Tree]:
+    """One-token decode: inputs token (B,1) (or embeds (B,1,D)); returns
+    (logits (B,V), updated cache).  ``cache["len"]`` is a scalar shared by
+    every row (see :func:`init_cache`)."""
+    cur = cache["len"]
+    B = (inputs["embeds"] if cfg.frontend != "none"
+         else inputs["tokens"]).shape[0]
+    logits, new_k, new_v = _decode_forward(
+        params, cfg, inputs, cache,
+        positions=jnp.full((B, 1), cur, dtype=jnp.int32),
+        kv_append=lambda c, new: jax.lax.dynamic_update_slice_in_dim(
+            c, new.astype(c.dtype), cur, axis=1),
+        attend_len=cur + 1,
+        cap_e=cap_e)
     new_cache = {"k": new_k, "v": new_v, "len": cur + 1}
     return logits, new_cache
 

@@ -10,9 +10,107 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (LoopSpec, make_scheduler, plan_schedule,
                         simulate_loop)
 from repro.core.interface import chunks_cover
+from repro.core.spec import ScheduleSpec, parse, resolve
 
 SCHEDULERS = ["static", "dynamic", "guided", "tss", "tfss", "taper",
               "fac2", "wf2", "awf_b", "af", "rand", "fsc", "static_steal"]
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSpec clause strategies (the PR-3 one-clause selection surface)
+# ---------------------------------------------------------------------------
+_ident = st.from_regex(r"[A-Za-z_][A-Za-z0-9_]{0,8}", fullmatch=True)
+# string parameters must not re-parse as a bool/none scalar
+_token = _ident.filter(lambda s: s.lower() not in ("true", "false", "none"))
+_scalar = st.one_of(
+    st.booleans(),
+    st.integers(-10**6, 10**6),
+    st.floats(allow_nan=False, allow_infinity=False),
+    _token,
+)
+
+
+@st.composite
+def schedule_specs(draw):
+    """Random well-formed ScheduleSpec values — every field the OpenMP-style
+    clause can carry (kind/uds namespace, chunk, positional params, named
+    params, WF2-family weights)."""
+    kind = draw(_ident.filter(lambda s: s != "runtime"))
+    if draw(st.booleans()):
+        kind = "uds:" + kind
+    chunk = draw(st.none() | st.integers(1, 10**6))
+    params = tuple(draw(st.lists(_scalar, max_size=3)))
+    kwargs = draw(st.dictionaries(
+        _ident.filter(lambda s: s != "weights"), _scalar, max_size=3))
+    weights = draw(st.none() | st.lists(
+        st.floats(min_value=1e-6, max_value=1e6), min_size=1, max_size=5))
+    return ScheduleSpec(kind=kind, chunk=chunk, params=params,
+                        kwargs=tuple(sorted(kwargs.items())),
+                        weights=tuple(weights) if weights else None)
+
+
+@st.composite
+def resolvable_clauses(draw):
+    """Random clause STRINGS that must resolve to a builtin scheduler:
+    (clause, num_workers, declared-min-chunk-or-None)."""
+    p = draw(st.integers(1, 16))
+    family = draw(st.sampled_from(
+        ["static", "dynamic", "guided", "taper", "tss", "fac2", "wf2",
+         "rand"]))
+    chunk = draw(st.none() | st.integers(1, 64))
+    if family == "taper":
+        mu = draw(st.floats(0.5, 4.0))
+        sigma = draw(st.floats(0.0, 1.0))
+        clause = f"taper(mu={mu!r},sigma={sigma!r})"
+    elif family == "tss":
+        first = draw(st.integers(1, 64))
+        last = draw(st.integers(1, first))
+        clause, chunk = f"tss({first},{last})", None
+    elif family == "wf2":
+        ws = ":".join(repr(draw(st.floats(0.5, 4.0))) for _ in range(p))
+        clause, chunk = f"wf2(weights={ws})", None
+    elif family == "rand":
+        clause = f"rand(seed={draw(st.integers(0, 99))})"
+    elif family == "fac2":
+        clause, chunk = "fac2", None
+    else:
+        clause = family
+    min_chunk = chunk if family in ("static", "dynamic", "guided",
+                                    "taper") else None
+    if chunk is not None:
+        clause += f",{chunk}"
+    return clause, p, min_chunk
+
+
+@given(spec=schedule_specs())
+@settings(max_examples=300, deadline=None)
+def test_spec_clause_roundtrip(spec):
+    """parse(str(spec)) == spec for EVERY representable clause: the canonical
+    rendering is lossless through the PR-3 parser (specs are plan-cache
+    identities, so a lossy render would silently split cached plans)."""
+    assert parse(str(spec)) == spec
+    # rendering is also a fixed point: one canonical string per spec
+    assert str(parse(str(spec))) == str(spec)
+
+
+@given(clause_p=resolvable_clauses(),
+       lb=st.integers(-50, 50),
+       n=st.integers(0, 2000))
+@settings(max_examples=150, deadline=None)
+def test_clause_resolved_plans_cover_loop(clause_p, lb, n):
+    """Any builtin clause string, any loop: the compiled plan's chunks
+    exactly partition [lb, ub), every chunk lands on a real worker, and the
+    clause's chunksize is respected as a minimum by every non-final chunk."""
+    from repro.core.engine import PlanEngine
+    clause, p, min_chunk = clause_p
+    loop = LoopSpec(lb=lb, ub=lb + n, num_workers=p, loop_id="prop_clause")
+    plan = PlanEngine().plan(resolve(clause), loop)
+    assert chunks_cover(loop, plan.chunks)
+    assert all(c.size >= 1 for c in plan.chunks)
+    assert all(0 <= c.worker < p for c in plan.chunks)
+    if min_chunk is not None:
+        ordered = sorted(plan.chunks, key=lambda c: c.start)
+        assert all(c.size >= min_chunk for c in ordered[:-1])
 
 
 @given(name=st.sampled_from(SCHEDULERS),

@@ -1,0 +1,152 @@
+"""Serving-engine tests: batched-vs-per-slot equivalence and telemetry.
+
+The batched decode path (one jitted call per token across all slots over a
+stacked ``[slots, max_len]`` KV cache) must be *behaviourally invisible*:
+
+* token-for-token identical generations to the per-slot escape hatch
+  (one jit call per active slot over batch-1 caches), and
+* identical chunk→slot assignments from the UDS admission scheduler,
+
+for every builtin schedule family — static chunking, guided self-scheduling
+and adaptive weighted factoring.  The telemetry loop must keep feeding
+per-slot busy times into the LoopHistory so AWF admission still replans
+per slot (the PR-2 measure stage survives batching).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import LoopHistory, LoopSpec, get_engine
+from repro.core.spec import resolve
+from repro.launch.serve import Request, ServeLoop
+
+SLOTS = 3
+MAX_LEN = 64
+MAX_NEW = 3
+N_REQUESTS = 6
+
+
+def make_requests(seed: int, n: int = N_REQUESTS, max_new: int = MAX_NEW):
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke_config("qwen2.5-3b")
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 12))
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen2.5-3b")
+
+
+# one loop per mode, shared across schedule families (compile once);
+# scheduler and history are swapped per run
+@pytest.fixture(scope="module")
+def batched_loop(cfg):
+    return ServeLoop(cfg, slots=SLOTS, max_len=MAX_LEN, batched=True)
+
+
+@pytest.fixture(scope="module")
+def per_slot_loop(cfg):
+    return ServeLoop(cfg, slots=SLOTS, max_len=MAX_LEN, batched=False)
+
+
+def run_with(loop: ServeLoop, scheduler, seed: int):
+    """Run one isolated invocation: fresh history (no adaptive carry-over
+    between parametrized cases), returning (results, chunk assignments)."""
+    loop.scheduler = scheduler
+    loop.history = LoopHistory()
+    out = loop.run(make_requests(seed))
+    chunks = sorted((c.worker, c.start, c.stop)
+                    for c in loop.history.invocations(loop.loop_id)[-1].chunks)
+    return out, chunks
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("clause", ["static", "guided,2", "awf"])
+def test_batched_token_and_assignment_equivalence(clause, batched_loop,
+                                                  per_slot_loop):
+    """The tentpole guarantee: under every builtin schedule family the
+    batched engine serves the same tokens to the same requests, admitted
+    through the same chunk→slot assignments, as the per-slot path."""
+    out_b, chunks_b = run_with(batched_loop, clause, seed=42)
+    out_p, chunks_p = run_with(per_slot_loop, clause, seed=42)
+    assert batched_loop.mode == "batched"
+    assert per_slot_loop.mode == "per_slot"
+    assert sorted(out_b) == list(range(N_REQUESTS))
+    assert out_b == out_p                      # token-for-token identical
+    assert chunks_b == chunks_p                # same UDS admission decisions
+
+
+def test_batched_is_the_default(cfg, batched_loop):
+    assert ServeLoop.__init__.__kwdefaults__["batched"] is True
+    assert batched_loop.batched
+    # stacked cache: one buffer for all slots, per-slot lengths
+    assert batched_loop.cache["len"].shape == (SLOTS,)
+    assert batched_loop.cache["k"].shape[1] == SLOTS
+    assert batched_loop.caches is None
+
+
+def test_ssm_family_falls_back_to_per_slot():
+    """rwkv6 has no stacked-cache decode yet: requesting batched serving
+    must degrade to the per-slot path instead of refusing to serve."""
+    from repro.models import get_model
+    cfg = get_smoke_config("rwkv6-3b")
+    assert get_model(cfg).batched_decode is None
+
+
+def test_over_capacity_request_is_refused(batched_loop):
+    """prompt + max_new beyond max_len must raise, not silently clamp or
+    drop KV appends (the two decode paths would diverge differently)."""
+    prompt = np.arange(MAX_LEN - 2, dtype=np.int32) % 16
+    batched_loop.scheduler = "dynamic"
+    batched_loop.history = LoopHistory()
+    with pytest.raises(ValueError, match="max_len"):
+        batched_loop.run([Request(rid=0, prompt=prompt, max_new=8)])
+
+
+def test_partial_team_drain(batched_loop):
+    """More slots than requests at the tail: the active-slot mask must let
+    a partially-filled team drain without corrupting idle slots."""
+    out, _ = run_with(batched_loop, "dynamic", seed=7)
+    assert sorted(out) == list(range(N_REQUESTS))
+    assert all(len(v) == MAX_NEW for v in out.values())
+
+
+# --------------------------------------------------------------- telemetry
+def test_batched_busy_times_bump_epoch_and_replan(cfg):
+    """The measure stage survives batching: each run flushes per-slot busy
+    times into the history (epoch bump), and the bumped epoch invalidates
+    the engine's cached adaptive plan, so AWF admission replans from the
+    measured data."""
+    loop = ServeLoop(cfg, slots=2, max_len=MAX_LEN, scheduler="awf",
+                     batched=True)
+    assert loop.measured_epoch() == 0
+    out1 = loop.run(make_requests(0))
+    assert sorted(out1) == list(range(N_REQUESTS))
+    assert loop.measured_epoch() == 1
+
+    # per-slot attribution is intact: every slot that served a chunk has
+    # positive measured busy time and generated-token credit
+    per_worker = loop.last_stats["per_worker"]
+    assert loop.last_stats["mode"] == "batched"
+    served = [w for w, st in per_worker.items() if st["chunks"] > 0]
+    assert served
+    assert all(per_worker[w]["time_s"] > 0 for w in served)
+    assert all(per_worker[w]["tokens"] > 0 for w in served)
+    rates = loop.history.worker_rates(loop.loop_id)
+    assert rates and all(r > 0 for r in rates.values())
+
+    # epoch is the adaptive plan-cache key: the same (scheduler, loop)
+    # query before and after the next flush must be a fresh plan object
+    spec = LoopSpec(0, N_REQUESTS, num_workers=2, loop_id=loop.loop_id)
+    plan1 = get_engine().plan(resolve("awf"), spec, history=loop.history)
+    out2 = loop.run(make_requests(1))
+    assert sorted(out2) == list(range(N_REQUESTS))
+    assert loop.measured_epoch() == 2
+    plan2 = get_engine().plan(resolve("awf"), spec, history=loop.history)
+    assert plan1 is not plan2          # cache invalidated -> replanned
