@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-validate coverage lint smoke bench bench-plan bench-gate deps deps-dev
+.PHONY: test test-fast test-validate test-multihost coverage lint smoke bench bench-plan bench-gate deps deps-dev
 
 test:           ## tier-1 verify (full suite, fail-fast)
 	$(PYTHON) -m pytest -x -q
@@ -15,9 +15,14 @@ test-fast:      ## core scheduling + engine + telemetry tests only
 test-validate:  ## tier-1 with plan validation on
 	REPRO_PLAN_VALIDATE=1 $(PYTHON) -m pytest -x -q
 
-coverage:       ## tier-1 under coverage; fails below the CI floor (80%)
-	$(PYTHON) -m pytest -q --cov=repro --cov-report=term-missing \
-	    --cov-report=xml --cov-fail-under=80
+test-multihost: ## multi-host equivalence + replan suite (4 emulated hosts)
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m pytest -q tests/test_train_multihost.py
+
+coverage:       ## tier-1 under coverage (4 emulated hosts); CI floor 82%
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m pytest -q --cov=repro --cov-report=term-missing \
+	    --cov-report=xml --cov-fail-under=82
 
 lint:           ## ruff over the whole tree (rule set in ruff.toml)
 	ruff check .
@@ -34,6 +39,12 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	REPRO_UDS_MODULES=examples.uds_blocks PYTHONPATH=src:. \
 	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --scheduler "uds:blocks,8"
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m pytest -q tests/test_train_multihost.py
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 4 --seq-len 64 --hosts 4 \
+	    --straggler-scheduler "wf2"
 
 bench:          ## full benchmark harness (CSV stdout, JSON to benchmarks/results/)
 	$(PYTHON) benchmarks/run.py
@@ -44,6 +55,7 @@ bench-plan:     ## plan-engine speedup + cache-hit acceptance check
 bench-gate:     ## CI regression gates: write BENCH_*.json, fail on regression
 	$(PYTHON) benchmarks/plan_engine.py --json BENCH_plan_engine.json --gate
 	$(PYTHON) benchmarks/serve_adapt.py --json BENCH_serve.json --gate
+	$(PYTHON) benchmarks/train_straggler.py --json BENCH_train.json --gate
 
 deps:
 	pip install -r requirements.txt

@@ -241,12 +241,22 @@ def serve_adapt() -> list:
     return sa.rows(skip_serve=True)
 
 
+def train_straggler() -> list:
+    """Multi-host AWF share convergence (pure-host stage; the real
+    4-emulated-host train stage runs via
+    ``python benchmarks/train_straggler.py``)."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).parent))
+    import train_straggler as ts
+    return ts.rows(skip_train=True)
+
+
 def main() -> None:
     RESULTS.mkdir(exist_ok=True)
     all_rows = []
     for fn in (chunk_tables, interface_equiv, makespan, overhead, packing,
                moe_capacity_bench, straggler, plan_engine, serve_adapt,
-               kernels, roofline):
+               train_straggler, kernels, roofline):
         try:
             all_rows.extend(fn())
         except Exception as e:  # pragma: no cover

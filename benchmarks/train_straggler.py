@@ -1,0 +1,231 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+# NOTE: the env var above MUST be set before any jax import (jax locks the
+# device count on first init) — the same contract as launch/dryrun.py.
+
+_DOC = """Multi-host straggler benchmark: AWF token shares rebalance the train loop.
+
+The acceptance criterion of the multi-host TrainLoop as numbers: with 4
+emulated hosts and one host slowed 2x, the plan -> execute -> measure ->
+replan loop must demonstrably rebalance the uneven batch split.  Two
+stages, serialized machine-readably (CI: ``--json BENCH_train.json``
+uploaded as an artifact, ``--gate`` as the exit code):
+
+1. **Share convergence** (pure host, no JAX): a ``StragglerMitigator`` fed
+   synthetic per-host step times with one 2x-slow host.  Tracks the cold
+   start (exact uniform shares before any measurement — the regression the
+   cold-start fix locks), the slow host's share trajectory, and the
+   converged fraction vs the ideal ``(1/2) / 3.5``.
+
+2. **Train loop** (real model, 4 emulated CPU hosts): TWO ``TrainLoop``
+   runs over the SAME seed/data — one adaptive (AWF shares drive
+   ``split_batch_by_shares``), one pinned to static even shares
+   (``min_host_share=1.0`` floors every host at the even share, making the
+   splitter a no-op) — with ``host_skew`` injecting the 2x-slow host into
+   the per-host time attribution.  Per step both loops report a VIRTUAL
+   makespan ``max_h(tokens_h * skew_h)`` in token-cost units (masked
+   tokens cost nothing on a real slow host's feed; wall time on the
+   emulator cannot show this, exactly like ``serve_adapt``'s virtual
+   executor stage).  The gate: steady-state recovery
+   ``static_makespan / adaptive_makespan >= 1.3`` — the slow host sheds
+   enough tokens that the modelled step time beats even splitting by 30%+.
+"""
+# ^ a named constant, not __doc__: the XLA env setup must be the module's
+# first statements, and a docstring cannot follow them
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).parent / "results"
+
+HOSTS = 4
+SLOW_HOST = 3
+SLOW_FACTOR = 2.0
+RECOVERY_GATE = 1.3    # steady-state step-time recovery vs even shares
+
+
+def shares_convergence(steps: int = 12, total: int = 4096) -> dict:
+    """Pure-host stage: observe_step with a synthetic 2x-slow host."""
+    from repro.sched import StragglerMitigator
+
+    m = StragglerMitigator(num_hosts=HOSTS, min_share=0.1)
+    shares = m.token_shares(total)
+    cold = shares.tolist()
+    traj = [round(float(shares[SLOW_HOST]) / total, 4)]
+    rate = 1e-4                       # nominal seconds per token
+    for _ in range(steps):
+        times = {h: float(shares[h]) * rate
+                 * (SLOW_FACTOR if h == SLOW_HOST else 1.0)
+                 for h in range(HOSTS)}
+        m.observe_step(times, host_tokens={h: max(int(shares[h]), 1)
+                                           for h in range(HOSTS)})
+        shares = m.token_shares(total)
+        traj.append(round(float(shares[SLOW_HOST]) / total, 4))
+    ideal = (1.0 / SLOW_FACTOR) / (HOSTS - 1 + 1.0 / SLOW_FACTOR)
+    base, rem = divmod(total, HOSTS)
+    uniform = [base + 1] * rem + [base] * (HOSTS - rem)
+    return {
+        "total_tokens": total,
+        "cold_start_shares": cold,
+        "cold_start_uniform": cold == uniform,
+        "slow_frac": traj,                  # slow host's share per step
+        "ideal_frac": round(ideal, 4),
+        "converged": abs(traj[-1] - ideal) < 0.05,
+        "epochs": m.epoch(),
+    }
+
+
+def train_straggler(arch: str = "qwen2.5-3b", steps: int = 12,
+                    batch: int = 16, seq_len: int = 128,
+                    data_sigma: float = 0.5, steady_k: int = 4) -> dict:
+    """Real multi-host train loops: adaptive AWF shares vs static even."""
+    import jax
+
+    if jax.device_count() < HOSTS:
+        raise SystemExit(f"needs {HOSTS} devices; run with XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={HOSTS}")
+    from repro.configs import get_smoke_config
+    from repro.launch.train import TrainLoop
+
+    cfg = get_smoke_config(arch)
+    skew = np.ones(HOSTS)
+    skew[SLOW_HOST] = SLOW_FACTOR
+
+    def drive(min_host_share: float) -> dict:
+        # 4 rows per host + a tight document-length spread keep the host
+        # BLOCKS token-balanced, so the measured imbalance is the injected
+        # host slowdown, not packing noise
+        loop = TrainLoop(cfg, batch=batch, seq_len=seq_len, seed=0,
+                         hosts=HOSTS, host_skew=skew,
+                         data_sigma=data_sigma,
+                         min_host_share=min_host_share)
+        makespans, slow_frac, losses = [], [], []
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            losses += loop.run(1, log_every=10 ** 9)
+            ht = loop._host_tokens.astype(float)
+            makespans.append(float((ht * skew).max()))
+            slow_frac.append(round(float(ht[SLOW_HOST])
+                                   / max(float(ht.sum()), 1.0), 4))
+        return {
+            "min_host_share": min_host_share,
+            "makespan_tokens": [round(m, 1) for m in makespans],
+            "slow_frac": slow_frac,
+            "steady_makespan": round(float(np.mean(makespans[-steady_k:])),
+                                     1),
+            "final_loss": round(losses[-1], 4),
+            "losses_finite": bool(np.isfinite(losses).all()),
+            "epochs": loop.mitigator.epoch(),
+            "stragglers": loop.mitigator.stragglers(),
+            "wall_s": round(time.perf_counter() - t0, 3),
+        }
+
+    adaptive = drive(min_host_share=0.1)
+    static = drive(min_host_share=1.0)     # even-share floor: splitter no-op
+    recovery = round(static["steady_makespan"]
+                     / max(adaptive["steady_makespan"], 1e-9), 3)
+    return {
+        "arch": arch,
+        "hosts": HOSTS,
+        "slow_host": SLOW_HOST,
+        "slow_factor": SLOW_FACTOR,
+        "steps": steps,
+        "batch": batch,
+        "seq_len": seq_len,
+        "data_sigma": data_sigma,
+        "adaptive": adaptive,
+        "static": static,
+        "rebalance_ratio": round(static["slow_frac"][-1]
+                                 / max(adaptive["slow_frac"][-1], 1e-9), 3),
+        "recovered_step_time": recovery,
+        "recovery_gate": RECOVERY_GATE,
+    }
+
+
+def collect(skip_train: bool = False) -> dict:
+    record: dict = {"bench": "train_straggler",
+                    "shares": shares_convergence()}
+    sh = record["shares"]
+    checks = {
+        "cold_start_uniform": sh["cold_start_uniform"],
+        "shares_converged": sh["converged"],
+        "shares_epoch_advanced": sh["epochs"] >= 1,
+    }
+    if not skip_train:
+        record["train"] = train_straggler()
+        tr = record["train"]
+        checks["train_losses_finite"] = (tr["adaptive"]["losses_finite"]
+                                         and tr["static"]["losses_finite"])
+        checks["train_epoch_per_step"] = (tr["adaptive"]["epochs"]
+                                          == tr["steps"])
+        checks["slow_host_flagged"] = SLOW_HOST in tr["adaptive"][
+            "stragglers"]
+        checks["slow_share_dropped"] = bool(
+            tr["adaptive"]["slow_frac"][-1]
+            < tr["static"]["slow_frac"][-1] - 0.03)
+        checks["recovery_gate"] = bool(tr["recovered_step_time"]
+                                       >= RECOVERY_GATE)
+    record["gate"] = {"checks": checks, "pass": all(checks.values())}
+    return record
+
+
+def rows(skip_train: bool = True) -> list:
+    """Harness contract: ``name,us_per_call,derived`` rows for run.py."""
+    rec = collect(skip_train=skip_train)
+    sh = rec["shares"]
+    out = [("train_straggler/shares", 0.0,
+            f"slow_frac={sh['slow_frac'][0]}->{sh['slow_frac'][-1]};"
+            f"ideal={sh['ideal_frac']}")]
+    if "train" in rec:
+        tr = rec["train"]
+        out.append(("train_straggler/train", 0.0,
+                    f"recovery={tr['recovered_step_time']};"
+                    f"rebalance={tr['rebalance_ratio']}"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the machine-readable record here "
+                         "(CI: BENCH_train.json)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 unless the multi-host loop demonstrably "
+                         "rebalanced off the injected slow host")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="share-convergence stage only (no JAX model)")
+    args = ap.parse_args(argv)
+
+    record = collect(skip_train=args.skip_train)
+    sh = record["shares"]
+    print(f"shares: slow-host fraction {sh['slow_frac'][0]} -> "
+          f"{sh['slow_frac'][-1]} (ideal {sh['ideal_frac']}), "
+          f"cold start uniform: {sh['cold_start_uniform']}")
+    if "train" in record:
+        tr = record["train"]
+        print(f"train: slow-host share {tr['adaptive']['slow_frac'][0]} -> "
+              f"{tr['adaptive']['slow_frac'][-1]}, virtual makespan "
+              f"{tr['static']['steady_makespan']} (static even) -> "
+              f"{tr['adaptive']['steady_makespan']} (AWF) = "
+              f"{tr['recovered_step_time']}x recovery "
+              f"(gate >= {RECOVERY_GATE}x)")
+    status = "PASS" if record["gate"]["pass"] else "FAIL"
+    print(f"# gate: {record['gate']['checks']} -> {status}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "train_straggler.json").write_text(
+        json.dumps(record, indent=1))
+    if args.json is not None:
+        args.json.write_text(json.dumps(record, indent=1))
+        print(f"# wrote {args.json}")
+    return 0 if (record["gate"]["pass"] or not args.gate) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,31 @@ import json
 import math
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["ChunkRecord", "InvocationRecord", "LoopHistory"]
+__all__ = ["ChunkRecord", "InvocationRecord", "LoopHistory",
+           "awf_weights_from_rates"]
+
+
+def awf_weights_from_rates(rates: Dict[int, float],
+                           num_workers: int) -> List[float]:
+    """AWF (Banicescu et al.) capability weights from per-worker rates
+    (seconds/iteration): weight_i ∝ 1/rate_i, normalized to sum
+    ``num_workers``; workers without a usable rate get the mean speed;
+    degenerate inputs (no rates, zeros, non-finite totals) fall back to
+    exact uniform ones.  The ONE home of the formula — both the history's
+    token-weighted rates and the straggler mitigator's step-mean rates
+    feed through here."""
+    if not rates:
+        return [1.0] * num_workers
+    speeds = {w: 1.0 / r for w, r in rates.items()
+              if r > 0 and math.isfinite(r)}
+    if not speeds:
+        return [1.0] * num_workers
+    mean_speed = sum(speeds.values()) / len(speeds)
+    raw = [speeds.get(w, mean_speed) for w in range(num_workers)]
+    total = sum(raw)
+    if not (total > 0 and math.isfinite(total)):
+        return [1.0] * num_workers
+    return [num_workers * s / total for s in raw]
 
 
 @dataclasses.dataclass
@@ -149,20 +173,10 @@ class LoopHistory:
         return out
 
     def awf_weights(self, loop_id: str, num_workers: int) -> List[float]:
-        """AWF (Banicescu et al.) capability weights, normalized to sum P.
-
-        weight_i ∝ (1/rate_i); workers never measured get the mean weight.
-        """
-        rates = self.worker_rates(loop_id)
-        if not rates:
-            return [1.0] * num_workers
-        speeds = {w: 1.0 / r for w, r in rates.items() if r > 0}
-        mean_speed = sum(speeds.values()) / max(len(speeds), 1)
-        raw = [speeds.get(w, mean_speed) for w in range(num_workers)]
-        total = sum(raw)
-        if total <= 0:
-            return [1.0] * num_workers
-        return [num_workers * s / total for s in raw]
+        """AWF capability weights over this history's token-weighted rates
+        (see ``awf_weights_from_rates`` for the formula)."""
+        return awf_weights_from_rates(self.worker_rates(loop_id),
+                                      num_workers)
 
     # ------------------------------------------------------ serialization
     def to_json(self) -> str:

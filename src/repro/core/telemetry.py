@@ -149,6 +149,31 @@ class LoopTelemetry:
         for w in ws:
             self.add_time(w, share, tokens=tokens)
 
+    def add_time_weighted(self, dt: float, weights: Dict[int, float],
+                          tokens: Optional[Dict[int, int]] = None) -> None:
+        """Split one measured wall time across the open ledgers
+        proportionally to ``weights`` — per-host attribution for a
+        lockstep data-parallel train step (the multi-host mirror of
+        :meth:`add_time_split`): ONE jitted step advances every host, so
+        host ``h`` is charged ``dt * w_h / sum(w)``, its modelled share
+        of the step's compute, and credited its own token count.  In an
+        emulated-host run the weights ARE the measurement model (token
+        count x injected skew); a real multi-host deployment feeds
+        genuine per-host clocks instead.  Hosts without an open ledger
+        are skipped; a non-positive weight total falls back to an equal
+        split so a measurement is never silently dropped."""
+        ws = {w: max(float(weights.get(w, 0.0)), 0.0)
+              for w in self._open}
+        if not ws:
+            return
+        total = sum(ws.values())
+        if total <= 0.0:
+            ws = {w: 1.0 for w in ws}
+            total = float(len(ws))
+        for w, wt in ws.items():
+            self.add_time(w, float(dt) * wt / total,
+                          tokens=(tokens or {}).get(w, 0))
+
     def end(self, worker: int) -> Optional[float]:
         """Close the worker's ledger, buffer its record, and return the
         chunk's total elapsed time (the value to feed ``stream.next`` so

@@ -2,6 +2,8 @@
 
 from repro.launch.mesh import (
     base_rules,
+    batch_shardings,
+    make_host_mesh,
     make_mesh,
     make_production_mesh,
     rules_for,
@@ -14,10 +16,12 @@ from repro.launch.steps import (
     make_prefill_step,
     make_serve_step,
     make_train_step,
+    split_batch_by_shares,
 )
 
 __all__ = [
-    "make_production_mesh", "make_mesh", "base_rules", "rules_for",
-    "shardings_for", "spec_for", "chunked_softmax_ce", "input_specs",
-    "make_train_step", "make_prefill_step", "make_serve_step",
+    "make_production_mesh", "make_mesh", "make_host_mesh", "base_rules",
+    "rules_for", "shardings_for", "spec_for", "batch_shardings",
+    "chunked_softmax_ce", "input_specs", "make_train_step",
+    "make_prefill_step", "make_serve_step", "split_batch_by_shares",
 ]

@@ -20,14 +20,34 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.models.config import ModelConfig
 
-__all__ = ["make_production_mesh", "make_mesh", "Rules", "base_rules",
-           "rules_for", "spec_for", "shardings_for", "input_sharding"]
+__all__ = ["make_production_mesh", "make_mesh", "make_host_mesh", "Rules",
+           "base_rules", "rules_for", "spec_for", "shardings_for",
+           "input_sharding", "batch_shardings"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_host_mesh(num_hosts: int, model_par: int = 1) -> Mesh:
+    """Data-parallel mesh whose leading axis is a HOST: ``("host", "model")``
+    of shape ``(num_hosts, model_par)``.
+
+    The "host" axis is the straggler-mitigation unit — per-host step times
+    feed :class:`~repro.sched.straggler.StragglerMitigator`, whose AWF token
+    shares drive the uneven batch split.  On a real pod each "host" entry is
+    one process's device block; on CPU, N hosts are emulated with
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=N
+
+    exported before the first jax import (jax locks the device count on
+    first init — the same contract as launch/dryrun.py).
+    """
+    if num_hosts < 1:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+    return make_mesh((num_hosts, model_par), ("host", "model"))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
@@ -64,13 +84,18 @@ def base_rules(mesh: Mesh) -> Rules:
     model's state spreads over all 256 chips.
     """
     has_pod = "pod" in mesh.axis_names
-    batch_axes = ("pod", "data") if has_pod else ("data",)
+    if "host" in mesh.axis_names:      # make_host_mesh: hosts ARE the DP axis
+        batch_axes = ("host",)
+        fsdp_axis = "host"
+    else:
+        batch_axes = ("pod", "data") if has_pod else ("data",)
+        fsdp_axis = "data"
     return {
         "batch": batch_axes,
         "seq": None,             # sequence (activations) — context parallel off
         "seq_cache": None,       # KV-cache length axis
         "vocab": "model",
-        "embed": "data",         # FSDP axis on weights
+        "embed": fsdp_axis,      # FSDP axis on weights
         "heads": "model",
         "kv": "model",
         "mlp": "model",
@@ -112,3 +137,18 @@ def input_sharding(mesh: Mesh, rules: Rules, *axes: Optional[str],
                    shape: Optional[Tuple[int, ...]] = None) -> NamedSharding:
     return NamedSharding(mesh, spec_for(tuple(axes), rules, shape=shape,
                                         axis_sizes=_sizes(mesh)))
+
+
+def batch_shardings(mesh: Mesh, rules: Rules, batch) -> dict:
+    """Per-host input placement for a LIVE batch dict: each key's batch
+    axis shards over whatever the rule table maps "batch" onto ("host" on
+    a host mesh), everything else replicates.  Keys outside
+    ``sharding.BATCH_AXES`` (per-expert vectors etc.) replicate whole.
+    ``jax.device_put(batch, batch_shardings(...))`` is how the train loop
+    commits each host's row block to that host's devices before the
+    jitted step."""
+    from repro.sharding import BATCH_AXES
+    return {k: input_sharding(mesh, rules,
+                              *BATCH_AXES.get(k, (None,) * v.ndim),
+                              shape=v.shape)
+            for k, v in batch.items()}

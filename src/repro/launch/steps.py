@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import Model, ModelConfig
 from repro.optim.specs import opt_state_specs  # noqa: F401  (re-export)
@@ -28,7 +29,7 @@ from repro.sharding import constrain
 __all__ = ["chunked_softmax_ce", "make_train_step", "make_prefill_step",
            "make_serve_step", "make_batched_serve_step",
            "apply_microbatch_plan", "plan_microbatches",
-           "input_specs", "head_weights"]
+           "split_batch_by_shares", "input_specs", "head_weights"]
 
 Tree = Any
 
@@ -78,6 +79,78 @@ def plan_microbatches(batch: Dict[str, jax.Array], costs, num_microbatches: int,
                                        history=history)
     return apply_microbatch_plan(batch, perm,
                                  extra_batch_keys=extra_batch_keys)
+
+
+def split_batch_by_shares(batch: Dict[str, jax.Array], shares,
+                          num_hosts: int,
+                          labels_np: Optional[np.ndarray] = None):
+    """Apply AWF token shares as an UNEVEN data-parallel batch split.
+
+    The jitted train step needs ONE static shape, so the split is
+    pad/mask-based: the global ``(B, S)`` batch is viewed as ``num_hosts``
+    contiguous row blocks (the "host"-axis sharding layout), and host ``h``
+    keeps only the first ``shares[h]`` token positions of its block
+    (row-major), the rest becoming padding (tokens 0, labels -100,
+    segment_ids 0, embeds zeroed) — exactly how a real uneven input
+    pipeline underfills a slow host's feed while the compiled step keeps
+    one shape.  Shares above a host's physical capacity
+    (``B/num_hosts * S``) are clamped: a fast host can keep everything it
+    was packed but cannot absorb another host's rows.
+
+    Uniform shares at (or above) capacity are an exact no-op — the batch
+    is returned UNTOUCHED (same arrays), the identity the multi-host
+    loss-equivalence guarantee rests on.
+
+    Returns ``(batch, host_tokens)`` where ``host_tokens[h]`` counts the
+    real (label-carrying) tokens host ``h`` still owns — the per-host
+    work estimate the straggler telemetry attributes step time by.
+    Pass the packer's host-resident labels as ``labels_np`` to count them
+    with zero device traffic; without it ``batch["labels"]`` is copied to
+    host once (a device sync on a committed array).
+    """
+    labels = batch["labels"]
+    B, S = labels.shape
+    if B % num_hosts != 0:
+        raise ValueError(f"global batch {B} not divisible by "
+                         f"{num_hosts} hosts")
+    shares = np.asarray(shares, np.int64)
+    if shares.shape != (num_hosts,):
+        raise ValueError(f"expected {num_hosts} shares, got shape "
+                         f"{shares.shape}")
+    rows_per_host = B // num_hosts
+    cap = rows_per_host * S
+    budget = np.clip(shares, 0, cap)
+    # real-token counting works on a host-side labels array + the numpy
+    # keep mask — never on the masked device output
+    if labels_np is None:
+        labels_np = np.asarray(labels)
+    elif labels_np.shape != (B, S):
+        raise ValueError(f"labels_np shape {labels_np.shape} != {(B, S)}")
+    real = labels_np >= 0
+
+    if bool((budget >= cap).all()):          # uniform/full shares: no-op
+        return batch, real.reshape(num_hosts, -1).sum(axis=1,
+                                                      dtype=np.int64)
+    # token position within its host's block, row-major: row b col s ->
+    # (b % rows_per_host) * S + s; kept iff below the host's budget
+    pos = np.arange(B * S, dtype=np.int64).reshape(B, S) % cap
+    keep_np = pos < budget[np.arange(B) // rows_per_host, None]
+    host_tokens = (real & keep_np).reshape(num_hosts, -1).sum(
+        axis=1, dtype=np.int64)
+    keep = jnp.asarray(keep_np)
+    out: Dict[str, jax.Array] = {}
+    for k, v in batch.items():
+        if k == "tokens":
+            out[k] = jnp.where(keep, v, 0)
+        elif k == "labels":
+            out[k] = jnp.where(keep, v, -100)
+        elif k == "segment_ids":
+            out[k] = jnp.where(keep, v, 0)
+        elif k == "embeds":
+            out[k] = jnp.where(keep[..., None], v, 0)
+        else:                                # positions_3d, cap_e, ...
+            out[k] = v
+    return out, host_tokens
 
 
 def head_weights(params: Tree, cfg: ModelConfig) -> jax.Array:
@@ -278,13 +351,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec,
 def input_shardings(cfg: ModelConfig, shape: ShapeSpec, rules, mesh):
     """NamedShardings matching input_specs (divisibility-checked)."""
     from repro.launch.mesh import input_sharding
+    from repro.sharding import BATCH_AXES
     specs = input_specs(cfg, shape)
-    axes = {
-        "tokens": ("batch", None),
-        "embeds": ("batch", None, None),
-        "positions_3d": (None, "batch", None),
-        "labels": ("batch", None),
-        "cap_e": (None,),
-    }
-    return {k: input_sharding(mesh, rules, *axes[k], shape=v.shape)
+    return {k: input_sharding(mesh, rules, *BATCH_AXES[k], shape=v.shape)
             for k, v in specs.items()}

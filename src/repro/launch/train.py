@@ -7,24 +7,41 @@ TPU pods by picking a production mesh and full config:
     python -m repro.launch.train --arch qwen2.5-3b --smoke --steps 50
     python -m repro.launch.train --arch qwen3-moe-235b-a22b --smoke \
         --steps 30 --scheduler awf --microbatches 2
+
+Multi-host (``hosts > 1``): the loop runs on a ``("host", "model")`` mesh
+(emulate N hosts on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+jax import), records PER-HOST step wall times into the telemetry ledger,
+feeds them through ``StragglerMitigator.observe_step`` every step, and on
+each measured-epoch bump re-splits the global batch UNEVENLY across hosts
+from the mitigator's AWF ``token_shares`` (``split_batch_by_shares`` —
+masked, shape-static).  A slow host (``host_skew`` injects one in
+emulation; real pods report real clocks) sees its token share shrink
+within a few steps:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m repro.launch.train --arch qwen2.5-3b --smoke --hosts 4 \
+        --straggler-scheduler "wf2"
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import LoopHistory, LoopTelemetry
+from repro.core import Chunk, LoopHistory, LoopTelemetry
 from repro.core.spec import SpecLike, resolve
 from repro.data import SyntheticCorpus
-from repro.launch.mesh import make_mesh, rules_for, shardings_for
+from repro.launch.mesh import (batch_shardings, make_host_mesh, make_mesh,
+                               rules_for, shardings_for)
 from repro.launch.steps import (make_train_step, opt_state_specs,
-                                plan_microbatches)
+                                plan_microbatches, split_batch_by_shares)
 from repro.models import get_model
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
 from repro.sched import (CapacityPlanner, StragglerMitigator,
@@ -43,18 +60,48 @@ class TrainLoop:
                  microbatch_scheduler: SpecLike = "dynamic,1",
                  num_microbatches: int = 1, lr: float = 3e-4,
                  ckpt_dir: Optional[str] = None, seed: int = 0,
-                 data_sigma: float = 1.0):
+                 data_sigma: float = 1.0, hosts: int = 1,
+                 straggler_scheduler: SpecLike = "wf2",
+                 min_host_share: float = 0.1,
+                 host_skew: Optional[Sequence[float]] = None):
         self.cfg = cfg
         self.batch, self.seq_len = batch, seq_len
         self.model = get_model(cfg)
         self.history = LoopHistory()
+        if hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {hosts}")
+        if batch % hosts != 0:
+            raise ValueError(f"global batch {batch} not divisible by "
+                             f"{hosts} hosts")
+        if hosts > 1 and num_microbatches > 1:
+            # the splitter's host model is "host h owns contiguous row
+            # block h" of the (B, S) input; the microbatch reshape
+            # (B,S) -> (M, B/M, S) inside jit lets GSPMD re-shard each
+            # microbatch over the hosts, so physical row ownership is no
+            # longer that block and shares/attribution would land on the
+            # wrong hosts.  Refuse rather than silently mis-attribute
+            # (microbatch-aware host row mapping is a ROADMAP item).
+            raise ValueError("hosts > 1 does not compose with "
+                             "num_microbatches > 1 yet")
+        self.hosts = hosts
+        # per-host slowdown multipliers — the EMULATION's measurement model
+        # (one process cannot clock N emulated hosts separately): host h's
+        # share of each step's wall time is token_count[h] * host_skew[h].
+        # Real multi-host deployments pass genuine per-host clocks to
+        # ``mitigator.observe_step`` instead and leave this at ones.
+        skew = np.ones(hosts) if host_skew is None else np.asarray(
+            host_skew, float)
+        if skew.shape != (hosts,) or not (skew > 0).all():
+            raise ValueError(f"host_skew needs {hosts} positive entries")
+        self.host_skew = skew
         # the measure stage: per-step wall time + token counts flushed into
         # the history under "train_step" — each flush bumps the measured
         # epoch, so adaptive schedules planning against this history replan
         # from real step times (and the packing history's own records feed
-        # the AWF document packer)
+        # the AWF document packer).  Multi-host: one ledger per host, the
+        # step's wall time split by ``add_time_weighted`` attribution.
         self.telemetry = LoopTelemetry(self.history, loop_id="train_step",
-                                       num_workers=1)
+                                       num_workers=hosts)
         # ``scheduler`` / ``microbatch_scheduler`` accept any schedule
         # clause form: a spec, "guided,4", "uds:name(args)", "runtime"
         # (late-bound from $REPRO_SCHEDULE), or a scheduler instance
@@ -64,12 +111,31 @@ class TrainLoop:
         self.capacity = (CapacityPlanner(cfg, seq_len) if cfg.is_moe else None)
 
         devs = len(jax.devices())
-        if mesh_shape is None:
-            model_par = 1
-            while model_par * 2 <= devs and model_par < 4:
-                model_par *= 2
-            mesh_shape = (max(devs // model_par, 1), model_par)
-        self.mesh = make_mesh(mesh_shape, ("data", "model"))
+        if hosts > 1:
+            if devs < hosts:
+                raise ValueError(
+                    f"hosts={hosts} needs {hosts} devices, only {devs} "
+                    f"available — emulate them with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={hosts} "
+                    f"(before the first jax import)")
+            if mesh_shape is not None:
+                if mesh_shape[0] != hosts:
+                    raise ValueError(f"mesh_shape {tuple(mesh_shape)} "
+                                     f"disagrees with hosts={hosts}")
+                model_par = mesh_shape[1]
+            else:
+                model_par = 1
+                per_host = devs // hosts
+                while model_par * 2 <= per_host and model_par < 4:
+                    model_par *= 2
+            self.mesh = make_host_mesh(hosts, model_par)
+        else:
+            if mesh_shape is None:
+                model_par = 1
+                while model_par * 2 <= devs and model_par < 4:
+                    model_par *= 2
+                mesh_shape = (max(devs // model_par, 1), model_par)
+            self.mesh = make_mesh(mesh_shape, ("data", "model"))
         self.rules = rules_for(cfg, self.mesh, "train", batch)
 
         if cfg.name.startswith("minicpm"):
@@ -99,7 +165,17 @@ class TrainLoop:
         self.corpus = SyntheticCorpus(cfg.vocab_size, mean_len=seq_len / 4,
                                       sigma=data_sigma, seed=seed)
         self._doc_iter = self.corpus.documents()
-        self.mitigator = StragglerMitigator(num_hosts=1)
+        # ``straggler_scheduler`` is a schedule clause like every other
+        # surface; it turns the mitigator's AWF weights into integer token
+        # shares.  min_host_share floors every host at 10% of the even
+        # share so a throttled host keeps reporting (and can rehabilitate).
+        self.mitigator = StragglerMitigator(num_hosts=hosts,
+                                            scheduler=straggler_scheduler,
+                                            min_share=min_host_share)
+        # per-host input placement (batch rows block-split over "host")
+        self._in_shard = None if hosts == 1 else "pending"
+        self.last_shares: Optional[np.ndarray] = None
+        self._host_tokens: Optional[np.ndarray] = None
         self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
         self.ckpt_dir = ckpt_dir
 
@@ -127,13 +203,58 @@ class TrainLoop:
             pos = jnp.tile(jnp.arange(self.seq_len, dtype=jnp.int32)[None],
                            (self.batch, 1))
             batch["positions_3d"] = jnp.stack([pos, pos, pos])
+        if self.hosts > 1:
+            # plan: AWF token shares from the measured per-host rates (the
+            # engine's plan cache makes this ~µs in steady state; each
+            # observe_step's flush bumps the measured epoch, so changed
+            # rates miss the cache and the shares REPLAN) -> uneven split.
+            # The packer's numpy labels let the splitter count per-host
+            # real tokens without a device round-trip (rows are never
+            # permuted here: multi-host excludes microbatching).
+            shares = self.mitigator.token_shares(self.batch * self.seq_len)
+            batch, self._host_tokens = split_batch_by_shares(
+                batch, shares, self.hosts, labels_np=packed.labels)
+            self.last_shares = shares
         return batch
+
+    def _observe_multihost(self, dt: float) -> None:
+        """The multi-host measure stage for one step: split the step's
+        wall time over per-host ledgers (attribution weights = real token
+        count x injected skew — see ``host_skew``), flush (one measured
+        epoch), and feed the same per-host times to the mitigator whose
+        AWF weights drive the next split."""
+        ht = self._host_tokens
+        w = ht.astype(float) * self.host_skew
+        if w.sum() <= 0:
+            w = np.ones(self.hosts)
+        # each step is its own invocation (record() otherwise appends to
+        # the last one forever and the measured epoch never advances)
+        self.history.open_invocation("train_step")
+        # one ledger per host over the step's global token index space
+        off = 0
+        for h in range(self.hosts):
+            size = max(int(ht[h]), 1)
+            self.telemetry.begin(h, Chunk(off, off + size, h))
+            off += size
+        self.telemetry.add_time_weighted(
+            dt, {h: w[h] for h in range(self.hosts)},
+            tokens={h: int(ht[h]) for h in range(self.hosts)})
+        self.telemetry.flush()
+        host_times = {h: dt * w[h] / w.sum() for h in range(self.hosts)}
+        self.mitigator.observe_step(
+            host_times, host_tokens={h: max(int(ht[h]), 1)
+                                     for h in range(self.hosts)})
 
     def run(self, steps: int, log_every: int = 10) -> list:
         losses = []
         with self.mesh, axis_rules(self.mesh, self.rules):
             for _ in range(steps):
                 batch = self.next_batch()
+                if self.hosts > 1:
+                    if self._in_shard == "pending":
+                        self._in_shard = batch_shardings(self.mesh,
+                                                         self.rules, batch)
+                    batch = jax.device_put(batch, self._in_shard)
                 t0 = time.perf_counter()
                 self.params, self.opt_state, metrics = self._step(
                     self.params, self.opt_state,
@@ -141,13 +262,18 @@ class TrainLoop:
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 tokens = int(metrics.get("tokens", self.batch * self.seq_len))
-                # measure: one record per step (host 0, size = tokens),
-                # flushed immediately so each step is one measured epoch
-                self.telemetry.record_chunk(0, 0, max(tokens, 1), dt,
-                                            tokens=tokens)
-                self.telemetry.flush()
-                self.mitigator.observe_step({0: dt},
-                                            host_tokens={0: max(tokens, 1)})
+                if self.hosts > 1:
+                    self._observe_multihost(dt)
+                else:
+                    # measure: one record per step (host 0, size = tokens),
+                    # in its own invocation flushed immediately, so each
+                    # step is one measured epoch
+                    self.history.open_invocation("train_step")
+                    self.telemetry.record_chunk(0, 0, max(tokens, 1), dt,
+                                                tokens=tokens)
+                    self.telemetry.flush()
+                    self.mitigator.observe_step(
+                        {0: dt}, host_tokens={0: max(tokens, 1)})
                 losses.append(loss)
                 self.step += 1
                 if self.ckpt and self.step % 10 == 0:
@@ -177,6 +303,18 @@ def main() -> None:
     ap.add_argument("--microbatch-scheduler", default="dynamic,1",
                     help="schedule clause for the microbatch assignment")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="data-parallel hosts; the AWF straggler loop "
+                         "re-splits the batch unevenly across them "
+                         "(emulate N on CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--straggler-scheduler", default="wf2",
+                    help="schedule clause turning AWF host weights into "
+                         "token shares (any weight-aware clause)")
+    ap.add_argument("--min-host-share", type=float, default=0.1,
+                    help="per-host floor as a fraction of the even share "
+                         "(0 = let a straggler starve, 1 = pin static "
+                         "even shares)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -186,8 +324,14 @@ def main() -> None:
                      scheduler=args.scheduler,
                      microbatch_scheduler=args.microbatch_scheduler,
                      num_microbatches=args.microbatches, lr=args.lr,
-                     ckpt_dir=args.ckpt_dir)
+                     ckpt_dir=args.ckpt_dir, hosts=args.hosts,
+                     straggler_scheduler=args.straggler_scheduler,
+                     min_host_share=args.min_host_share)
     losses = loop.run(args.steps)
+    if args.hosts > 1 and loop.last_shares is not None:
+        frac = loop.last_shares / max(int(loop.last_shares.sum()), 1)
+        print(f"host token shares: {np.round(frac, 3).tolist()} "
+              f"(measured epoch {loop.mitigator.epoch()})")
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

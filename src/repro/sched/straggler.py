@@ -19,6 +19,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.core import LoopHistory, LoopSpec, LoopTelemetry, get_engine
+from repro.core.history import awf_weights_from_rates
 from repro.core.spec import resolve
 
 __all__ = ["StragglerMitigator"]
@@ -28,13 +29,18 @@ __all__ = ["StragglerMitigator"]
 class StragglerMitigator:
     """``scheduler`` selects the strategy that turns AWF weights into
     integer token shares — any weight-aware schedule clause (spec, clause
-    string, or instance); the default preserves the WF2 behavior."""
+    string, or instance); the default preserves the WF2 behavior.
+
+    ``min_share`` guarantees every host a floor of the even share
+    (fraction in [0, 1]): a host must keep receiving SOME work or its
+    rate is never measured again and it can never rehabilitate."""
 
     num_hosts: int
     loop_id: str = "train_step"
     threshold: float = 1.15      # flag hosts >15% slower than median
     window: int = 16
     scheduler: Any = "wf2"       # SpecLike; must honor ctx.weights
+    min_share: float = 0.0       # per-host floor, as a fraction of total/P
 
     def __post_init__(self):
         self.history = LoopHistory()
@@ -63,29 +69,108 @@ class StragglerMitigator:
 
     # ------------------------------------------------------------- detect
     def stragglers(self) -> List[int]:
-        rates = self.history.worker_rates(self.loop_id, last_k=self.window)
+        """Hosts whose step-mean rate exceeds ``threshold`` x the median —
+        the same windowed, equal-step aggregation the weights use, so
+        detection and planning cannot disagree about who is slow."""
+        rates = self._step_mean_rates()
         if len(rates) < 2:
             return []
         med = float(np.median(list(rates.values())))
         return [h for h, r in rates.items() if r > self.threshold * med]
 
     # --------------------------------------------------------------- plan
+    def _step_mean_rates(self) -> Dict[int, float]:
+        """Per-host mean seconds/iteration where every STEP contributes
+        equally (unlike ``LoopHistory.worker_rates``, which token-weights
+        across invocations).  Step costs are heteroscedastic — the compile
+        step is ~100x a steady step — so token-weighting aliases per-step
+        token-count variance into the rates: a host holding more tokens in
+        an expensive step looks slower forever.  Equal-step means keep the
+        rate RATIOS exactly the per-host slowdown ratios."""
+        per: Dict[int, List[float]] = {}
+        invs = self.history.invocations(self.loop_id)[-self.window:]
+        for inv in invs:
+            for c in inv.chunks:
+                if c.elapsed is not None and c.size > 0:
+                    per.setdefault(c.worker, []).append(c.elapsed / c.size)
+        return {h: sum(rs) / len(rs) for h, rs in per.items() if rs}
+
     def weights(self) -> np.ndarray:
-        """AWF capability weights, normalized to sum num_hosts — feed these
-        to a weight-aware packing schedule (e.g. "wf2") or the batch
-        splitter."""
-        return np.asarray(
-            self.history.awf_weights(self.loop_id, self.num_hosts))
+        """AWF capability weights from the step-mean rates
+        (``awf_weights_from_rates``) — feed these to a weight-aware
+        packing schedule (e.g. "wf2") or the batch splitter.  Always
+        finite: before any ``observe_step`` (or on a degenerate all-zero
+        history) every host gets exactly 1.0; never-measured hosts get the
+        mean speed."""
+        return np.asarray(awf_weights_from_rates(self._step_mean_rates(),
+                                                 self.num_hosts))
+
+    def min_share_floor(self, total_tokens: int) -> int:
+        """The effective integer per-host floor for ``total_tokens``:
+        ``min_share`` of the even share, never above the even share itself
+        — so ``num_hosts`` floors always fit inside the budget."""
+        if total_tokens <= 0:
+            return 0
+        frac = float(np.clip(self.min_share, 0.0, 1.0))
+        return min(int(frac * total_tokens / self.num_hosts),
+                   total_tokens // self.num_hosts)
+
+    def _uniform_shares(self, total_tokens: int) -> np.ndarray:
+        """Exact uniform partition: base share everywhere, the remainder
+        spread deterministically over the lowest host ids."""
+        base, rem = divmod(total_tokens, self.num_hosts)
+        shares = np.full(self.num_hosts, base, np.int64)
+        shares[:rem] += 1
+        return shares
 
     def token_shares(self, total_tokens: int) -> np.ndarray:
         """Integer per-host token budgets proportional to AWF weights,
         materialized as a plan of ``self.scheduler`` (default WF2) over
         the token budget (hosts are the workers) — the plan covers
         exactly, so shares always sum to ``total_tokens``, and identical
-        weight vectors hit the engine's plan cache across steps."""
+        weight vectors hit the engine's plan cache across steps.
+
+        Cold start (no ``observe_step`` yet) and measured-uniform
+        histories return the EXACT uniform partition rather than the
+        scheduler's chunk-shaped approximation of it: uniform shares are
+        the identity the multi-host equivalence guarantee rests on
+        (``split_batch_by_shares`` must be a no-op), so float-rounding
+        noise in the weights must not perturb them.  ``min_share`` is
+        enforced afterwards by reclaiming tokens from the richest hosts
+        (sum-preserving)."""
+        if total_tokens <= 0:
+            return np.zeros(self.num_hosts, np.int64)
         w = self.weights()
-        loop = LoopSpec(lb=0, ub=total_tokens, num_workers=self.num_hosts,
-                        loop_id=f"{self.loop_id}/token_shares")
-        plan = get_engine().plan(resolve(self.scheduler), loop,
-                                 weights=w.tolist())
-        return plan.worker_iters()
+        if np.abs(w - 1.0).max() < 1e-9:
+            shares = self._uniform_shares(total_tokens)
+        else:
+            loop = LoopSpec(lb=0, ub=total_tokens,
+                            num_workers=self.num_hosts,
+                            loop_id=f"{self.loop_id}/token_shares")
+            plan = get_engine().plan(resolve(self.scheduler), loop,
+                                     weights=w.tolist())
+            shares = plan.worker_iters().astype(np.int64)
+        return self._enforce_min_share(shares, total_tokens)
+
+    def _enforce_min_share(self, shares: np.ndarray,
+                           total_tokens: int) -> np.ndarray:
+        """Raise every host to the floor, reclaiming the added tokens
+        from the hosts richest above it — sum-preserving by construction
+        (the floor always fits: see ``min_share_floor``)."""
+        floor = self.min_share_floor(total_tokens)
+        if floor <= 0:
+            return shares
+        shares = shares.astype(np.int64).copy()
+        need = np.maximum(floor - shares, 0)
+        pool = int(need.sum())
+        if pool == 0:
+            return shares
+        shares += need
+        for i in np.argsort(-shares):
+            if pool == 0:
+                break
+            take = min(int(shares[i]) - floor, pool)
+            if take > 0:
+                shares[i] -= take
+                pool -= take
+        return shares

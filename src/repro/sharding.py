@@ -28,10 +28,25 @@ from typing import Any, Dict, Optional, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["Rules", "spec_for", "shardings_for", "axis_rules", "constrain",
-           "current_rules"]
+__all__ = ["Rules", "BATCH_AXES", "spec_for", "shardings_for", "axis_rules",
+           "constrain", "current_rules"]
 
 Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Logical axes of every model-input batch key (leading "batch" axis where
+# present) — the one table behind jit argument shardings
+# (launch/steps.input_shardings) and live-batch placement
+# (launch/mesh.batch_shardings): the data-parallel split of a batch dict is
+# defined HERE, once, whatever mesh axis ("data", ("pod", "data"), "host")
+# the active rule table maps "batch" onto.
+BATCH_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", None),
+    "embeds": ("batch", None, None),
+    "positions_3d": (None, "batch", None),
+    "labels": ("batch", None),
+    "segment_ids": ("batch", None),
+    "cap_e": (None,),
+}
 
 _tls = threading.local()
 

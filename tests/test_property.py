@@ -201,6 +201,49 @@ def test_wave_plan_equals_executor_chunks(n, p, seed):
         c.size for c in res.chunks)
 
 
+# ---------------------------------------------------------------------------
+# StragglerMitigator token shares (the multi-host batch splitter's input)
+# ---------------------------------------------------------------------------
+@st.composite
+def host_histories(draw):
+    """(num_hosts, [(per-host times, per-host token counts), ...]) —
+    arbitrary observed step histories, including zero times, zero token
+    counts, and no history at all (cold start)."""
+    n = draw(st.integers(1, 8))
+    steps = draw(st.lists(
+        st.tuples(
+            st.lists(st.floats(0.0, 100.0, allow_nan=False,
+                               allow_infinity=False),
+                     min_size=n, max_size=n),
+            st.lists(st.integers(0, 5000), min_size=n, max_size=n)),
+        max_size=5))
+    return n, steps
+
+
+@given(hh=host_histories(), total=st.integers(0, 50_000),
+       min_share=st.floats(0.0, 1.0, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_token_shares_always_partition_total(hh, total, min_share):
+    """For ANY host-time history, host count, and min-share floor:
+    ``token_shares(total)`` partitions ``total`` exactly (sum-preserving),
+    every share is non-negative, the floor is respected, and the AWF
+    weights stay finite — the invariants the uneven batch splitter
+    consumes blindly every step."""
+    from repro.sched import StragglerMitigator
+    n, steps = hh
+    m = StragglerMitigator(num_hosts=n, min_share=min_share)
+    for times, toks in steps:
+        m.observe_step({h: times[h] for h in range(n)},
+                       host_tokens={h: toks[h] for h in range(n)})
+    w = m.weights()
+    assert w.shape == (n,) and np.isfinite(w).all() and (w >= 0).all()
+    shares = m.token_shares(total)
+    assert shares.shape == (n,)
+    assert int(shares.sum()) == total
+    assert (shares >= 0).all()
+    assert (shares >= m.min_share_floor(total)).all()
+
+
 @given(b=st.integers(1, 3), h=st.integers(1, 3),
        t=st.integers(1, 40), dk=st.sampled_from([4, 8, 16]),
        dv=st.sampled_from([4, 8]), chunk=st.sampled_from([4, 8, 16]),

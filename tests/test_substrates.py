@@ -138,6 +138,45 @@ def test_straggler_detection_and_weights():
     assert shares.sum() == 1000 and shares[3] < shares[0]
 
 
+def test_straggler_cold_start_exact_uniform_shares():
+    """Before any observe_step, weights()/token_shares() are EXACTLY
+    uniform — no NaN/div-by-zero on the empty history, and no chunk-shaped
+    approximation of uniformity from the share scheduler (the multi-host
+    equivalence guarantee depends on the exact partition)."""
+    from repro.sched import StragglerMitigator
+    m = StragglerMitigator(num_hosts=5)
+    w = m.weights()
+    assert np.array_equal(w, np.ones(5))
+    shares = m.token_shares(1003)
+    assert shares.tolist() == [201, 201, 201, 200, 200]
+    assert m.token_shares(0).tolist() == [0] * 5
+    # degenerate all-zero measurements stay finite and uniform
+    m.observe_step({h: 0.0 for h in range(5)})
+    w = m.weights()
+    assert np.isfinite(w).all() and np.array_equal(w, np.ones(5))
+    assert m.token_shares(10).sum() == 10
+    # equal measured RATES (times proportional to tokens — the train
+    # loop's attribution under no skew) keep the partition exactly even
+    m2 = StragglerMitigator(num_hosts=4)
+    for _ in range(3):
+        m2.observe_step({h: 0.1 * (7 + h) for h in range(4)},
+                        host_tokens={h: 7 + h for h in range(4)})
+    assert m2.token_shares(1024).tolist() == [256] * 4
+
+
+def test_straggler_min_share_floor_is_sum_preserving():
+    from repro.sched import StragglerMitigator
+    m = StragglerMitigator(num_hosts=4, min_share=0.5)
+    for _ in range(6):
+        m.observe_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 100.0})
+    shares = m.token_shares(1000)
+    floor = m.min_share_floor(1000)
+    assert floor == 125                       # half the even share
+    assert int(shares.sum()) == 1000
+    assert (shares >= floor).all()
+    assert shares[3] < shares[0]              # still below the fast hosts
+
+
 # --------------------------------------------------------------- checkpoints
 def test_checkpoint_roundtrip(tmp_path):
     from repro.checkpoint import (latest_step, restore_checkpoint,

@@ -30,6 +30,33 @@ def test_ledger_accumulates_interleaved_chunk_time():
     assert tel.summary()["total_tokens"] == 4
 
 
+def test_add_time_weighted_splits_step_time_proportionally():
+    """The multi-host train attribution: ONE wall time split over the open
+    per-host ledgers proportionally to the given weights."""
+    tel = LoopTelemetry(LoopHistory(), loop_id="train_step", num_workers=3)
+    for h, size in enumerate((4, 2, 2)):
+        tel.begin(h, Chunk(h * 4, h * 4 + size, h))
+    tel.add_time_weighted(1.0, {0: 2.0, 1: 1.0, 2: 1.0},
+                          tokens={0: 4, 1: 2, 2: 2})
+    assert tel.end(0) == pytest.approx(0.5)
+    assert tel.end(1) == pytest.approx(0.25)
+    assert tel.end(2) == pytest.approx(0.25)
+    tel.flush()
+    assert tel.summary()["total_tokens"] == 8
+    # hosts without an open ledger are skipped; negative weights clamp
+    tel.begin(0, Chunk(0, 1, 0))
+    tel.add_time_weighted(0.3, {0: 1.0, 7: 5.0, 1: -2.0})
+    assert tel.end(0) == pytest.approx(0.3)
+    # all-zero weights fall back to an equal split (never drop a sample)
+    tel.begin(0, Chunk(0, 1, 0))
+    tel.begin(1, Chunk(1, 2, 1))
+    tel.add_time_weighted(0.4, {0: 0.0, 1: 0.0})
+    assert tel.end(0) == pytest.approx(0.2)
+    assert tel.end(1) == pytest.approx(0.2)
+    # no open ledgers at all: a silent no-op
+    tel.add_time_weighted(1.0, {0: 1.0})
+
+
 def test_flush_closes_open_ledgers_and_bumps_epoch_once():
     hist = LoopHistory()
     tel = LoopTelemetry(hist, loop_id="x", num_workers=1)
