@@ -33,9 +33,15 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 4
 	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
 	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 4 --per-slot
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 8 \
+	    --decode-steps 8
 	$(PYTHON) -m pytest -q tests/test_serve.py
 	$(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --scheduler "guided,4"
+	$(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 4 --seq-len 64 --scheduler "guided,4" \
+	    --microbatches 2 --fused-microbatches
 	REPRO_UDS_MODULES=examples.uds_blocks PYTHONPATH=src:. \
 	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --scheduler "uds:blocks,8"

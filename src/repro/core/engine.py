@@ -702,6 +702,7 @@ _register_builtin_compilers()
 def plan_worker_order(sched: SpecLike, n: int, *, num_workers: int = 2,
                       loop_id: str = "tiles",
                       engine: Optional["PlanEngine"] = None,
+                      device: bool = False,
                       **sched_params: Any) -> np.ndarray:
     """Worker-major tile-visit order for ``sched`` (a ScheduleSpec, clause
     string like ``"guided,4"``, or scheduler instance) over [0, n) — the
@@ -710,15 +711,23 @@ def plan_worker_order(sched: SpecLike, n: int, *, num_workers: int = 2,
     .plan_q_block_order``).  Each of the ``num_workers`` kernel lanes
     (default 2 = TPU megacore) gets its worker's contiguous tile run, so
     the lanes inherit the schedule's load balance.  Plans are cached by
-    the engine across launches, keyed on the spec."""
+    the engine across launches, keyed on the spec.
+
+    ``device=True`` returns the plan's cached int32 *device* array
+    (``SchedulePlan.device_tile_order``) instead of a host array: a cache
+    hit reuses the buffer already uploaded for a previous launch, so the
+    steady-state kernel path ships NO plan bytes host→device."""
     sched = resolve(sched, **sched_params)
     eng = engine if engine is not None else get_engine()
     loop = LoopSpec(lb=0, ub=n, num_workers=num_workers, loop_id=loop_id)
-    order = eng.plan(sched, loop).tile_order(n, order="worker")
+    plan = eng.plan(sched, loop)
+    order = plan.tile_order(n, order="worker")
     if not np.array_equal(np.sort(order), np.arange(n)):
         raise AssertionError(
             f"plan for {getattr(sched, 'name', sched)!r} does not tile "
             f"[0, {n}) exactly")
+    if device:
+        return plan.device_tile_order(n, order="worker")
     return order
 
 

@@ -168,6 +168,37 @@ class SchedulePlan:
             "workers": self.workers.astype(np.int32),
         }
 
+    def device_table(self) -> Dict:
+        """:meth:`table` uploaded as int32 device arrays, cached on the
+        plan.  Plans are engine-cached across invocations and frozen, so
+        steady-state consumers of on-device plan execution (a fused step's
+        in-program chunk table, Pallas scalar prefetch) reuse ONE device
+        buffer per plan instead of re-uploading host arrays per dispatch.
+        JAX is imported lazily — the plan IR itself stays host-only."""
+        tab = getattr(self, "_device_table", None)
+        if tab is None:
+            import jax.numpy as jnp
+            tab = {k: jnp.asarray(v) for k, v in self.table().items()}
+            object.__setattr__(self, "_device_table", tab)
+        return tab
+
+    def device_tile_order(self, n_tiles: Optional[int] = None,
+                          order: str = "dequeue"):
+        """:meth:`tile_order` uploaded as an int32 device array, cached on
+        the plan per ``(n_tiles, order)`` — the prefetched form the fused
+        execution paths and Pallas kernels feed to scalar prefetch (one
+        upload per plan, amortized over every dispatch that reuses the
+        cached plan)."""
+        cache = getattr(self, "_device_orders", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_device_orders", cache)
+        key = (n_tiles, order)
+        if key not in cache:
+            import jax.numpy as jnp
+            cache[key] = jnp.asarray(self.tile_order(n_tiles, order=order))
+        return cache[key]
+
     def per_worker(self) -> Dict[int, List[Chunk]]:
         out: Dict[int, List[Chunk]] = {w: [] for w in
                                        range(self.loop.num_workers)}

@@ -135,19 +135,27 @@ class LoopTelemetry:
             self._t_first = now - dt
         self._t_last = now
 
-    def add_time_split(self, workers, dt: float, tokens: int = 0) -> None:
+    def add_time_split(self, workers, dt: float, tokens=0) -> None:
         """Split one measured wall time equally across the open ledgers of
         ``workers`` — the batched serve step issues ONE jitted call that
         advances every active slot in lockstep, so each slot is charged
-        ``dt / len(workers)`` (and credited ``tokens`` tokens).  Per-slot
-        attribution stays intact: AWF-family admission still replans from
-        per-slot busy times."""
+        ``dt / len(workers)``.  Per-slot attribution stays intact:
+        AWF-family admission still replans from per-slot busy times.
+
+        ``tokens`` may be an int (every worker credited the same count —
+        the one-token-per-dispatch stepwise engine) or a mapping
+        ``{worker: count}`` — the fused multi-token dispatch, where one
+        call advances each slot by its OWN number of tokens (a slot that
+        froze mid-dispatch produced fewer than the dispatch quantum), so
+        the amortized wall-time share and the per-slot token credit stay
+        consistent at any dispatch granularity."""
         ws = [w for w in workers if w in self._open]
         if not ws:
             return
         share = float(dt) / len(ws)
         for w in ws:
-            self.add_time(w, share, tokens=tokens)
+            tk = tokens.get(w, 0) if isinstance(tokens, dict) else tokens
+            self.add_time(w, share, tokens=tk)
 
     def add_time_weighted(self, dt: float, weights: Dict[int, float],
                           tokens: Optional[Dict[int, int]] = None) -> None:

@@ -36,15 +36,18 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 def plan_q_block_order(sched: SpecLike,
                        q_blocks: int, num_workers: int = 2,
+                       device: bool = False,
                        **sched_params):
     """Worker-major Q-block visit order for a schedule clause (spec,
     string like ``"tss"`` / ``"guided,4"``, or scheduler instance),
     planned (and cached) by the engine: each of the ``num_workers``
     kernel lanes (default 2 = megacore) gets its worker's contiguous
-    block run, so the lanes inherit the schedule's load balance."""
+    block run, so the lanes inherit the schedule's load balance.
+    ``device=True`` returns the plan's cached device array (one upload
+    per plan, reused across launches)."""
     return plan_worker_order(sched, q_blocks, num_workers=num_workers,
                              loop_id=f"flash_attention/{q_blocks}",
-                             **sched_params)
+                             device=device, **sched_params)
 
 
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
@@ -74,8 +77,9 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     vp = _pad_to(vt, 2, bkv)
     order = None
     if schedule is not None:
-        order = jnp.asarray(
-            plan_q_block_order(schedule, qp.shape[2] // bq), jnp.int32)
+        # the plan's cached device table: a plan-cache hit reuses the
+        # buffer uploaded for a previous identically-shaped launch
+        order = plan_q_block_order(schedule, qp.shape[2] // bq, device=True)
     out = flash_attention(qp, kp, vp, order, causal=causal, block_q=bq,
                           block_kv=bkv, interpret=interpret)
     return out[:, :, :s].transpose(0, 2, 1, 3)

@@ -31,15 +31,18 @@ def tile_order_from_plan(plan: SchedulePlan, m_tiles: int) -> np.ndarray:
 def plan_tile_order(sched: SpecLike, m_tiles: int,
                     num_workers: int = 2, *,
                     engine: Optional[PlanEngine] = None,
+                    device: bool = False,
                     **sched_params) -> np.ndarray:
     """Worker-major M-tile visit order for a schedule clause (a
     ScheduleSpec, a string like ``"guided,4"`` / ``"uds:name"``, or a
     scheduler instance), planned — and cached across kernel launches — by
     the engine: each of the ``num_workers`` kernel lanes (default 2 = TPU
-    megacore) gets the contiguous tile run the UDS assigned to it."""
+    megacore) gets the contiguous tile run the UDS assigned to it.
+    ``device=True`` returns the plan's cached device array (one upload
+    per plan, reused across launches)."""
     return plan_worker_order(sched, m_tiles, num_workers=num_workers,
                              loop_id=f"sched_matmul/{m_tiles}",
-                             engine=engine, **sched_params)
+                             engine=engine, device=device, **sched_params)
 
 
 def scheduled_matmul(a: jax.Array, b: jax.Array,

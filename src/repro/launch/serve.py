@@ -7,31 +7,52 @@ finish (EOS / max tokens) immediately dequeue the next request chunk, i.e.
 ``schedule(dynamic, 1)``; guided/factoring variants admit several requests
 per dequeue when the queue is deep.
 
-Decode runs **batched** by default: all slots share one stacked
-``[slots, max_len]`` KV cache with per-slot lengths, and each generated
-token is ONE jitted decode call across the whole team with an active-slot
-mask (``make_batched_serve_step``).  Admission prefills a request at
-batch=1 and scatters its cache into the slot's row
-(``model.insert_prefill``), so in-flight slots are untouched.  The batched
-path is token-for-token identical to the per-slot escape hatch
-(``batched=False`` / ``--per-slot``: one jit call per active slot per
-token over per-slot batch-1 caches) — the equivalence is locked down in
-``tests/test_serve.py``.  UDS admission semantics are IDENTICAL in both
-modes: the scheduler sees the same slots, the same dequeue order, and the
-same chunk feedback protocol.
+Decode runs **batched and fused** by default: all slots share one stacked
+``[slots, max_len]`` KV cache with per-slot lengths, and each dispatch is
+ONE jitted call that runs ``decode_steps`` tokens for the whole team via an
+on-device ``lax.scan`` (``make_fused_serve_step``) with per-slot stop/EOS/
+length handling carried in the loop state — a slot that finishes its
+request mid-dispatch freezes in place while the others keep decoding.  The
+dispatch quantum ``decode_steps`` is a schedule parameter: T=1 reproduces
+the stepwise engine token for token (greedy decode is deterministic, so
+any T does — locked down in ``tests/test_serve.py``); larger T amortizes
+the Python→XLA round-trip over T tokens at the cost of admission latency
+(idle slots re-enter the team only at dispatch boundaries).
+
+Admission prefills a request at batch=1 and scatters its cache into the
+slot's row (``model.insert_prefill``), so in-flight slots are untouched.
+Prompts are right-padded to power-of-two length *buckets* before the
+jitted prefill — causal masking makes the padded prefix math identical, so
+a long tail of distinct prompt lengths compiles one program per bucket
+instead of one per length (~0.8s per avoided recompile on the smoke
+config).  The per-slot escape hatch (``batched=False`` / ``--per-slot``:
+one jit call per active slot per token over per-slot batch-1 caches)
+remains token-for-token identical, and is the automatic fallback for
+SSM/hybrid families.  UDS admission semantics are IDENTICAL in both modes:
+the scheduler sees the same slots, the same dequeue order, and the same
+chunk feedback protocol.
+
+A request whose ``prompt + max_new`` exceeds the cache is admitted but
+**truncated**: its generation budget is clamped to cache capacity and the
+truncation is reported per request (``Request.truncated``,
+``last_stats["truncated"]``) — never silently padded or dropped.  A prompt
+that alone exceeds ``max_len`` is still refused loudly.
 
 The loop is instrumented with :class:`~repro.core.telemetry.LoopTelemetry`:
 every chunk's **full wall time** — the prefill of each of its requests plus
-every decode step of their generations — is attributed to the slot that
-served it, fed back through ``stream.next`` (so within-invocation adaptive
-strategies like AWF-B rebalance admission mid-run), and flushed into the
-loop's ``LoopHistory`` when the stream closes.  The flush bumps the
-history's measured epoch, so a cached adaptive plan for this loop is
-invalidated and the *next* ``run()`` replans admission from the measured
-slot speeds (AWF timestep).  ``ServeLoop.history`` persists across calls —
-pass one in to persist across processes (it serializes with checkpoints).
+every decode dispatch of their generations — is attributed to the slot that
+served it (one fused dispatch's wall time splits equally across the slots
+it advanced, each credited its OWN produced-token count), fed back through
+``stream.next`` (so within-invocation adaptive strategies like AWF-B
+rebalance admission mid-run), and flushed into the loop's ``LoopHistory``
+when the stream closes.  The flush bumps the history's measured epoch, so
+a cached adaptive plan for this loop is invalidated and the *next*
+``run()`` replans admission from the measured slot speeds (AWF timestep).
+``ServeLoop.history`` persists across calls — pass one in to persist
+across processes (it serializes with checkpoints).
 
-    python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 16
+    python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 16 \
+        --decode-steps 8
 """
 
 from __future__ import annotations
@@ -50,11 +71,25 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
                         SchedulerContext, get_engine)
 from repro.core.spec import SpecLike, describe, resolve
-from repro.launch.steps import (make_batched_serve_step, make_prefill_step,
+from repro.launch.steps import (make_fused_serve_step, make_prefill_step,
                                 make_serve_step)
 from repro.models import get_model
 
-__all__ = ["ServeLoop", "main"]
+__all__ = ["ServeLoop", "Request", "bucket_length", "main"]
+
+# smallest prefill bucket: tiny prompts share one program instead of
+# compiling at 1, 2, 3, ... tokens
+MIN_PREFILL_BUCKET = 8
+
+
+def bucket_length(n: int, max_len: int) -> int:
+    """Prompt-length bucket: next power of two >= n (floored at
+    ``MIN_PREFILL_BUCKET``), capped at ``max_len``.  One jitted prefill
+    compilation per bucket serves every prompt length inside it."""
+    b = MIN_PREFILL_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, max_len)
 
 
 @dataclasses.dataclass
@@ -63,25 +98,34 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new: int = 16
     generated: Optional[List[int]] = None
+    # generation budget = min(max_new, cache capacity), set at admission;
+    # truncated=True when the cache clamped the request below max_new
+    budget: int = 0
+    truncated: bool = False
 
 
 class ServeLoop:
     """Continuous batching over a fixed decode-slot count.
 
-    ``history`` carries measured per-slot chunk times across ``run()``
-    invocations — the serving steady state's feedback channel.  After each
-    run, ``last_stats`` holds the telemetry summary (per-slot busy time,
-    tokens, tok/s, measured epoch).
+    ``decode_steps`` is the dispatch quantum: tokens generated per jitted
+    call in batched mode (1 = the stepwise engine).  ``history`` carries
+    measured per-slot chunk times across ``run()`` invocations — the
+    serving steady state's feedback channel.  After each run,
+    ``last_stats`` holds the telemetry summary (per-slot busy time,
+    tokens, tok/s, decode dispatch counts, truncations, measured epoch).
     """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
                  scheduler: SpecLike = "dynamic", seed: int = 0,
                  history: Optional[LoopHistory] = None,
-                 batched: bool = True):
+                 batched: bool = True, decode_steps: int = 1,
+                 eos_id: Optional[int] = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
         key = jax.random.PRNGKey(seed)
         self.params, _ = self.model.init(key, jnp.float32)
         # any schedule-clause form: spec, "guided,4", "uds:name", "runtime",
@@ -91,18 +135,27 @@ class ServeLoop:
         self.loop_id = "serve"
         self.history = history if history is not None else LoopHistory()
         self.last_stats: Dict[str, Any] = {}
-        # jitted prefill: compiled once per distinct prompt length (an
-        # eager lax.scan re-traces AND re-compiles on every admission —
-        # measured ~0.8s per prefill on the smoke config, dwarfing decode)
+        self.eos_id = eos_id
+        # jitted prefill, compiled once per prompt-length BUCKET: prompts
+        # are right-padded to power-of-two buckets and the real length is
+        # passed as a traced scalar (causal masking makes the padded math
+        # identical), so a long tail of distinct lengths stops triggering
+        # ~0.8s recompiles mid-serve.  SSM/hybrid prefills absorb pad
+        # tokens into their recurrent state, so only attention families
+        # (those with a batched decode path) bucket.
         self._prefill = jax.jit(make_prefill_step(self.model,
                                                   max_len=max_len))
+        self._bucketed = self.model.batched_decode is not None
         # SSM/hybrid families have no stacked-cache decode yet: fall back
         # to the per-slot path rather than refuse to serve
         self.batched = bool(batched and self.model.batched_decode is not None)
+        self.decode_steps = decode_steps if self.batched else 1
         if self.batched:
             # one stacked [slots, max_len] cache, per-slot lengths; ONE
-            # jitted decode call per token across all active slots
-            self._decode_batched = jax.jit(make_batched_serve_step(self.model))
+            # jitted dispatch per decode_steps tokens across all active
+            # slots (an on-device scan with per-slot stop handling)
+            self._decode_fused = jax.jit(
+                make_fused_serve_step(self.model, self.decode_steps))
             self._insert = jax.jit(self.model.insert_prefill)
             self.cache = self.model.init_batched_decode(
                 slots, max_len, dtype=jnp.float32)[0]
@@ -115,24 +168,47 @@ class ServeLoop:
                                                   dtype=jnp.float32)[0]
                            for _ in range(slots)]
         self.active: Dict[int, Request] = {}
+        self._dispatches = 0
+        self._decoded = 0
 
     @property
     def mode(self) -> str:
         return "batched" if self.batched else "per_slot"
 
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct compiled prefill programs (the bucketing regression
+        metric: mixed prompt lengths must not grow this per-length)."""
+        return self._prefill._cache_size()
+
     def _prefill_into(self, slot: int, req: Request) -> int:
-        # the cache holds the prompt plus one KV per decode step; past
-        # max_len the two decode paths would each clamp/drop DIFFERENTLY
-        # (silently wrong tokens) — refuse loudly instead
-        need = int(req.prompt.size) + req.max_new - 1
-        if need > self.max_len:
+        P = int(req.prompt.size)
+        # the cache holds the prompt plus one KV per decode step; capacity
+        # is how many tokens can be generated before the fill hits max_len
+        # (the first token comes from the prefill logits and appends
+        # nothing).  A prompt that alone overflows the cache is refused
+        # loudly; a generation that would overflow is admitted with its
+        # budget clamped and the truncation REPORTED per request.
+        capacity = self.max_len - P + 1
+        if capacity < 1:
             raise ValueError(
-                f"request {req.rid}: prompt ({req.prompt.size} tokens) + "
-                f"max_new ({req.max_new}) needs a cache of {need} "
-                f"positions > max_len={self.max_len}; raise ServeLoop "
-                f"max_len or shorten the request")
-        inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, cache = self._prefill(self.params, inputs)
+                f"request {req.rid}: prompt ({P} tokens) exceeds the "
+                f"cache (max_len={self.max_len}); raise ServeLoop max_len "
+                f"or shorten the request")
+        req.budget = min(req.max_new, capacity)
+        req.truncated = req.budget < req.max_new
+        tokens = req.prompt
+        if self._bucketed:
+            pb = bucket_length(P, self.max_len)
+            if pb > P:
+                tokens = np.concatenate(
+                    [tokens, np.zeros(pb - P, tokens.dtype)])
+            inputs = {"tokens": jnp.asarray(tokens[None, :])}
+            logits, cache = self._prefill(self.params, inputs,
+                                          jnp.asarray(P, jnp.int32))
+        else:
+            inputs = {"tokens": jnp.asarray(tokens[None, :])}
+            logits, cache = self._prefill(self.params, inputs)
         if self.batched:
             # masked scatter into the slot's row of the stacked cache;
             # every other (possibly in-flight) slot is untouched
@@ -142,6 +218,12 @@ class ServeLoop:
         tok = int(jnp.argmax(logits, -1)[0])
         req.generated = [tok]
         return tok
+
+    def _finished_at_admission(self, req: Request, tok: int) -> bool:
+        """Budget of 1 (or an immediate EOS) completes at prefill."""
+        if len(req.generated) >= req.budget:
+            return True
+        return self.eos_id is not None and tok == self.eos_id
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Schedule + serve all requests to completion."""
@@ -157,13 +239,23 @@ class ServeLoop:
         pending: Dict[int, Deque[Request]] = {s: deque()
                                               for s in range(self.slots)}
         # per-chunk wall time of the slot's *previous* chunk (prefill +
-        # all decode steps), consumed by the next dequeue and then cleared
-        # — never a stale prefill-only value
+        # all decode dispatches), consumed by the next dequeue and then
+        # cleared — never a stale prefill-only value
         elapsed: Dict[int, Optional[float]] = {s: None
                                                for s in range(self.slots)}
         results: Dict[int, List[int]] = {}
+        truncated: List[int] = []
         slots_open = set(range(self.slots))
         exhausted = set()
+        self._dispatches = 0
+        self._decoded = 0
+        eos_arr = jnp.asarray(-1 if self.eos_id is None else self.eos_id,
+                              jnp.int32)
+
+        def finish(s: int, req: Request) -> None:
+            results[req.rid] = req.generated
+            if req.truncated:
+                truncated.append(req.rid)
 
         while len(results) < len(requests):
             # admission: idle slots dequeue request chunks via the UDS,
@@ -186,34 +278,51 @@ class ServeLoop:
                 if s not in self.active and pending[s]:
                     req = pending[s].popleft()
                     t0 = time.perf_counter()
-                    self._prefill_into(s, req)
+                    tok = self._prefill_into(s, req)
                     telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
-                    self.active[s] = req
                     progressed = True
-            # one decode step across active slots
+                    if self._finished_at_admission(req, tok):
+                        finish(s, req)
+                        if not pending[s]:
+                            elapsed[s] = telemetry.end(s)
+                    else:
+                        self.active[s] = req
+            # one decode dispatch across active slots
             done_slots = []
             if self.batched and self.active:
                 act = sorted(self.active)
                 last = np.zeros((self.slots, 1), np.int32)
                 mask = np.zeros((self.slots,), bool)
+                rem = np.zeros((self.slots,), np.int32)
                 for s in act:
-                    last[s, 0] = self.active[s].generated[-1]
+                    req = self.active[s]
+                    last[s, 0] = req.generated[-1]
                     mask[s] = True
+                    rem[s] = req.budget - len(req.generated)
                 t0 = time.perf_counter()
-                tok, self.cache = self._decode_batched(
+                toks, self.cache, act_out, rem_out = self._decode_fused(
                     self.params, {"tokens": jnp.asarray(last)},
-                    self.cache, jnp.asarray(mask))
-                tok = np.asarray(tok)       # device sync: true wall time
-                # one call served every active slot: equal wall-time shares
-                # keep per-slot attribution (AWF still replans per slot)
-                telemetry.add_time_split(act, time.perf_counter() - t0,
-                                         tokens=1)
+                    self.cache, jnp.asarray(mask), jnp.asarray(rem),
+                    eos_arr)
+                toks = np.asarray(toks)     # device sync: true wall time
+                act_out = np.asarray(act_out)
+                rem_out = np.asarray(rem_out)
+                dt = time.perf_counter() - t0
+                self._dispatches += 1
+                # one call served every active slot in lockstep: equal
+                # wall-time shares keep per-slot attribution (AWF still
+                # replans per slot), each slot credited the tokens IT
+                # produced before freezing
+                produced = {s: int(rem[s] - rem_out[s]) for s in act}
+                telemetry.add_time_split(act, dt, tokens=produced)
+                self._decoded += sum(produced.values())
                 progressed = True
                 for s in act:
                     req = self.active[s]
-                    req.generated.append(int(tok[s]))
-                    if len(req.generated) >= req.max_new:
-                        results[req.rid] = req.generated
+                    req.generated.extend(
+                        int(t) for t in toks[s, :produced[s]])
+                    if not act_out[s]:      # quota / EOS / capacity freeze
+                        finish(s, req)
                         done_slots.append(s)
             else:
                 for s, req in list(self.active.items()):
@@ -225,9 +334,15 @@ class ServeLoop:
                     self.caches[s] = cache
                     req.generated.append(int(tok[0]))
                     telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
+                    self._dispatches += 1
+                    self._decoded += 1
                     progressed = True
-                    if len(req.generated) >= req.max_new:
-                        results[req.rid] = req.generated
+                    done = len(req.generated) >= req.budget
+                    if (self.eos_id is not None
+                            and req.generated[-1] == self.eos_id):
+                        done = True
+                    if done:
+                        finish(s, req)
                         done_slots.append(s)
             for s in done_slots:
                 del self.active[s]
@@ -240,6 +355,14 @@ class ServeLoop:
         stream.close()        # flushes telemetry -> history epoch bump
         self.last_stats = telemetry.summary()
         self.last_stats["mode"] = self.mode
+        self.last_stats["decode_steps"] = self.decode_steps
+        self.last_stats["decode_dispatches"] = self._dispatches
+        self.last_stats["decoded_tokens"] = self._decoded
+        self.last_stats["dispatches_per_token"] = (
+            round(self._dispatches / self._decoded, 4) if self._decoded
+            else None)
+        self.last_stats["truncated"] = sorted(truncated)
+        self.last_stats["prefill_compiles"] = self.prefill_compiles
         return results
 
     def measured_epoch(self) -> int:
@@ -259,10 +382,18 @@ def main() -> None:
                          '"uds:name(args)", or "runtime" '
                          "(late-bound from $REPRO_SCHEDULE)")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="tokens per fused decode dispatch (batched mode): "
+                         "1 = the stepwise engine; 8 amortizes the "
+                         "Python->XLA round-trip over 8 tokens")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id (per-slot on-device stop in fused "
+                         "mode); default: generate to the token budget")
     ap.add_argument("--batched", dest="batched", action="store_true",
                     default=True,
-                    help="one jitted decode call per token across all "
-                         "active slots over a stacked KV cache (default)")
+                    help="one jitted dispatch per decode-steps tokens "
+                         "across all active slots over a stacked KV cache "
+                         "(default)")
     ap.add_argument("--per-slot", dest="batched", action="store_false",
                     help="escape hatch: one decode call per active slot "
                          "per token over per-slot batch-1 caches")
@@ -277,14 +408,17 @@ def main() -> None:
                     max_new=args.max_new)
             for i in range(args.requests)]
     loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler,
-                     batched=args.batched)
+                     batched=args.batched, decode_steps=args.decode_steps,
+                     eos_id=args.eos_id)
     t0 = time.perf_counter()
     out = loop.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {loop.mode} decode) "
+          f"({toks/dt:.1f} tok/s, {loop.mode} decode x{loop.decode_steps}) "
           f"under schedule({loop.sched_name}); "
+          f"{loop.last_stats.get('decode_dispatches')} decode dispatches "
+          f"({loop.last_stats.get('dispatches_per_token')} per token), "
           f"measured epoch {loop.measured_epoch()}, "
           f"imbalance {loop.last_stats.get('imbalance')}")
 

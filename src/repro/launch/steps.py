@@ -26,10 +26,11 @@ from repro.configs.base import ShapeSpec
 from repro.core.spec import SpecLike
 from repro.sharding import constrain
 
-__all__ = ["chunked_softmax_ce", "make_train_step", "make_prefill_step",
-           "make_serve_step", "make_batched_serve_step",
-           "apply_microbatch_plan", "plan_microbatches",
-           "split_batch_by_shares", "input_specs", "head_weights"]
+__all__ = ["chunked_softmax_ce", "make_train_step", "make_fused_train_step",
+           "make_prefill_step", "make_serve_step", "make_batched_serve_step",
+           "make_fused_serve_step", "apply_microbatch_plan",
+           "plan_microbatches", "split_batch_by_shares", "input_specs",
+           "head_weights"]
 
 Tree = Any
 
@@ -206,19 +207,12 @@ def chunked_softmax_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
     return loss_sum, cnt
 
 
-def make_train_step(model: Model, opt_update: Callable,
-                    *, remat: str = "full", ce_chunk: int = 512,
-                    aux_loss_weight: float = 0.01,
-                    num_microbatches: int = 1) -> Callable:
-    """Returns train_step(params, opt_state, step, batch) ->
-    (params, opt_state, metrics).
-
-    ``batch``: tokens/embeds, labels, optional segment_ids / positions_3d /
-    cap_e (engine-planned expert capacities).  ``num_microbatches`` > 1 runs
-    UDS-sized gradient accumulation: ``sched/microbatch.py`` plans the row
-    permutation host-side and ``apply_microbatch_plan`` applies it; the
-    equal split here keeps the compiled shape static.
-    """
+def _make_microbatch_grads(model: Model, *, remat: str, ce_chunk: int,
+                           aux_loss_weight: float,
+                           num_microbatches: int) -> Callable:
+    """The shared loss/grad core of the train-step factories: full-batch
+    gradients, or a ``lax.scan`` gradient accumulation over
+    ``num_microbatches`` equal splits (one compiled shape)."""
     cfg = model.cfg
 
     def loss_fn(params, batch):
@@ -274,25 +268,92 @@ def make_train_step(model: Model, opt_update: Callable,
         inv = 1.0 / num_microbatches
         return jax.tree.map(lambda x: x * inv, g), ce * inv, aux * inv, cnt
 
+    return microbatch_grads
+
+
+def _apply_update(opt_update: Callable, params, opt_state, step,
+                  grads, ce, aux, cnt):
+    updates, opt_state, om = opt_update(grads, opt_state, params, step)
+    params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                      ).astype(p.dtype), params, updates)
+    # "tokens": labelled (non-masked) tokens this step — the measure
+    # stage's tok/s numerator, threaded out for the telemetry loop
+    metrics = {"loss": ce, "aux_loss": aux, "step": step + 1,
+               "tokens": cnt, **om}
+    return params, opt_state, metrics
+
+
+def make_train_step(model: Model, opt_update: Callable,
+                    *, remat: str = "full", ce_chunk: int = 512,
+                    aux_loss_weight: float = 0.01,
+                    num_microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics).
+
+    ``batch``: tokens/embeds, labels, optional segment_ids / positions_3d /
+    cap_e (engine-planned expert capacities).  ``num_microbatches`` > 1 runs
+    UDS-sized gradient accumulation: ``sched/microbatch.py`` plans the row
+    permutation host-side and ``apply_microbatch_plan`` applies it; the
+    equal split here keeps the compiled shape static.
+    """
+    microbatch_grads = _make_microbatch_grads(
+        model, remat=remat, ce_chunk=ce_chunk,
+        aux_loss_weight=aux_loss_weight,
+        num_microbatches=num_microbatches)
+
     def train_step(params, opt_state, step, batch):
         grads, ce, aux, cnt = microbatch_grads(params, batch)
-        updates, opt_state, om = opt_update(grads, opt_state, params, step)
-        params = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
-                          ).astype(p.dtype), params, updates)
-        # "tokens": labelled (non-masked) tokens this step — the measure
-        # stage's tok/s numerator, threaded out for the telemetry loop
-        metrics = {"loss": ce, "aux_loss": aux, "step": step + 1,
-                   "tokens": cnt, **om}
-        return params, opt_state, metrics
+        return _apply_update(opt_update, params, opt_state, step,
+                             grads, ce, aux, cnt)
+
+    return train_step
+
+
+def make_fused_train_step(model: Model, opt_update: Callable,
+                          *, remat: str = "full", ce_chunk: int = 512,
+                          aux_loss_weight: float = 0.01,
+                          num_microbatches: int = 1,
+                          extra_batch_keys: Sequence[str] = ()) -> Callable:
+    """Returns train_step(params, opt_state, step, batch, perm) ->
+    (params, opt_state, metrics): the FUSED K-microbatch dispatch.
+
+    One jitted call per optimizer step does everything the per-microbatch
+    path spread over host round-trips: the UDS microbatch assignment
+    (``perm``, the plan's chunk table as a device int32 array — the
+    schedule still decides which rows land in which microbatch) is applied
+    ON DEVICE, then the ``lax.scan`` gradient accumulation runs all
+    ``num_microbatches`` microbatches, then the optimizer update — no
+    host-side eager permutation dispatches between them.  Numerically
+    identical to ``make_train_step`` fed a host-permuted batch (the
+    permutation is the same gather, just lowered into the program).
+    """
+    microbatch_grads = _make_microbatch_grads(
+        model, remat=remat, ce_chunk=ce_chunk,
+        aux_loss_weight=aux_loss_weight,
+        num_microbatches=num_microbatches)
+    keys = tuple(extra_batch_keys)
+
+    def train_step(params, opt_state, step, batch, perm):
+        batch = apply_microbatch_plan(batch, perm, extra_batch_keys=keys)
+        grads, ce, aux, cnt = microbatch_grads(params, batch)
+        return _apply_update(opt_update, params, opt_state, step,
+                             grads, ce, aux, cnt)
 
     return train_step
 
 
 def make_prefill_step(model: Model, *, max_len: Optional[int] = None
                       ) -> Callable:
-    def prefill_step(params, batch):
-        return model.prefill(params, batch, max_len)
+    """``length`` (optional traced scalar) marks the real prompt length
+    inside a right-padded token buffer — the bucketed-prefill form that
+    compiles once per length BUCKET instead of once per distinct prompt
+    length (attention families only; SSM prefills absorb pad tokens into
+    their state and must keep exact lengths)."""
+    def prefill_step(params, batch, length=None):
+        if length is None:
+            return model.prefill(params, batch, max_len)
+        return model.prefill(params, batch, max_len, length=length)
     return prefill_step
 
 
@@ -323,6 +384,32 @@ def make_batched_serve_step(model: Model) -> Callable:
                                              cap_e=batch.get("cap_e"))
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return token, cache
+    return serve_step
+
+
+def make_fused_serve_step(model: Model, num_steps: int) -> Callable:
+    """``num_steps`` greedy decode tokens per dispatch across ALL slots of
+    a stacked cache — ONE jitted call runs a ``lax.scan`` of
+    ``num_steps`` batched decode steps with per-slot stop/EOS/length
+    handling on device (``transformer.fused_decode_steps``).  The batched
+    ``ServeLoop`` hot path: the Python→XLA round-trip is paid once per
+    ``num_steps`` tokens instead of once per token.  ``num_steps=1`` is
+    exactly the stepwise batched engine.
+
+    Returns serve_step(params, batch, cache, active, remaining, eos_id)
+    -> (tokens (slots, num_steps), cache, active, remaining)."""
+    if model.fused_decode is None:
+        raise ValueError(
+            f"{model.name}: model family has no batched decode path "
+            f"(use the per-slot serve step)")
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+
+    def serve_step(params, batch, cache, active, remaining, eos_id):
+        return model.fused_decode(params, batch, cache,
+                                  num_steps=num_steps, active=active,
+                                  remaining=remaining, eos_id=eos_id,
+                                  cap_e=batch.get("cap_e"))
     return serve_step
 
 

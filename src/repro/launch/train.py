@@ -40,8 +40,9 @@ from repro.core.spec import SpecLike, resolve
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import (batch_shardings, make_host_mesh, make_mesh,
                                rules_for, shardings_for)
-from repro.launch.steps import (make_train_step, opt_state_specs,
-                                plan_microbatches, split_batch_by_shares)
+from repro.launch.steps import (make_fused_train_step, make_train_step,
+                                opt_state_specs, plan_microbatches,
+                                split_batch_by_shares)
 from repro.models import get_model
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
 from repro.sched import (CapacityPlanner, StragglerMitigator,
@@ -58,7 +59,8 @@ class TrainLoop:
     def __init__(self, cfg, *, batch: int, seq_len: int,
                  mesh_shape=None, scheduler: SpecLike = "fac2",
                  microbatch_scheduler: SpecLike = "dynamic,1",
-                 num_microbatches: int = 1, lr: float = 3e-4,
+                 num_microbatches: int = 1,
+                 fused_microbatches: bool = False, lr: float = 3e-4,
                  ckpt_dir: Optional[str] = None, seed: int = 0,
                  data_sigma: float = 1.0, hosts: int = 1,
                  straggler_scheduler: SpecLike = "wf2",
@@ -108,6 +110,13 @@ class TrainLoop:
         self.pack_sched = resolve(scheduler)
         self.microbatch_sched = microbatch_scheduler
         self.num_microbatches = num_microbatches
+        # fused: apply the UDS microbatch permutation ON DEVICE inside the
+        # jitted step (one dispatch per optimizer step) instead of as a
+        # host-side eager gather before it — numerically identical
+        # (same permutation, lowered into the program).  A no-op request
+        # at num_microbatches == 1 is simply ignored.
+        self.fused_microbatches = bool(fused_microbatches
+                                       and num_microbatches > 1)
         self.capacity = (CapacityPlanner(cfg, seq_len) if cfg.is_moe else None)
 
         devs = len(jax.devices())
@@ -158,9 +167,14 @@ class TrainLoop:
         self.pshard, self.oshard = pshard, oshard
         self.specs = specs
 
-        step_fn = make_train_step(self.model, opt_update,
-                                  num_microbatches=num_microbatches)
+        if self.fused_microbatches:
+            step_fn = make_fused_train_step(self.model, opt_update,
+                                            num_microbatches=num_microbatches)
+        else:
+            step_fn = make_train_step(self.model, opt_update,
+                                      num_microbatches=num_microbatches)
         self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self._perm: Optional[jax.Array] = None
         self.step = 0
         self.corpus = SyntheticCorpus(cfg.vocab_size, mean_len=seq_len / 4,
                                       sigma=data_sigma, seed=seed)
@@ -189,8 +203,18 @@ class TrainLoop:
                  "segment_ids": jnp.asarray(packed.segment_ids)}
         if self.num_microbatches > 1:
             costs = (packed.segment_ids > 0).sum(axis=1).astype(float)
-            batch = plan_microbatches(batch, costs, self.num_microbatches,
-                                      scheduler=self.microbatch_sched)
+            if self.fused_microbatches:
+                # plan host-side (the UDS still decides the assignment),
+                # but only ship the permutation — the gather itself runs
+                # inside the fused jitted step, not as an eager dispatch
+                from repro.sched.microbatch import plan_microbatch_permutation
+                perm = plan_microbatch_permutation(
+                    self.microbatch_sched, costs, self.num_microbatches)
+                self._perm = jnp.asarray(perm)
+            else:
+                batch = plan_microbatches(batch, costs,
+                                          self.num_microbatches,
+                                          scheduler=self.microbatch_sched)
         if self.capacity is not None:
             batch["cap_e"] = jnp.asarray(self.capacity.plan())
         if self.cfg.frontend != "none":
@@ -256,9 +280,14 @@ class TrainLoop:
                                                          self.rules, batch)
                     batch = jax.device_put(batch, self._in_shard)
                 t0 = time.perf_counter()
-                self.params, self.opt_state, metrics = self._step(
-                    self.params, self.opt_state,
-                    jnp.asarray(self.step, jnp.int32), batch)
+                if self.fused_microbatches:
+                    self.params, self.opt_state, metrics = self._step(
+                        self.params, self.opt_state,
+                        jnp.asarray(self.step, jnp.int32), batch, self._perm)
+                else:
+                    self.params, self.opt_state, metrics = self._step(
+                        self.params, self.opt_state,
+                        jnp.asarray(self.step, jnp.int32), batch)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 tokens = int(metrics.get("tokens", self.batch * self.seq_len))
@@ -303,6 +332,10 @@ def main() -> None:
     ap.add_argument("--microbatch-scheduler", default="dynamic,1",
                     help="schedule clause for the microbatch assignment")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fused-microbatches", action="store_true",
+                    help="apply the UDS microbatch permutation on device "
+                         "inside the jitted step (one dispatch per "
+                         "optimizer step; numerically identical)")
     ap.add_argument("--hosts", type=int, default=1,
                     help="data-parallel hosts; the AWF straggler loop "
                          "re-splits the batch unevenly across them "
@@ -323,7 +356,8 @@ def main() -> None:
     loop = TrainLoop(cfg, batch=args.batch, seq_len=args.seq_len,
                      scheduler=args.scheduler,
                      microbatch_scheduler=args.microbatch_scheduler,
-                     num_microbatches=args.microbatches, lr=args.lr,
+                     num_microbatches=args.microbatches,
+                     fused_microbatches=args.fused_microbatches, lr=args.lr,
                      ckpt_dir=args.ckpt_dir, hosts=args.hosts,
                      straggler_scheduler=args.straggler_scheduler,
                      min_host_share=args.min_host_share)

@@ -16,6 +16,9 @@ one stacked cache with per-slot lengths, one decode call for all slots:
     model.batched_decode(params, inputs, cache, active=mask)
                                       -> (logits (B,V), new cache)
     model.insert_prefill(cache, prefill_cache, slot) -> cache
+    model.fused_decode(params, inputs, cache, num_steps=T,
+                       active=mask, remaining=rem, eos_id=eos)
+                -> (tokens (B,T), cache, active, remaining)  # T per dispatch
 
 They are ``None`` for state-space / hybrid families (``ServeLoop`` falls
 back to per-slot decode there).
@@ -48,6 +51,10 @@ class Model:
     init_batched_decode: Optional[Callable] = None
     batched_decode: Optional[Callable] = None
     insert_prefill: Optional[Callable] = None
+    # fused multi-token decode: T greedy tokens per dispatch via an
+    # on-device lax.scan over batched_decode, with per-slot stop/length
+    # handling carried in the loop state (None = no batched path)
+    fused_decode: Optional[Callable] = None
 
     @property
     def name(self) -> str:
@@ -100,4 +107,7 @@ def get_model(cfg: ModelConfig) -> Model:
                         transformer.batched_decode_step(params, cfg, inputs,
                                                         cache, **kw)),
         insert_prefill=transformer.insert_prefill,
+        fused_decode=(lambda params, inputs, cache, **kw:
+                      transformer.fused_decode_steps(params, cfg, inputs,
+                                                     cache, **kw)),
     )

@@ -25,7 +25,8 @@ from repro.models.moe import moe_ffn
 from repro.sharding import constrain, current_rules
 
 __all__ = ["init_params", "forward", "init_cache", "init_batched_cache",
-           "decode_step", "batched_decode_step", "insert_prefill", "prefill"]
+           "decode_step", "batched_decode_step", "fused_decode_steps",
+           "insert_prefill", "prefill"]
 
 Tree = Dict[str, Any]
 
@@ -403,6 +404,72 @@ def batched_decode_step(params: Tree, cfg: ModelConfig,
     return logits, new_cache
 
 
+def fused_decode_steps(params: Tree, cfg: ModelConfig,
+                       inputs: Dict[str, jax.Array], cache: Tree, *,
+                       num_steps: int,
+                       active: Optional[jax.Array] = None,
+                       remaining: Optional[jax.Array] = None,
+                       eos_id: Optional[jax.Array] = None,
+                       cap_e: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Tree, jax.Array, jax.Array]:
+    """Run up to ``num_steps`` greedy decode tokens per slot ON DEVICE.
+
+    One ``lax.scan`` over :func:`batched_decode_step` — ONE dispatch per
+    ``num_steps`` tokens instead of one per token, which is the whole
+    point: at production rates the Python→XLA round-trip per token is the
+    serve bottleneck, not the model math.  The dispatch quantum
+    ``num_steps`` is a schedule parameter (``ServeLoop(decode_steps=T)``);
+    ``num_steps=1`` is exactly one ``batched_decode_step`` and reproduces
+    the stepwise engine token for token (greedy decode is deterministic,
+    so any T does).
+
+    Per-slot stop/length handling lives in the loop carry:
+
+    * ``remaining (B,) int32`` — tokens the slot still wants.  A slot
+      freezes in place (no KV append, no length bump, no further tokens)
+      the step its count hits zero, so slots with fewer than ``num_steps``
+      tokens left simply ride out the dispatch frozen.
+    * ``eos_id`` — optional scalar; a slot that emits it freezes on the
+      next step (the EOS token itself is emitted and counted).
+    * cache capacity — a slot whose fill reaches ``max_len`` freezes
+      rather than scattering out of bounds (belt-and-braces: admission
+      budgets already clamp ``remaining`` to cache capacity).
+
+    Returns ``(tokens (B, num_steps) int32, cache, active, remaining)``.
+    Slot ``b``'s real output is the first ``remaining_in[b] -
+    remaining_out[b]`` entries of ``tokens[b]``; frozen steps emit -1.
+    """
+    tok = inputs["tokens"]                          # (B, 1) int32
+    B = cache["len"].shape[0]
+    max_len = cache["k"].shape[2]
+    act = (jnp.ones((B,), bool) if active is None
+           else jnp.asarray(active).astype(bool))
+    rem = (jnp.full((B,), num_steps, jnp.int32) if remaining is None
+           else jnp.asarray(remaining).astype(jnp.int32))
+    act = act & (rem > 0)
+    eos = (jnp.asarray(-1, jnp.int32) if eos_id is None
+           else jnp.asarray(eos_id).astype(jnp.int32))
+
+    def body(carry, _):
+        tok, k, v, ln, act, rem = carry
+        logits, new_cache = batched_decode_step(
+            params, cfg, {"tokens": tok}, {"k": k, "v": v, "len": ln},
+            active=act, cap_e=cap_e)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B,)
+        emit = jnp.where(act, nxt, -1)
+        rem = rem - act.astype(jnp.int32)
+        ln = new_cache["len"]
+        act = act & (rem > 0) & (nxt != eos) & (ln < max_len)
+        # frozen slots keep feeding their old token (never appended again)
+        tok = jnp.where(act, nxt, tok[:, 0])[:, None]
+        return (tok, new_cache["k"], new_cache["v"], ln, act, rem), emit
+
+    (tok, k, v, ln, act, rem), toks = jax.lax.scan(
+        body, (tok, cache["k"], cache["v"], cache["len"], act, rem),
+        None, length=num_steps)
+    return toks.T, {"k": k, "v": v, "len": ln}, act, rem
+
+
 def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
                 cache: Tree, *, cap_e: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Tree]:
@@ -426,9 +493,21 @@ def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
 def prefill(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
             max_len: Optional[int] = None,
             *, remat: str = "full",
+            length: Optional[jax.Array] = None,
             cap_e: Optional[jax.Array] = None) -> Tuple[jax.Array, Tree]:
     """Process a full prompt, building the KV cache; returns
-    (last-position logits (B,V), cache)."""
+    (last-position logits (B,V), cache).
+
+    ``length`` (scalar, traced) marks the REAL prompt length inside a
+    right-padded ``tokens`` buffer: logits are read at position
+    ``length - 1`` and the cache fill is set to ``length``, not the padded
+    width.  Under causal masking positions < length never attend the pad
+    tail, so a prompt padded to a shared length bucket produces the same
+    prefix math — the lever that lets serving compile ONE prefill per
+    bucket instead of one per distinct prompt length.  Pad positions do
+    land garbage K/V in the cache, but decode overwrites them in order
+    (appends happen exactly at ``len``, ``len+1``, …) and attention masks
+    everything at or beyond the current fill, so they are never read."""
     x, positions, pos3d = _embed_inputs(cfg, params, inputs)
     B, S = x.shape[:2]
     max_len = max_len or S
@@ -473,6 +552,13 @@ def prefill(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],
     x = rms_norm(x, params["final_norm"])
     head = (params["embed"]["tok"].T if cfg.tie_embeddings
             else params["lm_head"])
-    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)[:, :cfg.vocab_size]
-    cache = {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+    if length is None:
+        x_last = x[:, -1]
+        fill = jnp.asarray(S, jnp.int32)
+    else:
+        fill = jnp.asarray(length, jnp.int32)
+        x_last = jax.lax.dynamic_index_in_dim(x, fill - 1, axis=1,
+                                              keepdims=False)
+    logits = jnp.einsum("bd,dv->bv", x_last, head)[:, :cfg.vocab_size]
+    cache = {"k": ks, "v": vs, "len": fill}
     return logits, cache

@@ -1,4 +1,4 @@
-"""Serving-engine tests: batched-vs-per-slot equivalence and telemetry.
+"""Serving-engine tests: batched/fused/per-slot equivalence and telemetry.
 
 The batched decode path (one jitted call per token across all slots over a
 stacked ``[slots, max_len]`` KV cache) must be *behaviourally invisible*:
@@ -11,6 +11,15 @@ for every builtin schedule family — static chunking, guided self-scheduling
 and adaptive weighted factoring.  The telemetry loop must keep feeding
 per-slot busy times into the LoopHistory so AWF admission still replans
 per slot (the PR-2 measure stage survives batching).
+
+The FUSED dispatch quantum (``decode_steps=T``: one jitted call runs T
+tokens via an on-device ``lax.scan`` with per-slot stop handling) must be
+equally invisible: greedy decode is deterministic, so every T serves the
+same tokens — locked down for T ∈ {1, 4, 16} under every schedule family,
+plus the mid-dispatch freeze cases (budget exhaustion, EOS, cache
+capacity).  Prefill bucketing (prompts right-padded to power-of-two
+buckets) must not change tokens and must bound compile count by buckets,
+not distinct prompt lengths.
 """
 
 import numpy as np
@@ -99,14 +108,126 @@ def test_ssm_family_falls_back_to_per_slot():
     assert get_model(cfg).batched_decode is None
 
 
-def test_over_capacity_request_is_refused(batched_loop):
-    """prompt + max_new beyond max_len must raise, not silently clamp or
-    drop KV appends (the two decode paths would diverge differently)."""
-    prompt = np.arange(MAX_LEN - 2, dtype=np.int32) % 16
+def test_over_capacity_request_is_truncated_and_reported(batched_loop):
+    """prompt + max_new beyond max_len is admitted with the generation
+    budget clamped to cache capacity, and the truncation is REPORTED per
+    request — never silently padded (dropped KV appends would corrupt the
+    generation) and never refused (the request is serveable)."""
+    prompt = np.arange(MAX_LEN - 2, dtype=np.int32) % 16      # capacity 3
+    batched_loop.scheduler = "dynamic"
+    batched_loop.history = LoopHistory()
+    reqs = [Request(rid=0, prompt=prompt, max_new=8)]
+    out = batched_loop.run(reqs)
+    assert len(out[0]) == MAX_LEN - len(prompt) + 1            # clamped
+    assert reqs[0].truncated
+    assert batched_loop.last_stats["truncated"] == [0]
+    assert -1 not in out[0]                    # no frozen-step padding
+
+
+def test_prompt_alone_over_max_len_is_refused(batched_loop):
+    """A prompt that cannot even fit the cache is not serveable at any
+    budget: refuse loudly instead of truncating the PROMPT."""
+    prompt = np.arange(MAX_LEN + 1, dtype=np.int32) % 16
     batched_loop.scheduler = "dynamic"
     batched_loop.history = LoopHistory()
     with pytest.raises(ValueError, match="max_len"):
-        batched_loop.run([Request(rid=0, prompt=prompt, max_new=8)])
+        batched_loop.run([Request(rid=0, prompt=prompt, max_new=2)])
+
+
+@pytest.mark.parametrize("decode_steps", [1, 8])
+def test_max_len_mid_dispatch_truncation(cfg, decode_steps):
+    """Regression: a slot whose cache fills MID-fused-dispatch (prompt
+    near max_len, quantum spanning the cap) must freeze at capacity and
+    report the truncation — same tokens at every dispatch quantum."""
+    prompt = (np.arange(MAX_LEN - 3, dtype=np.int32) % 16)     # capacity 4
+    loop = ServeLoop(cfg, slots=2, max_len=MAX_LEN,
+                     decode_steps=decode_steps)
+    reqs = [Request(rid=0, prompt=prompt, max_new=10)]
+    out = loop.run(reqs)
+    assert len(out[0]) == 4                    # capacity, not max_new
+    assert reqs[0].truncated
+    assert loop.last_stats["truncated"] == [0]
+    assert int(np.asarray(loop.cache["len"])[0]) <= MAX_LEN
+
+
+# ------------------------------------------------------------ fused decode
+@pytest.fixture(scope="module")
+def fused_loops(cfg):
+    """One loop per dispatch quantum, shared across schedule families
+    (compile once); scheduler and history are swapped per run."""
+    return {t: ServeLoop(cfg, slots=SLOTS, max_len=MAX_LEN, decode_steps=t)
+            for t in (4, 16)}
+
+
+@pytest.mark.parametrize("decode_steps", [4, 16])
+@pytest.mark.parametrize("clause", ["static", "guided,2", "awf"])
+def test_fused_token_and_epoch_equivalence(clause, decode_steps,
+                                           batched_loop, fused_loops):
+    """The fused guarantee: the dispatch quantum is invisible — T tokens
+    per jitted call serve exactly the tokens the stepwise engine (T=1)
+    serves, under every builtin schedule family, and the measure stage
+    still flushes one epoch per run with full token credit.  (Chunk→slot
+    assignments may legitimately differ: admission happens at dispatch
+    boundaries, so only tokens + telemetry epochs are contractual.)"""
+    out_1, _ = run_with(batched_loop, clause, seed=42)
+    fused = fused_loops[decode_steps]
+    out_t, _ = run_with(fused, clause, seed=42)
+    assert fused.decode_steps == decode_steps
+    assert out_t == out_1                      # token-for-token identical
+    assert fused.measured_epoch() == batched_loop.measured_epoch() == 1
+    assert (fused.last_stats["decoded_tokens"]
+            == batched_loop.last_stats["decoded_tokens"])
+    # the point of fusing: strictly fewer host->device dispatches
+    assert (fused.last_stats["decode_dispatches"]
+            < batched_loop.last_stats["decode_dispatches"])
+
+
+def test_stepwise_is_the_default_quantum(batched_loop):
+    """decode_steps=1 (exactly today's engine) stays the default; the
+    fused quantum is opt-in."""
+    assert ServeLoop.__init__.__kwdefaults__["decode_steps"] == 1
+    assert batched_loop.decode_steps == 1
+
+
+def test_fused_eos_freezes_slot_mid_dispatch(cfg):
+    """A slot that emits EOS inside a fused dispatch freezes in place (no
+    tokens past EOS) while the stepwise run stops at the same point."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    base = ServeLoop(cfg, slots=1, max_len=MAX_LEN, decode_steps=1)
+    ref = base.run([Request(rid=0, prompt=prompt.copy(), max_new=8)])[0]
+    eos = ref[3]                    # force a stop 4 tokens in
+    for steps in (1, 8):
+        loop = ServeLoop(cfg, slots=1, max_len=MAX_LEN, decode_steps=steps,
+                         eos_id=eos)
+        out = loop.run([Request(rid=0, prompt=prompt.copy(), max_new=8)])
+        assert out[0] == ref[:4], f"decode_steps={steps}"
+        assert out[0][-1] == eos
+
+
+# ------------------------------------------------------- prefill bucketing
+def test_bucket_length():
+    from repro.launch.serve import MIN_PREFILL_BUCKET, bucket_length
+    assert bucket_length(1, 64) == MIN_PREFILL_BUCKET
+    assert bucket_length(8, 64) == 8
+    assert bucket_length(9, 64) == 16
+    assert bucket_length(33, 64) == 64
+    assert bucket_length(60, 64) == 64        # capped at max_len
+
+
+def test_prefill_compiles_once_per_bucket(cfg):
+    """Mixed prompt lengths must not recompile prefill per length: one
+    compiled program per power-of-two bucket (the admission-latency fix).
+    Lengths 4..12 span buckets {8, 16} -> exactly 2 compilations."""
+    loop = ServeLoop(cfg, slots=SLOTS, max_len=MAX_LEN)
+    reqs = make_requests(11, n=8)              # lengths in [4, 12)
+    lengths = {int(r.prompt.size) for r in reqs}
+    assert len(lengths) > 2                    # the test needs mixed lengths
+    out = loop.run(reqs)
+    assert sorted(out) == list(range(8))
+    from repro.launch.serve import bucket_length
+    buckets = {bucket_length(n, MAX_LEN) for n in lengths}
+    assert loop.prefill_compiles == len(buckets) < len(lengths)
 
 
 def test_partial_team_drain(batched_loop):

@@ -174,6 +174,33 @@ def test_injected_slow_host_rebalances_and_invalidates_plans():
     assert w[3] < min(w[:3]) and np.isfinite(w).all()
 
 
+def test_fused_microbatches_match_unfused_losses():
+    """The fused K-microbatch step (UDS permutation applied ON DEVICE
+    inside one jitted dispatch) is numerically identical to the unfused
+    path (host-side eager permutation + jitted step): same seed, same
+    schedule, equal loss trajectories."""
+    from repro.launch.train import TrainLoop
+    cfg = get_smoke_config("qwen2.5-3b")
+    kw = dict(batch=4, seq_len=32, seed=0, num_microbatches=2,
+              microbatch_scheduler="dynamic,1", mesh_shape=(1, 1))
+    unfused = TrainLoop(cfg, **kw)
+    a = unfused.run(3, log_every=100)
+    fused = TrainLoop(cfg, fused_microbatches=True, **kw)
+    b = fused.run(3, log_every=100)
+    assert fused.fused_microbatches
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_microbatches_noop_at_one_microbatch():
+    """fused_microbatches without gradient accumulation has nothing to
+    fuse: the flag is ignored, not an error."""
+    from repro.launch.train import TrainLoop
+    cfg = get_smoke_config("qwen2.5-3b")
+    loop = TrainLoop(cfg, batch=2, seq_len=32, num_microbatches=1,
+                     fused_microbatches=True, mesh_shape=(1, 1))
+    assert not loop.fused_microbatches
+
+
 def test_multihost_rejects_microbatching():
     """Physical row ownership under the (M, B/M, S) microbatch reshape is
     not the splitter's contiguous-block host model, so the combination is
