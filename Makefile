@@ -24,8 +24,9 @@ coverage:       ## tier-1 under coverage (4 emulated hosts); CI floor 82%
 	    $(PYTHON) -m pytest -q --cov=repro --cov-report=term-missing \
 	    --cov-report=xml --cov-fail-under=82
 
-lint:           ## ruff over the whole tree (rule set in ruff.toml)
+lint:           ## ruff over the whole tree (ruff.toml) + docs registry sync
 	ruff check .
+	$(PYTHON) tools/check_docs.py
 
 smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job)
 	$(PYTHON) examples/quickstart.py
@@ -51,6 +52,12 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --hosts 4 \
 	    --straggler-scheduler "wf2"
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 4 --slots 2 --scheduler auto --max-new 4
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 4 --seq-len 64 --hosts 4 \
+	    --straggler-scheduler auto
 
 bench:          ## full benchmark harness (CSV stdout, JSON to benchmarks/results/)
 	$(PYTHON) benchmarks/run.py

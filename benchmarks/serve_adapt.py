@@ -32,6 +32,14 @@ BENCH_serve.json`` uploaded as an artifact, ``--gate`` as the exit code):
    engine, plus the measured ``dispatches_per_token`` of each.  The gate
    enforces ``fused_speedup >= 1.5`` — the dispatch-amortization
    acceptance criterion for the fused rebuild.
+
+5. **Auto selection** (pure host, no JAX): the same skewed-worker loop
+   driven by ``schedule(auto)`` and by every fixed candidate clause.
+   Reported: each clause's steady-state makespan, auto's selection
+   trajectory, and ``auto_vs_best_fixed_ratio`` (best fixed steady
+   makespan / auto's).  The gate enforces ``>= 0.9`` — the acceptance
+   criterion that auto converges within 10% of the best hand-picked
+   clause without being told which.
 """
 
 from __future__ import annotations
@@ -52,6 +60,7 @@ SLOW_SPEED = 0.25
 SPEEDUP_GATE = 3.0     # batched decode must be >= 3x per-slot tok/s
 FUSED_GATE = 1.5       # fused decode_steps=8 must be >= 1.5x stepwise tok/s
 FUSED_STEPS = 8
+AUTO_RATIO_GATE = 0.9  # auto must reach >= 90% of the best fixed clause
 
 
 def executor_steady_state(n_iter: int = N_ITER, workers: int = WORKERS,
@@ -99,6 +108,60 @@ def executor_steady_state(n_iter: int = N_ITER, workers: int = WORKERS,
         "makespan_improvement": round(makespans[0] / makespans[-1], 3),
         "rebalanced": bool(slow_share[-1] < slow_share[0]),
         "wall_s": round(wall, 3),
+    }
+
+
+def auto_selection(n_iter: int = N_ITER, workers: int = WORKERS,
+                   steps: int = STEPS, steady_k: int = 3) -> dict:
+    """schedule(auto) vs every fixed candidate on the skewed executor.
+
+    Each clause runs the same plan -> execute -> measure loop as the
+    executor stage (fresh ``resolve()`` per step: selection state lives
+    in the history, not the object); the figure of merit is the ratio of
+    the best fixed clause's steady-state makespan to auto's."""
+    import numpy as np
+    from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
+                            execute_plan, resolve)
+    from repro.core.auto import DEFAULT_CANDIDATES
+    from repro.core.engine import PlanEngine
+
+    speeds = [1.0] * workers
+    speeds[SLOW_WORKER] = SLOW_SPEED
+    costs = np.ones(n_iter)
+    loop = LoopSpec(0, n_iter, num_workers=workers, loop_id="auto_select")
+
+    def drive(clause: str) -> dict:
+        eng = PlanEngine()
+        hist = LoopHistory()
+        tel = LoopTelemetry(hist, loop_id=loop.loop_id, num_workers=workers)
+        makespans, tags = [], []
+        for _ in range(steps):
+            sched = resolve(clause)
+            plan = eng.plan(sched, loop, history=hist)
+            res = execute_plan(plan, costs, speeds=speeds,
+                               history=hist, telemetry=tel)
+            makespans.append(round(res.makespan, 2))
+            tags.append(getattr(sched, "history_tag", clause))
+        return {"makespan": makespans, "selected": tags,
+                "steady_makespan": round(
+                    sum(makespans[-steady_k:]) / steady_k, 2)}
+
+    fixed = {c: drive(c) for c in DEFAULT_CANDIDATES}
+    auto = drive("auto")
+    best_clause = min(fixed, key=lambda c: fixed[c]["steady_makespan"])
+    best = fixed[best_clause]["steady_makespan"]
+    ratio = round(best / max(auto["steady_makespan"], 1e-9), 3)
+    return {
+        "n_iter": n_iter,
+        "workers": workers,
+        "steps": steps,
+        "slow_worker": SLOW_WORKER,
+        "slow_speed": SLOW_SPEED,
+        "fixed_steady": {c: fixed[c]["steady_makespan"] for c in fixed},
+        "best_fixed": best_clause,
+        "auto": auto,
+        "auto_vs_best_fixed_ratio": ratio,
+        "auto_ratio_gate": AUTO_RATIO_GATE,
     }
 
 
@@ -269,17 +332,20 @@ def fused_speedup(arch: str = "qwen2.5-3b", requests: int = 16,
 
 def collect(skip_serve: bool = False) -> dict:
     record: dict = {"bench": "serve_adapt",
-                    "executor": executor_steady_state()}
+                    "executor": executor_steady_state(),
+                    "auto": auto_selection()}
     if not skip_serve:
         record["serve"] = serve_smoke()
         record["batched"] = batched_speedup()
         record["fused"] = fused_speedup()
     ex = record["executor"]
+    au = record["auto"]
     checks = {
         "epoch_advanced": ex["epoch_advances"] >= 1,
         "replanned_from_measurements": ex["cache_invalidations"] >= 1,
         "rebalanced_off_slow_worker": ex["rebalanced"],
         "makespan_improved": ex["makespan_improvement"] > 1.0,
+        "auto_ratio_gate": au["auto_vs_best_fixed_ratio"] >= AUTO_RATIO_GATE,
     }
     if not skip_serve:
         sv = record["serve"]
@@ -309,6 +375,11 @@ def rows(skip_serve: bool = True) -> list:
             f"epochs={ex['epoch_advances']};"
             f"share_slow={ex['slow_share'][0]}->{ex['slow_share'][-1]};"
             f"makespan_x={ex['makespan_improvement']}")]
+    au = rec["auto"]
+    out.append(("serve_adapt/auto", 0.0,
+                f"ratio={au['auto_vs_best_fixed_ratio']};"
+                f"best={au['best_fixed']};"
+                f"selected={au['auto']['selected'][-1]}"))
     if "serve" in rec:
         sv = rec["serve"]
         out.append(("serve_adapt/serve", 0.0,
@@ -349,6 +420,12 @@ def main(argv=None) -> int:
           f"({ex['makespan_improvement']}x), "
           f"{ex['epoch_advances']} epoch advances, "
           f"{ex['cache_invalidations']} cache invalidations")
+    au = record["auto"]
+    print(f"auto: steady {au['auto']['steady_makespan']} vs best fixed "
+          f"'{au['best_fixed']}' {au['fixed_steady'][au['best_fixed']]} -> "
+          f"ratio {au['auto_vs_best_fixed_ratio']} "
+          f"(gate >= {AUTO_RATIO_GATE}), selected "
+          f"{au['auto']['selected'][0]} -> {au['auto']['selected'][-1]}")
     if "serve" in record:
         sv = record["serve"]
         print(f"serve: {sv['tok_s']} tok/s warm, epochs {sv['epochs']}, "

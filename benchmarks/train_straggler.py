@@ -31,6 +31,13 @@ uploaded as an artifact, ``--gate`` as the exit code):
    executor stage).  The gate: steady-state recovery
    ``static_makespan / adaptive_makespan >= 1.3`` — the slow host sheds
    enough tokens that the modelled step time beats even splitting by 30%+.
+
+3. **Auto selection** (pure host, no JAX): the same 2x-slow-host share
+   loop driven with ``--straggler-scheduler``-style fixed clauses and with
+   ``schedule(auto)``.  Reported: per-clause steady-state virtual step
+   time, auto's per-step candidate tags, and
+   ``auto_vs_best_fixed_ratio`` (best fixed steady / auto's), gated
+   ``>= 0.9`` — auto must land within 10% of the best hand-picked clause.
 """
 # ^ a named constant, not __doc__: the XLA env setup must be the module's
 # first statements, and a docstring cannot follow them
@@ -49,6 +56,8 @@ HOSTS = 4
 SLOW_HOST = 3
 SLOW_FACTOR = 2.0
 RECOVERY_GATE = 1.3    # steady-state step-time recovery vs even shares
+AUTO_RATIO_GATE = 0.9  # auto must reach >= 90% of the best fixed clause
+AUTO_CLAUSES = ("wf2", "static", "fac2", "awf")
 
 
 def shares_convergence(steps: int = 12, total: int = 4096) -> dict:
@@ -79,6 +88,50 @@ def shares_convergence(steps: int = 12, total: int = 4096) -> dict:
         "ideal_frac": round(ideal, 4),
         "converged": abs(traj[-1] - ideal) < 0.05,
         "epochs": m.epoch(),
+    }
+
+
+def auto_selection(steps: int = 16, total: int = 2048,
+                   steady_k: int = 4) -> dict:
+    """schedule(auto) as the straggler scheduler vs fixed clauses.
+
+    Virtual scenario: per-host step time = share x skew, so the steady
+    virtual makespan of each clause is exactly the step time its shares
+    buy, and the ratio isolates the selection quality."""
+    from repro.sched import StragglerMitigator
+
+    def drive(clause: str) -> dict:
+        m = StragglerMitigator(num_hosts=HOSTS, scheduler=clause,
+                               min_share=0.1)
+        makespans, tags = [], []
+        for _ in range(steps):
+            shares = m.token_shares(total)
+            times = {h: float(shares[h])
+                     * (SLOW_FACTOR if h == SLOW_HOST else 1.0)
+                     for h in range(HOSTS)}
+            m.observe_step(times, {h: max(int(shares[h]), 1)
+                                   for h in range(HOSTS)})
+            makespans.append(round(max(times.values()), 1))
+            tags.append(m._share_tag)
+        return {"makespan": makespans, "selected": tags,
+                "steady_makespan": round(
+                    sum(makespans[-steady_k:]) / steady_k, 1)}
+
+    fixed = {c: drive(c) for c in AUTO_CLAUSES}
+    auto = drive("auto")
+    best_clause = min(fixed, key=lambda c: fixed[c]["steady_makespan"])
+    best = fixed[best_clause]["steady_makespan"]
+    ratio = round(best / max(auto["steady_makespan"], 1e-9), 3)
+    return {
+        "total_tokens": total,
+        "steps": steps,
+        "slow_host": SLOW_HOST,
+        "slow_factor": SLOW_FACTOR,
+        "fixed_steady": {c: fixed[c]["steady_makespan"] for c in fixed},
+        "best_fixed": best_clause,
+        "auto": auto,
+        "auto_vs_best_fixed_ratio": ratio,
+        "auto_ratio_gate": AUTO_RATIO_GATE,
     }
 
 
@@ -151,12 +204,15 @@ def train_straggler(arch: str = "qwen2.5-3b", steps: int = 12,
 
 def collect(skip_train: bool = False) -> dict:
     record: dict = {"bench": "train_straggler",
-                    "shares": shares_convergence()}
+                    "shares": shares_convergence(),
+                    "auto": auto_selection()}
     sh = record["shares"]
+    au = record["auto"]
     checks = {
         "cold_start_uniform": sh["cold_start_uniform"],
         "shares_converged": sh["converged"],
         "shares_epoch_advanced": sh["epochs"] >= 1,
+        "auto_ratio_gate": au["auto_vs_best_fixed_ratio"] >= AUTO_RATIO_GATE,
     }
     if not skip_train:
         record["train"] = train_straggler()
@@ -183,6 +239,11 @@ def rows(skip_train: bool = True) -> list:
     out = [("train_straggler/shares", 0.0,
             f"slow_frac={sh['slow_frac'][0]}->{sh['slow_frac'][-1]};"
             f"ideal={sh['ideal_frac']}")]
+    au = rec["auto"]
+    out.append(("train_straggler/auto", 0.0,
+                f"ratio={au['auto_vs_best_fixed_ratio']};"
+                f"best={au['best_fixed']};"
+                f"selected={au['auto']['selected'][-1]}"))
     if "train" in rec:
         tr = rec["train"]
         out.append(("train_straggler/train", 0.0,
@@ -208,6 +269,12 @@ def main(argv=None) -> int:
     print(f"shares: slow-host fraction {sh['slow_frac'][0]} -> "
           f"{sh['slow_frac'][-1]} (ideal {sh['ideal_frac']}), "
           f"cold start uniform: {sh['cold_start_uniform']}")
+    au = record["auto"]
+    print(f"auto: steady {au['auto']['steady_makespan']} vs best fixed "
+          f"'{au['best_fixed']}' {au['fixed_steady'][au['best_fixed']]} -> "
+          f"ratio {au['auto_vs_best_fixed_ratio']} "
+          f"(gate >= {AUTO_RATIO_GATE}), selected "
+          f"{au['auto']['selected'][0]} -> {au['auto']['selected'][-1]}")
     if "train" in record:
         tr = record["train"]
         print(f"train: slow-host share {tr['adaptive']['slow_frac'][0]} -> "

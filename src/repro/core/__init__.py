@@ -18,6 +18,8 @@ JAX/TPU training & inference framework:
 * ``plan``         — the materialized SchedulePlan IR (flat chunk tables)
 * ``engine``       — PlanEngine: vectorized compilation + plan cache +
                      the single driver of the three-op state machine
+* ``auto``         — schedule(auto): online portfolio selection over the
+                     registry from LoopHistory telemetry (reselect stage)
 * ``executor``     — host-side OpenMP-semantics team executor / plan replay
 * ``wave``         — SPMD wave views of engine plans
 * ``schedulers``   — STATIC/SS/GSS/TSS/FAC/FAC2/WF2/AWF*/AF/RAND/FSC/steal
@@ -53,6 +55,7 @@ from repro.core.spec import (
     resolve,
 )
 from repro.core.spec import parse as parse_schedule
+from repro.core.auto import AutoScheduler
 
 __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
@@ -64,6 +67,6 @@ __all__ = [
     "LoopResult", "execute_plan", "run_loop", "simulate_loop",
     "plan_schedule", "plan_waves",
     "ScheduleSpec", "SpecLike", "parse_schedule", "resolve", "describe",
-    "register_schedule", "registered_names",
+    "register_schedule", "registered_names", "AutoScheduler",
     "SCHEDULER_FACTORIES", "make_scheduler",
 ]

@@ -1,0 +1,342 @@
+"""``schedule(auto)`` — online schedule selection, the *reselect* stage.
+
+The rest of the spine is plan → execute → measure → replan; this module
+closes the remaining human loop: *which clause to plan with*.  OpenMP's
+``auto`` kind delegates the choice to the runtime — here the runtime's
+evidence is :class:`~repro.core.history.LoopHistory`, so the selector is
+an online portfolio over registered schedules (following "A Comparative
+Study of OpenMP Scheduling Algorithm Selection Strategies",
+arxiv 2507.20312):
+
+* every measured invocation carries the clause string that produced it
+  (``InvocationRecord.scheduler``, written by the engine), so the
+  **incumbent**'s score is real measured wall time — ``makespan * P /
+  iterations``, a per-iteration cost at full parallelism;
+* **cold** candidates are scored by cost-model replay: the engine compiles
+  their plan (a ~µs cache hit in steady state) and
+  :func:`~repro.core.executor.execute_plan` replays it against per-worker
+  speeds and per-iteration costs derived from the same history — the sum
+  of the modelled wave times is the SPMD-cadence makespan estimate;
+* a UCB-style bonus discounts rarely-tried candidates so the selector
+  keeps exploring, and a **hysteresis band** keeps the incumbent unless a
+  challenger is decisively better, so near-equal schedules don't thrash
+  the plan cache.
+
+Selection is a *pure function of the history* (no hidden selector state),
+so a fresh ``resolve("auto")`` per invocation — what the serve and train
+loops do — continues exactly where the last one left off, and the learned
+state rides in checkpoints with the history itself.
+
+See ``docs/SCHEDULING.md`` ("The auto schedule") for usage, the candidate
+grammar (``auto(candidates=guided:fac2:awf),chunk``) and convergence
+caveats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.history import ChunkRecord, LoopHistory
+from repro.core.interface import Chunk, LoopSpec, SchedulerContext
+from repro.core.spec import ScheduleSpec, lookup, parse, register_schedule, resolve
+
+__all__ = ["AutoScheduler", "DEFAULT_CANDIDATES"]
+
+#: Default portfolio: the OpenMP quartet's members that exist here
+#: (static / dynamic / guided), the paper's factoring workhorse (fac2)
+#: and the adaptive weighted family's representative (awf).
+DEFAULT_CANDIDATES: Tuple[str, ...] = ("static", "dynamic", "guided",
+                                       "fac2", "awf")
+
+
+def _as_candidate(cand: Union[str, ScheduleSpec]) -> ScheduleSpec:
+    """Normalize one candidate (name, clause string, or spec) to a spec."""
+    spec = cand if isinstance(cand, ScheduleSpec) else parse(cand)
+    if spec.name == "auto":
+        raise ValueError("'auto' cannot be its own candidate")
+    if spec.is_runtime:
+        raise ValueError("'runtime' cannot be an auto candidate (late-bind "
+                         "the whole clause via $REPRO_SCHEDULE instead)")
+    lookup(spec.name, uds_only=spec.is_uds)   # fail early on unknown names
+    return spec
+
+
+@dataclasses.dataclass
+class _AutoState:
+    """One invocation's delegation record: the chosen inner scheduler."""
+
+    inner: Any
+    inner_state: Any
+
+
+class AutoScheduler:
+    """Online schedule selector implementing the three-op interface.
+
+    ``candidates`` is the portfolio: a ``":"``-separated clause-name string
+    (the ``auto(candidates=guided:fac2:awf)`` form), or a sequence of
+    names / clause strings / specs.  ``chunk`` is applied to every
+    candidate that accepts a chunksize and doesn't fix its own.
+    ``window`` bounds how many recent measured invocations per candidate
+    feed its score; ``explore`` scales the UCB bonus; ``hysteresis`` is
+    the relative margin a challenger must win by to unseat the incumbent.
+    """
+
+    name = "auto"
+    adaptive = True          # selection reads history at start: the plan
+    # cache must key on the measured epoch (see engine._cache_key)
+
+    def __init__(self, candidates: Union[None, str,
+                                         Sequence[Union[str, ScheduleSpec]]]
+                 = None,
+                 chunk: Optional[int] = None,
+                 window: int = 8,
+                 explore: float = 0.25,
+                 hysteresis: float = 0.1):
+        if candidates is None:
+            cands: Sequence[Union[str, ScheduleSpec]] = DEFAULT_CANDIDATES
+        elif isinstance(candidates, str):
+            cands = [c for c in candidates.split(":") if c.strip()]
+        else:
+            cands = list(candidates)
+        if not cands:
+            raise ValueError("auto needs at least one candidate schedule")
+        self.candidates = tuple(_as_candidate(c) for c in cands)
+        if len({str(c) for c in self.candidates}) != len(self.candidates):
+            raise ValueError(
+                f"duplicate auto candidates: {self.candidates}")
+        if chunk is not None and (not isinstance(chunk, int) or chunk < 1):
+            raise ValueError(f"chunk must be a positive int, got {chunk!r}")
+        if not 0.0 <= hysteresis < 1.0:
+            raise ValueError(f"hysteresis must be in [0, 1), got {hysteresis}")
+        if explore < 0.0:
+            raise ValueError(f"explore must be >= 0, got {explore}")
+        self.chunk = chunk
+        self.window = int(window)
+        self.explore = float(explore)
+        self.hysteresis = float(hysteresis)
+        self._selected: Optional[ScheduleSpec] = None
+
+    # -------------------------------------------------------- identities
+    def full_candidates(self) -> List[ScheduleSpec]:
+        """Candidate specs with the clause chunksize applied where the
+        candidate accepts one and doesn't already fix its own."""
+        out: List[ScheduleSpec] = []
+        for c in self.candidates:
+            if (self.chunk is not None and c.chunk is None
+                    and lookup(c.name,
+                               uds_only=c.is_uds).chunk_param is not None):
+                c = dataclasses.replace(c, chunk=self.chunk)
+            out.append(c)
+        return out
+
+    @property
+    def selected(self) -> Optional[ScheduleSpec]:
+        """The candidate the last :meth:`select` call settled on."""
+        return self._selected
+
+    @property
+    def history_tag(self) -> str:
+        """Provenance tag for invocations this selector drives: the
+        *selected candidate's* clause string, so measured records
+        attribute to the candidate (and fixed runs of the same clause
+        feed the same statistics)."""
+        return str(self._selected) if self._selected is not None else "auto"
+
+    def plan_key(self) -> tuple:
+        """Plan-cache identity: the selector configuration *plus the
+        currently-selected candidate* — a selection bump re-keys the
+        plan, riding the measured-epoch invalidation the engine already
+        applies to adaptive schedulers."""
+        return ("auto", self.candidates, self.chunk, self.window,
+                self.explore, self.hysteresis, self._selected)
+
+    # ----------------------------------------------------------- scoring
+    @staticmethod
+    def _measured_score(inv: Any, num_workers: int) -> Optional[float]:
+        """Per-iteration cost at full parallelism: ``makespan * P /
+        iterations`` — comparable across invocations of different sizes
+        and with the modelled replay score."""
+        iters = sum(c.size for c in inv.chunks)
+        if iters <= 0:
+            return None
+        return inv.makespan(num_workers) * num_workers / iters
+
+    @staticmethod
+    def _telemetry_loop_id(history: LoopHistory, loop_id: str) -> str:
+        """The loop id selection reads: the loop's own, or — when it has
+        no measurements — the nearest ``"/"``-ancestor that does (the
+        straggler mitigator plans ``train_step/token_shares`` from
+        ``train_step`` step telemetry)."""
+        lid = loop_id
+        while True:
+            if history.measured_invocations(lid) > 0:
+                return lid
+            if "/" not in lid:
+                return loop_id
+            lid = lid.rsplit("/", 1)[0]
+
+    def _speeds_and_rate(self, history: LoopHistory, lid: str,
+                         num_workers: int,
+                         weights: Optional[Sequence[float]]
+                         ) -> Tuple[List[float], float]:
+        """Cost model for replay: per-worker relative speeds and the mean
+        per-iteration cost, from measured rates when the history has
+        them, else from the caller's capability weights."""
+        rates = history.worker_rates(lid)
+        rates = {w: r for w, r in rates.items()
+                 if r > 0 and math.isfinite(r)}
+        if rates:
+            mean_rate = sum(rates.values()) / len(rates)
+            speeds = [mean_rate / rates.get(w, mean_rate)
+                      for w in range(num_workers)]
+            return speeds, mean_rate
+        if weights is not None and len(weights) == num_workers \
+                and all(w > 0 for w in weights):
+            mean_w = sum(weights) / len(weights)
+            return [w / mean_w for w in weights], 1.0
+        return [1.0] * num_workers, 1.0
+
+    @staticmethod
+    def _model_history(loop_id: str, speeds: Sequence[float],
+                       rate: float) -> LoopHistory:
+        """A throwaway history primed with the measured per-worker rates,
+        so *adaptive* cold candidates (AWF/AF/user schedules that read
+        history) are modelled at their informed steady state — without
+        writing anything into the real history."""
+        h = LoopHistory()
+        h.open_invocation(loop_id)
+        k = 64
+        for w, s in enumerate(speeds):
+            h.record(loop_id, ChunkRecord(
+                worker=w, start=w * k, stop=(w + 1) * k,
+                elapsed=rate / max(s, 1e-9) * k))
+        return h
+
+    def _modelled_score(self, cand: ScheduleSpec, loop: LoopSpec,
+                        speeds: Sequence[float], rate: float,
+                        weights: Optional[Sequence[float]],
+                        model_hist: LoopHistory) -> float:
+        """Cost-model replay of a cold candidate: compile its plan
+        through the engine (cached) and replay it with
+        :func:`execute_plan`; the sum of the modelled wave times is the
+        SPMD-cadence makespan, normalized like the measured score."""
+        from repro.core.engine import get_engine
+        from repro.core.executor import execute_plan
+
+        n = loop.trip_count
+        if n <= 0:
+            return 0.0
+        w = list(weights) if weights is not None else list(speeds)
+        plan = get_engine().plan(resolve(cand), loop, weights=w,
+                                 history=model_hist)
+        result = execute_plan(plan, costs=np.full(n, rate), speeds=speeds)
+        makespan = (sum(result.wave_times) if result.wave_times
+                    else result.makespan)
+        return makespan * loop.num_workers / n
+
+    # --------------------------------------------------------- selection
+    def select(self, history: Optional[LoopHistory], loop: LoopSpec,
+               weights: Optional[Sequence[float]] = None) -> ScheduleSpec:
+        """Run one selection round and return (and remember) the winner.
+
+        Deterministic in the history contents: with no measurements at
+        all this is the cold-start default (the first candidate); with
+        measurements, each candidate gets a score — measured where its
+        tagged invocations exist, modelled replay otherwise — a UCB bonus
+        for under-tried candidates, and the incumbent (the candidate of
+        the most recent measured invocation) survives unless a challenger
+        beats it by the hysteresis margin.
+        """
+        cands = self.full_candidates()
+        tags = {str(c): c for c in cands}
+        order = {str(c): i for i, c in enumerate(cands)}
+        if history is None:
+            self._selected = cands[0]
+            return self._selected
+        lid = self._telemetry_loop_id(history, loop.loop_id)
+        p = loop.num_workers
+        measured: Dict[str, List[float]] = {}
+        incumbent: Optional[str] = None
+        for inv in history.invocations(lid):
+            if not inv.measured:
+                continue
+            tag = getattr(inv, "scheduler", None)
+            if tag not in tags:
+                continue
+            s = self._measured_score(inv, p)
+            if s is None:
+                continue
+            measured.setdefault(tag, []).append(s)
+            incumbent = tag
+        if not measured and history.measured_invocations(lid) == 0:
+            # true cold start: nothing to model against either
+            self._selected = cands[0]
+            return self._selected
+
+        speeds, rate = self._speeds_and_rate(history, lid, p, weights)
+        model_hist: Optional[LoopHistory] = None
+        scores: Dict[str, float] = {}
+        counts: Dict[str, int] = {}
+        for tag, cand in tags.items():
+            obs = measured.get(tag, [])[-self.window:]
+            counts[tag] = len(obs)
+            if obs:
+                scores[tag] = sum(obs) / len(obs)
+            else:
+                if model_hist is None:
+                    model_hist = self._model_history(loop.loop_id, speeds,
+                                                     rate)
+                scores[tag] = self._modelled_score(cand, loop, speeds,
+                                                   rate, weights,
+                                                   model_hist)
+        total = sum(counts.values())
+        ucb: Dict[str, float] = {}
+        for tag, m in scores.items():
+            bonus = self.explore * math.sqrt(
+                math.log(total + 1.0) / (counts[tag] + 1.0))
+            ucb[tag] = m * (1.0 - min(bonus, 0.95))
+        best = min(ucb, key=lambda t: (ucb[t], order[t]))
+        if (incumbent is not None and best != incumbent
+                and ucb[best] > ucb[incumbent] * (1.0 - self.hysteresis)):
+            best = incumbent             # inside the hysteresis band: stay
+        self._selected = tags[best]
+        return self._selected
+
+    # ---------------------------------------------------------- three-op
+    def start(self, ctx: SchedulerContext) -> _AutoState:
+        """Select a candidate from the context's history and delegate.
+
+        A history-less context does NOT reset an existing selection: a
+        caller that scores against an out-of-band history (the straggler
+        mitigator runs ``select`` explicitly, then plans without one)
+        must get the candidate it selected, not the cold-start default.
+        """
+        if ctx.history is not None or self._selected is None:
+            self.select(ctx.history, ctx.loop, weights=ctx.weights)
+        inner = resolve(self._selected)
+        return _AutoState(inner=inner, inner_state=inner.start(ctx))
+
+    def next(self, state: _AutoState, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        """Dequeue from the selected candidate's state machine."""
+        return state.inner.next(state.inner_state, worker, elapsed)
+
+    def finish(self, state: _AutoState) -> None:
+        """Close the selected candidate's state machine."""
+        state.inner.finish(state.inner_state)
+
+    def __repr__(self) -> str:
+        return (f"AutoScheduler(candidates="
+                f"{':'.join(str(c) for c in self.candidates)}, "
+                f"selected={self._selected})")
+
+
+register_schedule(
+    "auto", source="builtin", chunk_param="chunk",
+    doc="online schedule selection from LoopHistory telemetry "
+        "(UCB portfolio over registered candidates)",
+)(AutoScheduler)

@@ -120,6 +120,10 @@ _REGISTRY: Dict[str, "DeclaredSchedule"] = {}
 
 @dataclasses.dataclass
 class DeclaredSchedule:
+    """One ``declare_schedule`` registration: the bound init/next/fini
+    calls plus the declared ``arguments`` arity (the paper's
+    ``arguments(N)`` clause)."""
+
     name: str
     arguments: int
     init: Optional[_BoundCall]

@@ -74,8 +74,28 @@ __all__ = [
     "set_engine",
     "register_compiler",
     "scheduler_plan_key",
+    "schedule_tag",
     "plan_worker_order",
 ]
+
+
+def schedule_tag(sched: Any) -> Optional[str]:
+    """Clause-string provenance of a scheduler, written onto every
+    invocation the engine opens (``InvocationRecord.scheduler``).
+
+    Priority: an explicit ``history_tag`` (the auto selector reports the
+    *selected candidate's* clause, not its own), then the resolved spec's
+    canonical clause string, then the scheduler's name — so a fixed run
+    of ``"guided,4"`` and the auto selector delegating to ``"guided,4"``
+    tag identically and feed the same per-candidate statistics."""
+    tag = getattr(sched, "history_tag", None)
+    if tag is not None:
+        return str(tag)
+    spec = getattr(sched, "_spec", None)
+    if isinstance(spec, ScheduleSpec):
+        return str(spec)
+    name = getattr(sched, "name", None)
+    return str(name) if name is not None else type(sched).__name__
 
 
 # =========================================================================
@@ -102,7 +122,10 @@ class ScheduleStream:
         self.telemetry = ctx.telemetry
         self._state = sched.start(ctx)
         if ctx.history is not None:
-            ctx.history.open_invocation(ctx.loop.loop_id)
+            # tagged AFTER start: an auto selector has picked its
+            # candidate by now, so provenance names the real schedule
+            ctx.history.open_invocation(ctx.loop.loop_id,
+                                        scheduler=schedule_tag(sched))
         self.dequeues = 0
         self._closed = False
 
@@ -456,6 +479,9 @@ def _register_builtin_compilers() -> None:
 # =========================================================================
 @dataclasses.dataclass
 class CacheStats:
+    """Plan-cache counters (``PlanEngine.cache_info()``); ``uncacheable``
+    counts plans whose scheduler declined a cache key."""
+
     hits: int = 0
     misses: int = 0
     uncacheable: int = 0
@@ -546,7 +572,8 @@ class PlanEngine:
                     # every plan() marks an invocation boundary, however it
                     # was produced, so the measure stage's records land in
                     # this step's InvocationRecord
-                    ctx.history.open_invocation(ctx.loop.loop_id)
+                    ctx.history.open_invocation(
+                        ctx.loop.loop_id, scheduler=schedule_tag(sched))
                 return hit
             self.stats.misses += 1
 
@@ -560,7 +587,8 @@ class PlanEngine:
                 if ctx.history is not None:
                     # invocation boundary (the generic path opens its own
                     # through ScheduleStream)
-                    ctx.history.open_invocation(ctx.loop.loop_id)
+                    ctx.history.open_invocation(
+                        ctx.loop.loop_id, scheduler=schedule_tag(sched))
                 if self.validate:
                     ref = self._plan_generic(
                         sched, SchedulerContext(loop=ctx.loop,
@@ -585,6 +613,11 @@ class PlanEngine:
                 f"todo-list invariant: chunks do not exactly tile "
                 f"[0, {ctx.loop.trip_count})")
         if key is not None:
+            # a scheduler whose identity shifts *during* planning — the
+            # auto selector settles on its candidate at start() — is
+            # re-keyed after the fact, so the cached entry is reachable
+            # by the key the NEXT call computes
+            key = self._cache_key(sched, ctx) or key
             self._cache[key] = plan
             while len(self._cache) > self.cache_size:
                 self._cache.popitem(last=False)

@@ -49,6 +49,10 @@ __all__ = ["LoopResult", "run_loop", "simulate_loop", "execute_plan"]
 
 @dataclasses.dataclass
 class LoopResult:
+    """Outcome of one virtual loop execution (``run_loop`` /
+    ``execute_plan``): the dequeued chunks plus per-worker virtual busy
+    and finish times the load-balance metrics derive from."""
+
     loop: LoopSpec
     chunks: List[Chunk]
     worker_time: List[float]       # virtual busy time per worker

@@ -47,6 +47,9 @@ def awf_weights_from_rates(rates: Dict[int, float],
 
 @dataclasses.dataclass
 class ChunkRecord:
+    """One chunk's measurement: worker, [start, stop) range, and the
+    elapsed wall seconds (``None`` until measured)."""
+
     worker: int
     start: int
     stop: int
@@ -66,8 +69,14 @@ class ChunkRecord:
 
 @dataclasses.dataclass
 class InvocationRecord:
+    """One loop invocation's chunks (a serve run, a train step), plus the
+    clause-string provenance ``schedule(auto)`` scores candidates by."""
+
     chunks: List[ChunkRecord] = dataclasses.field(default_factory=list)
     measured: bool = False    # any chunk recorded with a real elapsed time
+    # clause-string provenance: which schedule produced this invocation
+    # (written by the engine; the auto selector scores candidates by it)
+    scheduler: Optional[str] = None
 
     def worker_time(self, worker: int) -> float:
         return sum(c.elapsed or 0.0 for c in self.chunks if c.worker == worker)
@@ -112,8 +121,11 @@ class LoopHistory:
         self.token = LoopHistory._instances
 
     # ------------------------------------------------------------- writing
-    def open_invocation(self, loop_id: str) -> InvocationRecord:
-        inv = InvocationRecord()
+    def open_invocation(self, loop_id: str,
+                        scheduler: Optional[str] = None) -> InvocationRecord:
+        """Open a fresh invocation boundary; ``scheduler`` is the producing
+        schedule's clause string (provenance for ``schedule(auto)``)."""
+        inv = InvocationRecord(scheduler=scheduler)
         self._data.setdefault(loop_id, []).append(inv)
         return inv
 
@@ -181,7 +193,9 @@ class LoopHistory:
     # ------------------------------------------------------ serialization
     def to_json(self) -> str:
         payload = {
-            lid: [[dataclasses.asdict(c) for c in inv.chunks] for inv in invs]
+            lid: [{"scheduler": inv.scheduler,
+                   "chunks": [dataclasses.asdict(c) for c in inv.chunks]}
+                  for inv in invs]
             for lid, invs in self._data.items()
         }
         return json.dumps(payload)
@@ -191,8 +205,13 @@ class LoopHistory:
         h = cls()
         payload = json.loads(text)
         for lid, invs in payload.items():
-            for chunks in invs:
-                inv = h.open_invocation(lid)
+            for entry in invs:
+                if isinstance(entry, dict):       # current format
+                    chunks = entry["chunks"]
+                    tag = entry.get("scheduler")
+                else:                             # pre-provenance format
+                    chunks, tag = entry, None
+                inv = h.open_invocation(lid, scheduler=tag)
                 inv.chunks.extend(ChunkRecord(**c) for c in chunks)
                 if any(c.elapsed is not None for c in inv.chunks):
                     inv.measured = True

@@ -144,6 +144,12 @@ class AWF(WeightedFactoring):
             w = ctx.history.awf_weights(ctx.loop.loop_id, p)
         else:
             w = [1.0] * p
+        if ctx.weights is not None and max(abs(x - 1.0) for x in w) < 1e-12:
+            # cold start (no usable history): seed from the caller's
+            # capability weights, exactly as WF2 would — measurements
+            # take over from the first recorded invocation onward
+            w = [float(ctx.weights[i]) if i < len(ctx.weights) else 1.0
+                 for i in range(p)]
         state.scratch.update(
             aw=list(w),                     # current weights (sum ~= P)
             time=[0.0] * p,                 # cumulative measured time

@@ -28,6 +28,10 @@ Clause grammar, mapped to the OpenMP syntax each form mirrors::
     "runtime"                    schedule(runtime) + OMP_SCHEDULE: the kind
                                  is late-bound from the REPRO_SCHEDULE
                                  environment variable at resolve time
+    "auto" /
+    "auto(candidates=a:b:c),4"   schedule(auto): the kind is selected
+                                 ONLINE from LoopHistory telemetry by the
+                                 portfolio selector in core/auto.py
 
 Resolution accepts a spec, a clause string, an already-built scheduler
 instance, or a zero-argument factory callable; it returns a scheduler
@@ -40,6 +44,10 @@ Late registration: ``REPRO_UDS_MODULES`` (comma-separated module names) is
 imported before the first failed lookup, so user schedules shipped as
 plain modules are reachable by name from any CLI entry point —
 ``REPRO_UDS_MODULES=examples.uds_blocks train --scheduler uds:blocks``.
+
+The user guide — full clause grammar (EBNF), the table of every
+registered schedule, the UDS registration paths and the telemetry →
+replan lifecycle — lives in ``docs/SCHEDULING.md``.
 """
 
 from __future__ import annotations
@@ -77,7 +85,8 @@ _UDS_SOURCES = ("declare", "template", "user")
 _Scalar = Union[None, bool, int, float, str]
 
 # string parameter values must render/re-parse losslessly in a clause
-_SAFE_TOKEN_RE = re.compile(r"^[\w.+\-]+$")
+# (":" joins list-valued tokens: wf2 weights, auto candidate names)
+_SAFE_TOKEN_RE = re.compile(r"^[\w.+\-:]+$")
 
 
 # =========================================================================
@@ -120,7 +129,7 @@ class ScheduleSpec:
             if isinstance(v, str) and not _SAFE_TOKEN_RE.match(v):
                 raise ValueError(
                     f"string parameter {v!r} is not a clause-safe token "
-                    f"(allowed: letters, digits, '_', '.', '+', '-')")
+                    f"(allowed: letters, digits, '_', '.', '+', '-', ':')")
         if self.chunk is not None:
             if not isinstance(self.chunk, int) or isinstance(self.chunk, bool):
                 raise ValueError(
@@ -588,6 +597,10 @@ def _register_builtins() -> None:
 
 
 _register_builtins()
+
+# the auto selector registers itself on import; it lives in its own
+# module (it depends on the engine/executor, which depend on this one)
+import repro.core.auto  # noqa: F401,E402  (registers "auto")
 
 # declare-style and lambda-style registrations mirror themselves in at
 # declaration time (declare_schedule / schedule_template import this

@@ -379,8 +379,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--scheduler", default="dynamic",
                     help='schedule clause: "dynamic", "guided,4", '
-                         '"uds:name(args)", or "runtime" '
-                         "(late-bound from $REPRO_SCHEDULE)")
+                         '"uds:name(args)", "runtime" (late-bound from '
+                         '$REPRO_SCHEDULE), or "auto" (selected online '
+                         "from serve telemetry; see docs/SCHEDULING.md)")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="tokens per fused decode dispatch (batched mode): "

@@ -327,8 +327,9 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--scheduler", default="fac2",
                     help='schedule clause: "fac2", "guided,4", '
-                         '"uds:name(args)", or "runtime" '
-                         "(late-bound from $REPRO_SCHEDULE)")
+                         '"uds:name(args)", "runtime" (late-bound from '
+                         '$REPRO_SCHEDULE), or "auto" (selected online '
+                         "from telemetry; see docs/SCHEDULING.md)")
     ap.add_argument("--microbatch-scheduler", default="dynamic,1",
                     help="schedule clause for the microbatch assignment")
     ap.add_argument("--microbatches", type=int, default=1)
@@ -343,7 +344,8 @@ def main() -> None:
                          "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--straggler-scheduler", default="wf2",
                     help="schedule clause turning AWF host weights into "
-                         "token shares (any weight-aware clause)")
+                         'token shares (any weight-aware clause, or "auto" '
+                         "to select one online from step telemetry)")
     ap.add_argument("--min-host-share", type=float, default=0.1,
                     help="per-host floor as a fraction of the even share "
                          "(0 = let a straggler starve, 1 = pin static "

@@ -19,6 +19,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.core import LoopHistory, LoopSpec, LoopTelemetry, get_engine
+from repro.core.engine import schedule_tag
 from repro.core.history import awf_weights_from_rates
 from repro.core.spec import resolve
 
@@ -47,6 +48,9 @@ class StragglerMitigator:
         self.telemetry = LoopTelemetry(self.history, loop_id=self.loop_id,
                                        num_workers=self.num_hosts)
         self._step = 0
+        # provenance of the shares the NEXT observe_step measures: which
+        # schedule produced them (schedule(auto) scores candidates by it)
+        self._share_tag: Optional[str] = None
 
     # ------------------------------------------------------------ measure
     def observe_step(self, host_times: Dict[int, float],
@@ -55,7 +59,7 @@ class StragglerMitigator:
         telemetry recorder: each step flushes as one measured invocation,
         advancing the history epoch that invalidates cached adaptive
         plans keyed on this mitigator's history."""
-        self.history.open_invocation(self.loop_id)
+        self.history.open_invocation(self.loop_id, scheduler=self._share_tag)
         for h, t in host_times.items():
             n = (host_tokens or {}).get(h, 1)
             self.telemetry.record_chunk(h, 0, n, t, tokens=n)
@@ -142,13 +146,22 @@ class StragglerMitigator:
             return np.zeros(self.num_hosts, np.int64)
         w = self.weights()
         if np.abs(w - 1.0).max() < 1e-9:
+            # exact-uniform shares are produced by the identity split, not
+            # by the scheduler — leave the step unattributed
+            self._share_tag = None
             shares = self._uniform_shares(total_tokens)
         else:
             loop = LoopSpec(lb=0, ub=total_tokens,
                             num_workers=self.num_hosts,
                             loop_id=f"{self.loop_id}/token_shares")
-            plan = get_engine().plan(resolve(self.scheduler), loop,
-                                     weights=w.tolist())
+            sched = resolve(self.scheduler)
+            if hasattr(sched, "select"):
+                # schedule(auto): run the selection round against THIS
+                # mitigator's step history before the plan key is taken,
+                # so the cache keys on the selected candidate
+                sched.select(self.history, loop, weights=w.tolist())
+            self._share_tag = schedule_tag(sched)
+            plan = get_engine().plan(sched, loop, weights=w.tolist())
             shares = plan.worker_iters().astype(np.int64)
         return self._enforce_min_share(shares, total_tokens)
 

@@ -1,0 +1,202 @@
+"""schedule(auto): online portfolio selection from LoopHistory telemetry.
+
+Locks the selector's contract — cold-start determinism, candidate-grammar
+round-trips, provenance tagging, hysteresis (no thrash between near-equal
+schedules), and the headline acceptance criterion: on skewed-worker serve
+and 2x-slow-host train scenarios, ``auto`` converges within 10% of the
+best hand-picked fixed clause without being told which.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (LoopHistory, LoopSpec, LoopTelemetry, get_engine,
+                        parse_schedule)
+from repro.core.auto import DEFAULT_CANDIDATES, AutoScheduler
+from repro.core.executor import execute_plan
+from repro.core.history import ChunkRecord
+from repro.core.spec import resolve
+from repro.sched.straggler import StragglerMitigator
+
+
+# ------------------------------------------------------------ construction
+def test_auto_default_portfolio():
+    a = resolve("auto")
+    assert [str(c) for c in a.candidates] == list(DEFAULT_CANDIDATES)
+
+
+def test_auto_candidate_override_roundtrip():
+    spec = parse_schedule("auto(candidates=guided:fac2:awf),4")
+    assert parse_schedule(str(spec)) == spec
+    a = resolve(spec)
+    assert isinstance(a, AutoScheduler)
+    assert [str(c) for c in a.candidates] == ["guided", "fac2", "awf"]
+    # clause chunk applies only where the candidate takes a chunksize
+    assert [str(c) for c in a.full_candidates()] == ["guided,4", "fac2", "awf"]
+
+
+def test_auto_rejects_bad_portfolios():
+    with pytest.raises(ValueError):
+        AutoScheduler(candidates="auto:static")       # self-reference
+    with pytest.raises(ValueError):
+        AutoScheduler(candidates="runtime:static")    # late-binding inside
+    with pytest.raises(Exception):
+        AutoScheduler(candidates="no_such_schedule")
+    with pytest.raises(ValueError):
+        AutoScheduler(candidates="static:static")     # duplicate
+    with pytest.raises(ValueError):
+        AutoScheduler(candidates="")                  # empty portfolio
+    with pytest.raises(ValueError):
+        AutoScheduler(hysteresis=1.5)
+
+
+# -------------------------------------------------------------- cold start
+def test_auto_cold_start_selects_first_candidate():
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="cold")
+    a = AutoScheduler()
+    assert str(a.select(LoopHistory(), loop)) == "static"
+    b = AutoScheduler(candidates="guided:fac2")
+    assert str(b.select(LoopHistory(), loop)) == "guided"
+    # history-less selection behaves identically
+    assert str(AutoScheduler().select(None, loop)) == "static"
+
+
+def test_auto_tags_invocations_with_selected_candidate():
+    hist = LoopHistory()
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="tagged")
+    get_engine().plan(resolve("auto"), loop, history=hist)
+    invs = hist.invocations("tagged")
+    assert invs and invs[-1].scheduler == "static"    # cold-start default
+
+
+# -------------------------------------------------------------- convergence
+def _drive_serve(clause, epochs, costs, speeds, loop):
+    """Plan/execute/measure epochs of one clause; return makespans."""
+    hist = LoopHistory()
+    tel = LoopTelemetry(hist, loop_id=loop.loop_id,
+                        num_workers=loop.num_workers)
+    out = []
+    for _ in range(epochs):
+        sched = resolve(clause)                       # fresh each epoch:
+        plan = get_engine().plan(sched, loop, history=hist)
+        res = execute_plan(plan, costs, speeds=speeds,
+                           history=hist, telemetry=tel)
+        out.append(res.makespan)
+    return out
+
+
+def test_auto_converges_on_skewed_workers():
+    """One worker at quarter speed: auto must land within 10% of the best
+    fixed clause after a measured epoch, selecting it purely from
+    telemetry (statelessly — a fresh resolve('auto') per epoch)."""
+    p, n = 8, 4096
+    speeds = [1.0] * p
+    speeds[p - 1] = 0.25
+    costs = np.ones(n)
+    loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id="serve_skew")
+    fixed = {c: _drive_serve(c, 3, costs, speeds, loop)[-1]
+             for c in DEFAULT_CANDIDATES}
+    best = min(fixed.values())
+    auto = _drive_serve("auto", 6, costs, speeds, loop)
+    assert auto[-1] <= best * 1.10, (auto, fixed)
+    # and it stays converged (steady state, not a lucky epoch)
+    assert max(auto[-3:]) <= best * 1.10
+
+
+def test_auto_e2e_straggler_train_within_10pct():
+    """2x-slow-host StragglerMitigator scenario: steady-state step time of
+    scheduler='auto' within 10% of the best fixed clause."""
+    total, hosts, slow, factor = 2048, 4, 3, 2.0
+
+    def drive(clause, steps=16):
+        m = StragglerMitigator(num_hosts=hosts, scheduler=clause,
+                               min_share=0.1)
+        ms = []
+        for _ in range(steps):
+            shares = m.token_shares(total)
+            times = {h: float(shares[h]) * (factor if h == slow else 1.0)
+                     for h in range(hosts)}
+            m.observe_step(times, {h: int(shares[h]) for h in range(hosts)})
+            ms.append(max(times.values()))
+        return sum(ms[-4:]) / 4
+
+    best = min(drive(c) for c in ("wf2", "static", "fac2", "awf"))
+    assert drive("auto") <= best * 1.10
+
+
+# --------------------------------------------------------------- hysteresis
+def _measured_history(loop_id, tagged_makespans, p=4, iters=256):
+    """History of measured invocations: (tag, makespan) pairs, the work
+    spread evenly so per-worker rates stay uniform."""
+    h = LoopHistory()
+    for tag, ms in tagged_makespans:
+        h.open_invocation(loop_id, scheduler=tag)
+        k = iters // p
+        for w in range(p):
+            h.record(loop_id, ChunkRecord(worker=w, start=w * k,
+                                          stop=(w + 1) * k,
+                                          elapsed=ms / p * k / (iters // p)))
+    return h
+
+
+def test_auto_hysteresis_keeps_near_equal_incumbent():
+    """A challenger inside the hysteresis band must not unseat the
+    incumbent — near-equal schedules don't thrash the plan cache."""
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="hyst")
+    # equal sample counts so the UCB bonus cancels; dynamic (incumbent,
+    # most recent) is 5% worse than static — inside the 10% band
+    invs = [("static", 100.0), ("dynamic", 105.0)] * 4
+    hist = _measured_history("hyst", invs)
+    a = AutoScheduler(candidates="static:dynamic", explore=0.0)
+    for _ in range(5):
+        assert str(a.select(hist, loop)) == "dynamic"
+
+
+def test_auto_decisive_winner_unseats_incumbent():
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="unseat")
+    invs = [("static", 100.0), ("dynamic", 200.0)] * 4   # 2x worse: switch
+    hist = _measured_history("unseat", invs)
+    a = AutoScheduler(candidates="static:dynamic", explore=0.0)
+    assert str(a.select(hist, loop)) == "static"
+
+
+def test_auto_selection_is_stateless_across_instances():
+    """Two fresh selectors over the same history agree — selection is a
+    pure function of the history, so per-invocation resolve('auto') (what
+    the serve/train loops do) continues where the last left off."""
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="stateless")
+    hist = _measured_history("stateless",
+                             [("static", 100.0), ("dynamic", 400.0)] * 3)
+    first = AutoScheduler(explore=0.0).select(hist, loop)
+    second = AutoScheduler(explore=0.0).select(hist, loop)
+    assert first == second
+
+
+# ------------------------------------------------------------- plan cache
+def test_auto_plan_cache_keys_on_selection():
+    """Same selector config, different settled selection → different plan
+    cache identities; equal selection → equal keys."""
+    a, b = AutoScheduler(), AutoScheduler()
+    loop = LoopSpec(lb=0, ub=256, num_workers=4, loop_id="key")
+    a.select(LoopHistory(), loop)
+    assert a.plan_key() != b.plan_key()      # b hasn't selected yet
+    b.select(LoopHistory(), loop)
+    assert a.plan_key() == b.plan_key()
+
+
+def test_auto_explicit_selection_survives_historyless_plan():
+    """The straggler path: select() against an out-of-band history, then
+    plan without one — the plan must use the selected candidate, not the
+    cold-start default."""
+    p, n = 4, 1024
+    hist = _measured_history("oob", [("static", 100.0)], p=p)
+    # make worker rates skewed so guided/awf differ from static
+    loop = LoopSpec(lb=0, ub=n, num_workers=p, loop_id="oob")
+    a = resolve("auto(candidates=guided)")
+    a.select(hist, loop, weights=[1.0, 1.0, 1.0, 0.5])
+    assert str(a.selected) == "guided"
+    plan = get_engine().plan(a, loop, weights=[1.0, 1.0, 1.0, 0.5])
+    sizes = sorted(c.size for c in plan.chunks)
+    guided = get_engine().plan(resolve("guided"), loop,
+                               weights=[1.0, 1.0, 1.0, 0.5])
+    assert sizes == sorted(c.size for c in guided.chunks)

@@ -93,6 +93,23 @@ def test_spec_clause_roundtrip(spec):
     assert str(parse(str(spec))) == str(spec)
 
 
+@given(names=st.lists(st.sampled_from(SCHEDULERS), min_size=1, max_size=5,
+                      unique=True),
+       chunk=st.none() | st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_auto_candidate_clause_roundtrip(names, chunk):
+    """auto(candidates=a:b:c)[,chunk] round-trips through the parser and
+    resolves to a selector carrying exactly that portfolio in order."""
+    clause = f"auto(candidates={':'.join(names)})"
+    if chunk is not None:
+        clause += f",{chunk}"
+    spec = parse(clause)
+    assert parse(str(spec)) == spec
+    auto = resolve(spec)
+    assert [str(c) for c in auto.candidates] == names
+    assert auto.chunk == chunk
+
+
 @given(clause_p=resolvable_clauses(),
        lb=st.integers(-50, 50),
        n=st.integers(0, 2000))

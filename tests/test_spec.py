@@ -96,10 +96,13 @@ def test_spec_make_weights_mapping():
 
 def test_spec_rejects_clause_unsafe_string_values():
     # values that could not survive parse(str(spec)) are rejected upfront
-    for bad in ("a,b", "a(b", "a b", "k=v", "a:b"):
+    for bad in ("a,b", "a(b", "a b", "k=v"):
         with pytest.raises(ValueError):
             ScheduleSpec.make("guided", label=bad)
     spec = ScheduleSpec.make("awf", variant="B")       # safe token: fine
+    assert parse_schedule(str(spec)) == spec
+    # ':' is a safe token char (auto candidate lists) and round-trips
+    spec = ScheduleSpec.make("auto", candidates="guided:fac2:awf")
     assert parse_schedule(str(spec)) == spec
 
 
