@@ -37,6 +37,10 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
 	    --requests 4 --slots 2 --scheduler "guided,4" --max-new 8 \
 	    --decode-steps 8
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 8 --scheduler "guided,4" --max-new 8 --paged-kv \
+	    --num-blocks 24 --block-size 8 --max-concurrency 8 \
+	    --decode-steps 4
 	$(PYTHON) -m pytest -q tests/test_serve.py
 	$(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --scheduler "guided,4"

@@ -40,6 +40,16 @@ BENCH_serve.json`` uploaded as an artifact, ``--gate`` as the exit code):
    makespan / auto's).  The gate enforces ``>= 0.9`` — the acceptance
    criterion that auto converges within 10% of the best hand-picked
    clause without being told which.
+
+6. **Paged concurrency** (real model): the paged-KV continuous-batching
+   engine over the deterministic long/short mixed trace that
+   ``tests/test_paged.py`` also exercises (``serve_mem.make_mixed_trace``
+   — tests and bench gate the same workload).  Two sub-runs: an *open*
+   pool serving O(100) concurrent requests (gates: every request
+   completes, ``peak_concurrency >= 100``, a warm tok/s floor, and a p99
+   admission-latency ceiling) and a *pressured* pool far below the
+   working set (gates: every request still completes, ``preemptions >=
+   1`` — eviction/readmission demonstrably exercised end to end).
 """
 
 from __future__ import annotations
@@ -61,6 +71,10 @@ SPEEDUP_GATE = 3.0     # batched decode must be >= 3x per-slot tok/s
 FUSED_GATE = 1.5       # fused decode_steps=8 must be >= 1.5x stepwise tok/s
 FUSED_STEPS = 8
 AUTO_RATIO_GATE = 0.9  # auto must reach >= 90% of the best fixed clause
+PAGED_REQUESTS = 120
+PAGED_CONCURRENCY_GATE = 100   # paged engine must hold O(100) in flight
+PAGED_TOKS_GATE = 10.0         # warm tok/s floor (conservative: CI CPU)
+PAGED_ADM_P99_GATE = 5.0       # p99 admission latency ceiling, seconds
 
 
 def executor_steady_state(n_iter: int = N_ITER, workers: int = WORKERS,
@@ -330,6 +344,85 @@ def fused_speedup(arch: str = "qwen2.5-3b", requests: int = 16,
     }
 
 
+def paged_concurrency(arch: str = "qwen2.5-3b",
+                      requests: int = PAGED_REQUESTS) -> dict:
+    """O(100)-way continuous batching through the paged-KV block pool.
+
+    The *open* run sizes the pool above the trace's working set, so every
+    request admits while blocks are free and occupancy climbs to the full
+    trace — the concurrency a slot-count engine of the same memory could
+    never reach.  The *pressured* run shrinks the pool far below the
+    working set: decode growth must evict (LIFO) and readmit, and every
+    request must STILL complete with its exact tokens (equivalence is
+    locked in tests; the bench locks that the machinery engages under a
+    realistic mixed trace).  tok/s and p99 admission latency come from
+    the warm open run.
+    """
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import PagedServeLoop, Request
+    from repro.serve_mem import make_mixed_trace
+
+    cfg = get_smoke_config(arch)
+    trace = make_mixed_trace(requests, vocab_size=cfg.vocab_size, seed=3)
+
+    def mk(n=None):
+        return [Request(rid=t.rid, prompt=t.prompt.copy(),
+                        max_new=t.max_new) for t in trace[:n]]
+
+    open_loop = PagedServeLoop(cfg, num_blocks=512, block_size=8,
+                               max_context=64, concurrency=128,
+                               scheduler="guided,2", decode_steps=4,
+                               prefill_chunk=16)
+    open_loop.run(mk())                        # compile + warm
+    t0 = time.perf_counter()
+    out = open_loop.run(mk())
+    wall = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    s = dict(open_loop.last_stats)
+    open_rec = {
+        "completed": len(out), "tokens": toks, "wall_s": round(wall, 3),
+        "tok_s": round(toks / wall, 2),
+        "peak_concurrency": s["peak_concurrency"],
+        "peak_blocks_used": s["peak_blocks_used"],
+        "kv_util_mean": s["kv_util_mean"],
+        "preemptions": s["preemptions"],
+        "prefill_compiles": s["prefill_compiles"],
+        "queue_p50_s": round(s["queue_p50_s"], 4),
+        "queue_p99_s": round(s["queue_p99_s"], 4),
+        "admission_p50_s": round(s["admission_p50_s"], 4),
+        "admission_p99_s": round(s["admission_p99_s"], 4),
+    }
+
+    tight_loop = PagedServeLoop(cfg, num_blocks=12, block_size=8,
+                                max_context=64, concurrency=16,
+                                scheduler="guided,2", decode_steps=4,
+                                prefill_chunk=16)
+    t0 = time.perf_counter()
+    out_t = tight_loop.run(mk(16))
+    wall_t = time.perf_counter() - t0
+    st = dict(tight_loop.last_stats)
+    pressured_rec = {
+        "requests": 16, "num_blocks": 12, "completed": len(out_t),
+        "wall_s": round(wall_t, 3),
+        "preemptions": st["preemptions"],
+        "failed_allocs": st["failed_allocs"],
+        "kv_util_mean": st["kv_util_mean"],
+        "peak_blocks_used": st["peak_blocks_used"],
+    }
+    return {
+        "arch": arch,
+        "requests": requests,
+        "num_blocks": 512,
+        "block_size": 8,
+        "open": open_rec,
+        "pressured": pressured_rec,
+        "concurrency_gate": PAGED_CONCURRENCY_GATE,
+        "tok_s_gate": PAGED_TOKS_GATE,
+        "admission_p99_gate_s": PAGED_ADM_P99_GATE,
+    }
+
+
 def collect(skip_serve: bool = False) -> dict:
     record: dict = {"bench": "serve_adapt",
                     "executor": executor_steady_state(),
@@ -338,6 +431,7 @@ def collect(skip_serve: bool = False) -> dict:
         record["serve"] = serve_smoke()
         record["batched"] = batched_speedup()
         record["fused"] = fused_speedup()
+        record["paged"] = paged_concurrency()
     ex = record["executor"]
     au = record["auto"]
     checks = {
@@ -363,6 +457,16 @@ def collect(skip_serve: bool = False) -> dict:
         checks["fused_completed_all"] = (
             fu["fused"]["completed"] == fu["requests"]
             and fu["stepwise"]["completed"] == fu["requests"])
+        pg = record["paged"]
+        checks["paged_completed_all"] = (
+            pg["open"]["completed"] == pg["requests"]
+            and pg["pressured"]["completed"] == pg["pressured"]["requests"])
+        checks["paged_concurrency_gate"] = (
+            pg["open"]["peak_concurrency"] >= PAGED_CONCURRENCY_GATE)
+        checks["paged_tok_s_gate"] = pg["open"]["tok_s"] >= PAGED_TOKS_GATE
+        checks["paged_admission_p99_gate"] = (
+            pg["open"]["admission_p99_s"] <= PAGED_ADM_P99_GATE)
+        checks["paged_preempted"] = pg["pressured"]["preemptions"] >= 1
     record["gate"] = {"checks": checks, "pass": all(checks.values())}
     return record
 
@@ -397,6 +501,13 @@ def rows(skip_serve: bool = True) -> list:
                     f"fused_tok_s={fu['fused']['tok_s']};"
                     f"stepwise_tok_s={fu['stepwise']['tok_s']};"
                     f"dispatches_per_token={fu['fused']['dispatches_per_token']}"))
+    if "paged" in rec:
+        pg = rec["paged"]
+        out.append(("serve_adapt/paged", 0.0,
+                    f"tok_s={pg['open']['tok_s']};"
+                    f"peak_conc={pg['open']['peak_concurrency']};"
+                    f"adm_p99_s={pg['open']['admission_p99_s']};"
+                    f"preemptions={pg['pressured']['preemptions']}"))
     return out
 
 
@@ -442,6 +553,17 @@ def main(argv=None) -> int:
               f"({fu['fused']['dispatches_per_token']} dispatches/token) vs "
               f"stepwise {fu['stepwise']['tok_s']} tok/s -> "
               f"{fu['fused_speedup']}x (gate >= {FUSED_GATE}x)")
+    if "paged" in record:
+        pg = record["paged"]
+        op, pr = pg["open"], pg["pressured"]
+        print(f"paged: {pg['requests']} requests, {op['tok_s']} tok/s warm, "
+              f"peak concurrency {op['peak_concurrency']} "
+              f"(gate >= {PAGED_CONCURRENCY_GATE}), admission p99 "
+              f"{op['admission_p99_s']}s (gate <= {PAGED_ADM_P99_GATE}s), "
+              f"kv util {op['kv_util_mean']}; pressured pool "
+              f"({pr['num_blocks']} blocks): {pr['preemptions']} preemptions, "
+              f"{pr['failed_allocs']} failed allocs, "
+              f"{pr['completed']}/{pr['requests']} completed")
     status = "PASS" if record["gate"]["pass"] else "FAIL"
     print(f"# gate: {record['gate']['checks']} -> {status}")
     RESULTS.mkdir(exist_ok=True)

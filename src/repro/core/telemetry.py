@@ -47,7 +47,107 @@ from typing import Any, Dict, List, Optional
 from repro.core.history import ChunkRecord, LoopHistory
 from repro.core.interface import Chunk
 
-__all__ = ["ChunkLedger", "LoopTelemetry"]
+__all__ = ["ChunkLedger", "LoopTelemetry", "ServeMeter"]
+
+
+def _percentile(xs: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile of a small host-side sample (no numpy —
+    this module stays dependency-free)."""
+    if not xs:
+        return None
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[idx]
+
+
+class ServeMeter:
+    """Per-request serving observability: latency stamps + KV residency.
+
+    The continuous-batching engine makes admission a *scheduling* decision
+    (blocks free? chunk budget?), so the interesting latencies live
+    between lifecycle edges the loop controls:
+
+    * ``queue``      — arrival → admission (first blocks granted),
+    * ``admission``  — admission → first generated token (chunked
+      prefill time as the request experiences it),
+    * ``e2e``        — arrival → finish.
+
+    The loop calls :meth:`arrive` / :meth:`admit` / :meth:`first_token` /
+    :meth:`finish` / :meth:`preempt` with its own clock value (pass
+    ``time.perf_counter()``), and :meth:`blocks` whenever pool occupancy
+    changes; :meth:`summary` reduces to the p50/p99 dictionary that
+    ``last_stats`` and BENCH_serve.json carry.  A preempted request keeps
+    its original arrival/admission stamps — preemption inflates its e2e
+    latency, which is exactly what the percentiles should see.
+    """
+
+    def __init__(self) -> None:
+        self._arrive: Dict[int, float] = {}
+        self._admit: Dict[int, float] = {}
+        self._first: Dict[int, float] = {}
+        self._finish: Dict[int, float] = {}
+        self.preemptions = 0
+        self.preempted_rids: List[int] = []
+        # time-weighted pool utilization: integral of used/total dt
+        self._blk_t: Optional[float] = None
+        self._blk_used = 0
+        self._blk_total = 0
+        self._blk_area = 0.0
+        self._blk_span = 0.0
+
+    # ---------------------------------------------------------- lifecycle
+    def arrive(self, rid: int, t: float) -> None:
+        self._arrive.setdefault(rid, t)
+
+    def admit(self, rid: int, t: float) -> None:
+        """First admission only: readmission after preemption does not
+        reset the stamp (the wait is part of the request's latency)."""
+        self._admit.setdefault(rid, t)
+
+    def first_token(self, rid: int, t: float) -> None:
+        self._first.setdefault(rid, t)
+
+    def finish(self, rid: int, t: float) -> None:
+        self._finish.setdefault(rid, t)
+
+    def preempt(self, rid: int) -> None:
+        self.preemptions += 1
+        self.preempted_rids.append(rid)
+
+    # --------------------------------------------------------- pool gauge
+    def blocks(self, used: int, total: int, t: float) -> None:
+        """Record pool occupancy at time ``t``; utilization is the
+        time-weighted mean of ``used/total`` between samples."""
+        if self._blk_t is not None and total > 0:
+            dt = max(t - self._blk_t, 0.0)
+            self._blk_area += dt * (self._blk_used / max(self._blk_total, 1))
+            self._blk_span += dt
+        self._blk_t = t
+        self._blk_used = int(used)
+        self._blk_total = int(total)
+
+    # ------------------------------------------------------------ summary
+    def _lat(self, a: Dict[int, float], b: Dict[int, float]) -> List[float]:
+        return [b[r] - a[r] for r in b if r in a]
+
+    def summary(self) -> Dict[str, Any]:
+        queue = self._lat(self._arrive, self._admit)
+        admission = self._lat(self._admit, self._first)
+        e2e = self._lat(self._arrive, self._finish)
+        util = (self._blk_area / self._blk_span
+                if self._blk_span > 0 else None)
+        return {
+            "requests_seen": len(self._arrive),
+            "requests_finished": len(self._finish),
+            "queue_p50_s": _percentile(queue, 50),
+            "queue_p99_s": _percentile(queue, 99),
+            "admission_p50_s": _percentile(admission, 50),
+            "admission_p99_s": _percentile(admission, 99),
+            "e2e_p50_s": _percentile(e2e, 50),
+            "e2e_p99_s": _percentile(e2e, 99),
+            "kv_util_mean": round(util, 4) if util is not None else None,
+            "preemptions": self.preemptions,
+        }
 
 
 @dataclasses.dataclass

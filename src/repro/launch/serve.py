@@ -51,8 +51,21 @@ a cached adaptive plan for this loop is invalidated and the *next*
 ``ServeLoop.history`` persists across calls — pass one in to persist
 across processes (it serializes with checkpoints).
 
+**Paged mode** (``--paged-kv`` / :class:`PagedServeLoop`) replaces the
+stacked per-slot cache with a shared block pool (``repro.serve_mem``):
+cache MEMORY becomes the scheduled resource.  Requests are admitted when
+blocks for their prompt are free (not when a slot opens), prompts prefill
+in UDS-planned chunks that interleave with decode dispatches, sequences
+grow block-by-block as they generate, and under memory pressure the most
+recently admitted request is preempted — blocks freed, requeued at the
+front, later re-prefilled with its generated prefix (greedy decode makes
+the resumed request token-for-token identical to an uninterrupted run).
+See docs/SCHEDULING.md, "Paged KV and continuous batching".
+
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 16 \
         --decode-steps 8
+    python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 32 \
+        --paged-kv --num-blocks 48 --block-size 8 --max-concurrency 16
 """
 
 from __future__ import annotations
@@ -69,13 +82,17 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
-                        SchedulerContext, get_engine)
+                        SchedulerContext, ServeMeter, get_engine)
 from repro.core.spec import SpecLike, describe, resolve
-from repro.launch.steps import (make_fused_serve_step, make_prefill_step,
+from repro.launch.steps import (make_fused_serve_step, make_paged_prefill_step,
+                                make_paged_serve_step, make_prefill_step,
                                 make_serve_step)
 from repro.models import get_model
+from repro.serve_mem import BlockPool, BlockTables
+from repro.serve_mem.blocks import blocks_for_tokens
 
-__all__ = ["ServeLoop", "Request", "bucket_length", "main"]
+__all__ = ["ServeLoop", "PagedServeLoop", "Request", "bucket_length",
+           "plan_prefill_chunks", "main"]
 
 # smallest prefill bucket: tiny prompts share one program instead of
 # compiling at 1, 2, 3, ... tokens
@@ -102,6 +119,18 @@ class Request:
     # truncated=True when the cache clamped the request below max_new
     budget: int = 0
     truncated: bool = False
+    # lifecycle stamps (perf_counter clock, set by the serve loops):
+    # arrival -> admission is queue latency, admission -> first token is
+    # admission latency, arrival -> finish is e2e.  Preemption does NOT
+    # reset stamps — the wait is part of the request's latency.
+    t_arrive: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    # paged engine bookkeeping: admission sequence (LIFO preemption
+    # victim order) and how many times this request was evicted
+    admit_seq: int = -1
+    preemptions: int = 0
 
 
 class ServeLoop:
@@ -235,6 +264,12 @@ class ServeLoop:
         stream = get_engine().open_stream(
             sched, SchedulerContext(loop=loop, history=self.history),
             telemetry=telemetry)
+        meter = ServeMeter()
+        now = time.perf_counter()
+        for req in requests:
+            if req.t_arrive is None:
+                req.t_arrive = now
+            meter.arrive(req.rid, req.t_arrive)
         queue: Deque[Request] = deque(requests)
         pending: Dict[int, Deque[Request]] = {s: deque()
                                               for s in range(self.slots)}
@@ -254,6 +289,8 @@ class ServeLoop:
 
         def finish(s: int, req: Request) -> None:
             results[req.rid] = req.generated
+            req.t_finish = time.perf_counter()
+            meter.finish(req.rid, req.t_finish)
             if req.truncated:
                 truncated.append(req.rid)
 
@@ -278,8 +315,15 @@ class ServeLoop:
                 if s not in self.active and pending[s]:
                     req = pending[s].popleft()
                     t0 = time.perf_counter()
+                    if req.t_admit is None:
+                        req.t_admit = t0
+                    meter.admit(req.rid, t0)
                     tok = self._prefill_into(s, req)
-                    telemetry.add_time(s, time.perf_counter() - t0, tokens=1)
+                    t1 = time.perf_counter()
+                    if req.t_first is None:
+                        req.t_first = t1
+                    meter.first_token(req.rid, t1)
+                    telemetry.add_time(s, t1 - t0, tokens=1)
                     progressed = True
                     if self._finished_at_admission(req, tok):
                         finish(s, req)
@@ -363,12 +407,407 @@ class ServeLoop:
             else None)
         self.last_stats["truncated"] = sorted(truncated)
         self.last_stats["prefill_compiles"] = self.prefill_compiles
+        self.last_stats["serve_meter"] = meter.summary()
         return results
 
     def measured_epoch(self) -> int:
         """Measured-invocation count for the serve loop — the plan-cache
         epoch adaptive admission schedules key on."""
         return self.history.measured_invocations(self.loop_id)
+
+
+def plan_prefill_chunks(scheduler: SpecLike, n_tokens: int, *,
+                        max_chunk: int,
+                        history: Optional[LoopHistory] = None) -> List[int]:
+    """Split one prompt's prefill into chunk sizes via the UDS spine.
+
+    The prompt's token range ``[0, n_tokens)`` is planned as a
+    single-worker loop under the serve scheduler clause, so the SAME
+    ``--scheduler`` string that the loop serves under also governs how
+    coarsely prefill interleaves with decode: ``schedule(static)``
+    prefills in bursts of ``max_chunk``, ``schedule(dynamic,1)`` yields
+    minimal chunks (lowest head-of-line blocking for in-flight decodes,
+    most dispatches), ``guided`` starts coarse and refines toward the
+    prompt's tail, and ``auto`` picks online from ``serve_prefill``
+    telemetry.  Planned sizes are capped at ``max_chunk``; the caller
+    bucket-pads each chunk at dispatch (:func:`bucket_length`), so the
+    compile count is bounded by the bucket count, never by chunk-size
+    variety.
+    """
+    if n_tokens <= 0:
+        return []
+    if max_chunk < 1:
+        raise ValueError(f"max_chunk must be >= 1, got {max_chunk}")
+    sched = resolve(scheduler)
+    loop = LoopSpec(lb=0, ub=n_tokens, num_workers=1,
+                    loop_id="serve_prefill")
+    plan = get_engine().plan(sched, loop, history=history)
+    order = np.argsort(np.asarray(plan.starts, np.int64), kind="stable")
+    sizes: List[int] = []
+    for i in order:
+        rem = int(plan.sizes[i])
+        while rem > 0:
+            c = min(rem, max_chunk)
+            sizes.append(c)
+            rem -= c
+    if sum(sizes) != n_tokens:
+        raise AssertionError(
+            f"prefill plan does not tile [0, {n_tokens}): {sizes}")
+    return sizes
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """One in-flight chunked prefill (batch=1) through the paged pool."""
+
+    req: Request
+    tokens: np.ndarray            # prompt (+ generated prefix on readmit)
+    sizes: List[int]              # UDS-planned chunk sizes, in order
+    idx: int = 0                  # next chunk
+    start: int = 0                # tokens already cached
+
+
+class PagedServeLoop:
+    """Continuous batching over a paged KV block pool.
+
+    Where :class:`ServeLoop` schedules a fixed set of ``slots`` (each
+    owning a dense ``max_len`` cache row), this engine schedules cache
+    MEMORY: every request draws fixed-size KV blocks from one shared
+    :class:`~repro.serve_mem.BlockPool` as its sequence grows, so
+    concurrency is bounded by total cache tokens, not by a slot count.
+    The loop interleaves three kinds of work:
+
+    * **admission** — the next queued request is admitted when blocks for
+      its prompt are free; its prefill is split into UDS-planned chunks
+      (:func:`plan_prefill_chunks`) so long prompts never block in-flight
+      decodes for more than one chunk.
+    * **decode** — ONE fused dispatch advances every active request
+      ``decode_steps`` tokens (``make_paged_serve_step``).  Before each
+      dispatch, rows grow their block tables to cover the dispatch's
+      appends; a row that cannot grow triggers **preemption**: the most
+      recently admitted victim's blocks are freed and it is requeued at
+      the FRONT with its generated prefix.  Readmission prefills
+      ``prompt + generated`` — greedy decode is deterministic, so the
+      resumed request is token-for-token identical to an uninterrupted
+      run (locked in ``tests/test_paged.py``).
+    * **finish** — completed requests release every block immediately.
+
+    ``max_context`` is the per-request ceiling (the dense engine's
+    ``max_len``); budgets clamp/truncate against it exactly as in
+    :class:`ServeLoop`.  ``concurrency`` is only the fused dispatch's
+    batch width (compiled once) — memory admission happens first.
+    """
+
+    def __init__(self, cfg, *, num_blocks: int = 64, block_size: int = 8,
+                 max_context: int = 256, concurrency: int = 8,
+                 scheduler: SpecLike = "dynamic", seed: int = 0,
+                 history: Optional[LoopHistory] = None,
+                 decode_steps: int = 1, eos_id: Optional[int] = None,
+                 prefill_chunk: int = 32):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        if self.model.fused_paged_decode is None:
+            raise ValueError(
+                f"{cfg.name}: model family has no paged-KV path "
+                f"(use ServeLoop's per-slot engine)")
+        if max_context % block_size:
+            raise ValueError(
+                f"max_context ({max_context}) must be a multiple of "
+                f"block_size ({block_size})")
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got {concurrency}")
+        self.params, _ = self.model.init(jax.random.PRNGKey(seed),
+                                         jnp.float32)
+        self.scheduler = scheduler
+        self.sched_name = describe(scheduler)
+        self.loop_id = "serve_paged"
+        self.history = history if history is not None else LoopHistory()
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_context = max_context
+        self.max_blocks_per_seq = max_context // block_size
+        self.concurrency = concurrency
+        self.decode_steps = decode_steps
+        self.prefill_chunk = prefill_chunk
+        self.eos_id = eos_id
+        self.pool = BlockPool(num_blocks, block_size)
+        self.tables = BlockTables(self.pool,
+                                  max_blocks=self.max_blocks_per_seq)
+        self.cache = self.model.init_paged_decode(num_blocks, block_size,
+                                                  dtype=jnp.float32)[0]
+        # one compile per prefill BUCKET (chunks are bucket-padded) and
+        # ONE decode program (fixed (concurrency, W) dispatch shape)
+        self._prefill_step = jax.jit(make_paged_prefill_step(self.model))
+        self._decode = jax.jit(make_paged_serve_step(self.model,
+                                                     decode_steps))
+        self.active: Dict[int, Request] = {}        # dispatch row -> req
+        self.last_stats: Dict[str, Any] = {}
+        self._dispatches = 0
+        self._decoded = 0
+        self._pf_dispatches = 0
+
+    @property
+    def mode(self) -> str:
+        return "paged"
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct compiled prefill-chunk programs (bounded by the
+        bucket count — the chunked-prefill bucketing regression metric)."""
+        return self._prefill_step._cache_size()
+
+    def measured_epoch(self) -> int:
+        """Measured-invocation count for the paged serve loop."""
+        return self.history.measured_invocations(self.loop_id)
+
+    # ----------------------------------------------------------- internals
+    def _fill_of(self, req: Request) -> int:
+        """Cached KV positions: the prompt plus one per generated token
+        except the newest (its KV lands at the next dispatch)."""
+        return int(req.prompt.size) + len(req.generated) - 1
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Admit, prefill, decode, preempt as needed — to completion."""
+        meter = ServeMeter()
+        telemetry = LoopTelemetry(self.history, loop_id=self.loop_id,
+                                  num_workers=1)
+        pf_tel = LoopTelemetry(self.history, loop_id="serve_prefill",
+                               num_workers=1)
+        now = time.perf_counter()
+        for req in requests:
+            if req.t_arrive is None:
+                req.t_arrive = now
+            meter.arrive(req.rid, req.t_arrive)
+        meter.blocks(self.pool.used, self.pool.num_blocks, now)
+        queue: Deque[Request] = deque(requests)
+        requeue: Deque[Request] = deque()     # preempted; front of the line
+        results: Dict[int, List[int]] = {}
+        truncated: List[int] = []
+        pf: Optional[_Prefill] = None
+        admit_seq = 0
+        peak_conc = 0
+        self._dispatches = 0
+        self._decoded = 0
+        self._pf_dispatches = 0
+        C, W = self.concurrency, self.max_blocks_per_seq
+        eos_arr = jnp.asarray(-1 if self.eos_id is None else self.eos_id,
+                              jnp.int32)
+
+        def finish(req: Request) -> None:
+            results[req.rid] = req.generated
+            req.t_finish = time.perf_counter()
+            meter.finish(req.rid, req.t_finish)
+            if req.truncated:
+                truncated.append(req.rid)
+            self.tables.release(req.rid)
+            meter.blocks(self.pool.used, self.pool.num_blocks, req.t_finish)
+
+        def preempt_one(exclude_rid: int) -> bool:
+            """Evict the most recently admitted active request (LIFO:
+            the oldest request keeps its memory — FIFO completion order
+            survives pressure) and requeue it at the front."""
+            rows = [r for r, rq in self.active.items()
+                    if rq.rid != exclude_rid]
+            if not rows:
+                return False
+            victim = max(rows, key=lambda r: self.active[r].admit_seq)
+            rq = self.active.pop(victim)
+            self.tables.release(rq.rid)
+            rq.preemptions += 1
+            meter.preempt(rq.rid)
+            meter.blocks(self.pool.used, self.pool.num_blocks,
+                         time.perf_counter())
+            requeue.appendleft(rq)
+            return True
+
+        while len(results) < len(requests):
+            progressed = False
+            ran_prefill = False
+
+            # ---- admission: memory first (blocks for the prompt), then a
+            # dispatch row; preempted requests readmit ahead of the queue
+            if pf is None and (requeue or queue) and len(self.active) < C:
+                src = requeue if requeue else queue
+                req = src[0]
+                if req.budget == 0:    # first admission: fix the budget
+                    P = int(req.prompt.size)
+                    capacity = self.max_context - P + 1
+                    if capacity < 1:
+                        raise ValueError(
+                            f"request {req.rid}: prompt ({P} tokens) "
+                            f"exceeds max_context={self.max_context}; "
+                            f"raise PagedServeLoop max_context or shorten "
+                            f"the request")
+                    req.budget = min(req.max_new, capacity)
+                    req.truncated = req.budget < req.max_new
+                tokens = req.prompt
+                if req.generated:      # readmission: replay the prefix
+                    tokens = np.concatenate(
+                        [tokens, np.asarray(req.generated, np.int32)])
+                n_all = int(tokens.size)
+                if self.tables.ensure(req.rid, n_all):
+                    src.popleft()
+                    req.admit_seq = admit_seq
+                    admit_seq += 1
+                    t = time.perf_counter()
+                    if req.t_admit is None:
+                        req.t_admit = t
+                    meter.admit(req.rid, t)
+                    meter.blocks(self.pool.used, self.pool.num_blocks, t)
+                    pf = _Prefill(req=req, tokens=tokens,
+                                  sizes=plan_prefill_chunks(
+                                      self.scheduler, n_all,
+                                      max_chunk=self.prefill_chunk,
+                                      history=self.history))
+                    progressed = True
+                elif not self.active:
+                    # every block is free and the prompt still doesn't
+                    # fit: the pool itself is too small for this request
+                    raise ValueError(
+                        f"request {req.rid}: {n_all} tokens need "
+                        f"{blocks_for_tokens(n_all, self.block_size)} "
+                        f"blocks but the pool has {self.pool.num_blocks}; "
+                        f"raise num_blocks")
+
+            # ---- one prefill chunk per turn while admission can progress
+            if pf is not None:
+                ran_prefill = True
+                n = pf.sizes[pf.idx]
+                pb = bucket_length(n, self.prefill_chunk)
+                buf = np.zeros((1, pb), np.int32)
+                buf[0, :n] = pf.tokens[pf.start:pf.start + n]
+                t0 = time.perf_counter()
+                logits, self.cache = self._prefill_step(
+                    self.params, {"tokens": jnp.asarray(buf)}, self.cache,
+                    jnp.asarray(self.tables.row(pf.req.rid)),
+                    jnp.asarray(pf.start, jnp.int32),
+                    jnp.asarray(n, jnp.int32))
+                logits = np.asarray(logits)     # sync: true chunk time
+                dt = time.perf_counter() - t0
+                pf_tel.record_chunk(0, pf.start, pf.start + n, dt, tokens=n)
+                self._pf_dispatches += 1
+                pf.start += n
+                pf.idx += 1
+                progressed = True
+                if pf.idx == len(pf.sizes):     # prompt fully cached
+                    req = pf.req
+                    pf = None
+                    tok = int(np.argmax(logits[0]))
+                    if req.generated is None:
+                        req.generated = []
+                    req.generated.append(tok)
+                    t1 = time.perf_counter()
+                    if req.t_first is None:
+                        req.t_first = t1
+                    meter.first_token(req.rid, t1)
+                    done = len(req.generated) >= req.budget
+                    if self.eos_id is not None and tok == self.eos_id:
+                        done = True
+                    if done:
+                        finish(req)
+                    else:
+                        row = min(r for r in range(C)
+                                  if r not in self.active)
+                        self.active[row] = req
+                        peak_conc = max(peak_conc, len(self.active))
+
+            # ---- one fused decode dispatch across every active row.
+            # Admission has priority: decode runs when prefill could NOT
+            # progress this turn (queue empty, pool full, or concurrency
+            # cap) — occupancy builds while blocks are free, and under
+            # memory pressure the loop alternates admission attempts with
+            # decode dispatches at chunk granularity, which is exactly the
+            # prefill/decode interleave the scheduler clause governs.
+            if self.active and not ran_prefill:
+                # grow tables oldest-first so the head of the line wins
+                # under pressure; LIFO victims free blocks as needed
+                for r in sorted(self.active,
+                                key=lambda r: self.active[r].admit_seq):
+                    if r not in self.active:    # preempted this turn
+                        continue
+                    rq = self.active[r]
+                    total_need = int(rq.prompt.size) + rq.budget - 1
+                    need = min(self._fill_of(rq) + self.decode_steps,
+                               total_need)
+                    while not self.tables.ensure(rq.rid, need):
+                        if not preempt_one(exclude_rid=rq.rid):
+                            raise ValueError(
+                                f"request {rq.rid}: cannot grow to {need} "
+                                f"tokens with every other request evicted "
+                                f"— the pool ({self.num_blocks} blocks) "
+                                f"is smaller than one request's context; "
+                                f"raise num_blocks")
+                meter.blocks(self.pool.used, self.pool.num_blocks,
+                             time.perf_counter())
+                rows = sorted(self.active)
+                last = np.zeros((C, 1), np.int32)
+                mask = np.zeros((C,), bool)
+                rem = np.zeros((C,), np.int32)
+                lens = np.zeros((C,), np.int32)
+                lims = np.zeros((C,), np.int32)
+                tab = np.full((C, W), -1, np.int32)
+                for r in rows:
+                    rq = self.active[r]
+                    last[r, 0] = rq.generated[-1]
+                    mask[r] = True
+                    rem[r] = rq.budget - len(rq.generated)
+                    lens[r] = self._fill_of(rq)
+                    lims[r] = self.tables.capacity(rq.rid)
+                    tab[r] = self.tables.row(rq.rid)
+                t0 = time.perf_counter()
+                toks, self.cache, _, act_out, rem_out = self._decode(
+                    self.params, {"tokens": jnp.asarray(last)}, self.cache,
+                    jnp.asarray(tab), jnp.asarray(lens), jnp.asarray(lims),
+                    jnp.asarray(mask), jnp.asarray(rem), eos_arr)
+                toks = np.asarray(toks)         # sync: true dispatch time
+                rem_out = np.asarray(rem_out)
+                dt = time.perf_counter() - t0
+                telemetry.record_chunk(0, self._dispatches,
+                                       self._dispatches + 1, dt,
+                                       tokens=int(rem[mask].sum()
+                                                  - rem_out[mask].sum()))
+                self._dispatches += 1
+                progressed = True
+                for r in rows:
+                    rq = self.active[r]
+                    produced = int(rem[r] - rem_out[r])
+                    rq.generated.extend(int(t) for t in toks[r, :produced])
+                    self._decoded += produced
+                    done = len(rq.generated) >= rq.budget
+                    if (self.eos_id is not None
+                            and rq.generated[-1] == self.eos_id):
+                        done = True
+                    if done:
+                        del self.active[r]
+                        finish(rq)
+                    # a capacity-frozen row just stays active: the next
+                    # turn's growth phase gets it more blocks (or preempts
+                    # someone to)
+
+            if not progressed:
+                break
+        telemetry.flush()
+        pf_tel.flush()
+        self.last_stats = telemetry.summary()
+        self.last_stats.update(meter.summary())
+        self.last_stats["mode"] = self.mode
+        self.last_stats["decode_steps"] = self.decode_steps
+        self.last_stats["decode_dispatches"] = self._dispatches
+        self.last_stats["decoded_tokens"] = self._decoded
+        self.last_stats["prefill_dispatches"] = self._pf_dispatches
+        self.last_stats["prefill_compiles"] = self.prefill_compiles
+        self.last_stats["truncated"] = sorted(truncated)
+        self.last_stats["peak_concurrency"] = peak_conc
+        self.last_stats["num_blocks"] = self.num_blocks
+        self.last_stats["block_size"] = self.block_size
+        self.last_stats["peak_blocks_used"] = self.pool.peak_used
+        self.last_stats["failed_allocs"] = self.pool.failed_allocs
+        return results
 
 
 def main() -> None:
@@ -398,6 +837,24 @@ def main() -> None:
     ap.add_argument("--per-slot", dest="batched", action="store_false",
                     help="escape hatch: one decode call per active slot "
                          "per token over per-slot batch-1 caches")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="serve through the paged-KV block pool "
+                         "(continuous batching: admission by free blocks, "
+                         "chunked prefill, preemption under pressure)")
+    ap.add_argument("--num-blocks", type=int, default=64,
+                    help="paged mode: KV blocks in the shared pool")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged mode: token positions per KV block")
+    ap.add_argument("--max-context", type=int, default=64,
+                    help="paged mode: per-request context ceiling "
+                         "(prompt + generated); must be a multiple of "
+                         "--block-size")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="paged mode: max tokens per prefill chunk (the "
+                         "UDS plans the chunking under --scheduler)")
+    ap.add_argument("--max-concurrency", type=int, default=8,
+                    help="paged mode: fused dispatch batch width (compiled "
+                         "once); memory admission happens first")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -408,20 +865,43 @@ def main() -> None:
                                         ).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler,
-                     batched=args.batched, decode_steps=args.decode_steps,
-                     eos_id=args.eos_id)
+    if args.paged_kv:
+        loop = PagedServeLoop(cfg, num_blocks=args.num_blocks,
+                              block_size=args.block_size,
+                              max_context=args.max_context,
+                              concurrency=args.max_concurrency,
+                              scheduler=args.scheduler,
+                              decode_steps=args.decode_steps,
+                              eos_id=args.eos_id,
+                              prefill_chunk=args.prefill_chunk)
+    else:
+        loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler,
+                         batched=args.batched,
+                         decode_steps=args.decode_steps,
+                         eos_id=args.eos_id)
     t0 = time.perf_counter()
     out = loop.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {loop.mode} decode x{loop.decode_steps}) "
-          f"under schedule({loop.sched_name}); "
-          f"{loop.last_stats.get('decode_dispatches')} decode dispatches "
-          f"({loop.last_stats.get('dispatches_per_token')} per token), "
-          f"measured epoch {loop.measured_epoch()}, "
-          f"imbalance {loop.last_stats.get('imbalance')}")
+    if args.paged_kv:
+        s = loop.last_stats
+        print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s, paged decode x{loop.decode_steps}) "
+              f"under schedule({loop.sched_name}); "
+              f"peak concurrency {s.get('peak_concurrency')}, "
+              f"{s.get('peak_blocks_used')}/{loop.num_blocks} blocks peak "
+              f"(mean util {s.get('kv_util_mean')}), "
+              f"{s.get('preemptions')} preemptions, "
+              f"{s.get('prefill_compiles')} prefill compiles, "
+              f"measured epoch {loop.measured_epoch()}")
+    else:
+        print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s, {loop.mode} decode x{loop.decode_steps}) "
+              f"under schedule({loop.sched_name}); "
+              f"{loop.last_stats.get('decode_dispatches')} decode dispatches "
+              f"({loop.last_stats.get('dispatches_per_token')} per token), "
+              f"measured epoch {loop.measured_epoch()}, "
+              f"imbalance {loop.last_stats.get('imbalance')}")
 
 
 if __name__ == "__main__":

@@ -413,6 +413,57 @@ def make_fused_serve_step(model: Model, num_steps: int) -> Callable:
     return serve_step
 
 
+def make_paged_prefill_step(model: Model) -> Callable:
+    """One CHUNK of one prompt through the paged-KV pool — the
+    continuous-batching prefill unit.  ``batch["tokens"]`` is a
+    bucket-padded ``(1, Cb)`` chunk; ``start``/``length`` are traced
+    scalars, so each padded width ``Cb`` compiles exactly once (the paged
+    analogue of the dense engine's one-compile-per-bucket prefill).
+
+    Returns prefill_chunk(params, batch, cache, tables, start, length)
+    -> (logits (1, V) at the chunk's last real token, cache)."""
+    if model.paged_prefill_chunk is None:
+        raise ValueError(
+            f"{model.name}: model family has no paged-KV path "
+            f"(use the dense serve engines)")
+
+    def prefill_chunk(params, batch, cache, tables, start, length):
+        return model.paged_prefill_chunk(params, batch, cache,
+                                         tables=tables, start=start,
+                                         length=length,
+                                         cap_e=batch.get("cap_e"))
+    return prefill_chunk
+
+
+def make_paged_serve_step(model: Model, num_steps: int) -> Callable:
+    """``num_steps`` greedy tokens per dispatch across every row of a
+    paged-KV block pool — the paged twin of :func:`make_fused_serve_step`.
+    ``tables (B, W)`` / ``lengths (B,)`` come from the host-side block
+    manager; ``limits (B,)`` is per-row allocated capacity in tokens, so a
+    row that outgrows its blocks freezes mid-dispatch instead of writing
+    into memory it does not own (the serve loop's preemption signal).
+
+    Returns serve_step(params, batch, cache, tables, lengths, limits,
+    active, remaining, eos_id) -> (tokens (B, num_steps), cache, lengths,
+    active, remaining)."""
+    if model.fused_paged_decode is None:
+        raise ValueError(
+            f"{model.name}: model family has no paged-KV path "
+            f"(use the dense serve engines)")
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+
+    def serve_step(params, batch, cache, tables, lengths, limits,
+                   active, remaining, eos_id):
+        return model.fused_paged_decode(params, batch, cache,
+                                        num_steps=num_steps, tables=tables,
+                                        lengths=lengths, limits=limits,
+                                        active=active, remaining=remaining,
+                                        eos_id=eos_id,
+                                        cap_e=batch.get("cap_e"))
+    return serve_step
+
+
 # --------------------------------------------------------------------------
 def input_specs(cfg: ModelConfig, shape: ShapeSpec,
                 dtype: jnp.dtype = jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:

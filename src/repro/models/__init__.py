@@ -22,6 +22,18 @@ one stacked cache with per-slot lengths, one decode call for all slots:
 
 They are ``None`` for state-space / hybrid families (``ServeLoop`` falls
 back to per-slot decode there).
+
+Attention archs also expose the paged-KV serving path (block-pool cache,
+host-side block tables — see ``repro.serve_mem``):
+
+    model.init_paged_decode(num_blocks, block_size) -> (pool, specs)
+    model.paged_decode(params, inputs, pool, tables=, lengths=, ...)
+                                      -> (logits, pool, lengths)
+    model.fused_paged_decode(params, inputs, pool, num_steps=T, tables=,
+                             lengths=, limits=, ...)
+                -> (tokens (B,T), pool, lengths, active, remaining)
+    model.paged_prefill_chunk(params, inputs, pool, tables=, start=,
+                              length=) -> (logits (1,V), pool)
 """
 
 from __future__ import annotations
@@ -55,6 +67,12 @@ class Model:
     # on-device lax.scan over batched_decode, with per-slot stop/length
     # handling carried in the loop state (None = no batched path)
     fused_decode: Optional[Callable] = None
+    # paged-KV serving path (block pool + host-side block tables); None
+    # when the family has no paged implementation
+    init_paged_decode: Optional[Callable] = None
+    paged_decode: Optional[Callable] = None
+    fused_paged_decode: Optional[Callable] = None
+    paged_prefill_chunk: Optional[Callable] = None
 
     @property
     def name(self) -> str:
@@ -110,4 +128,16 @@ def get_model(cfg: ModelConfig) -> Model:
         fused_decode=(lambda params, inputs, cache, **kw:
                       transformer.fused_decode_steps(params, cfg, inputs,
                                                      cache, **kw)),
+        init_paged_decode=(lambda num_blocks, block_size, **kw:
+                           transformer.init_paged_cache(cfg, num_blocks,
+                                                        block_size, **kw)),
+        paged_decode=(lambda params, inputs, cache, **kw:
+                      transformer.paged_decode_step(params, cfg, inputs,
+                                                    cache, **kw)),
+        fused_paged_decode=(lambda params, inputs, cache, **kw:
+                            transformer.fused_paged_decode_steps(
+                                params, cfg, inputs, cache, **kw)),
+        paged_prefill_chunk=(lambda params, inputs, cache, **kw:
+                             transformer.prefill_paged_chunk(
+                                 params, cfg, inputs, cache, **kw)),
     )

@@ -29,7 +29,8 @@ from repro.sharding import constrain
 __all__ = [
     "ParamBuilder", "rms_norm", "make_rope", "apply_rope", "apply_mrope",
     "sinusoidal_positions", "attention", "blockwise_attention", "mlp_swiglu",
-    "mlp_gelu", "decode_attention", "scatter_kv",
+    "mlp_gelu", "decode_attention", "scatter_kv", "gather_kv_paged",
+    "scatter_kv_paged", "paged_decode_attention",
 ]
 
 Tree = Dict[str, Any]
@@ -325,6 +326,75 @@ def scatter_kv(cache: jax.Array, new: jax.Array, cur: jax.Array,
     hit = (jnp.arange(S)[None, :] == jnp.reshape(cur, (-1, 1)))   # (B, S)
     hit = hit & jnp.reshape(active, (-1, 1))
     return jnp.where(hit[..., None], new.astype(cache.dtype), cache)
+
+
+# ------------------------------------------------------------- paged KV
+def gather_kv_paged(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Materialize per-request KV views from a paged pool.
+
+    ``pool`` is one layer's block store ``(NB, BS, C)`` — ``NB`` blocks
+    of ``BS`` token positions each; ``tables (B, W)`` int32 maps request
+    ``b``'s logical block ``w`` (token positions ``[w*BS, (w+1)*BS)``)
+    onto a pool block, ``-1`` padding unassigned entries.  Returns the
+    dense view ``(B, W*BS, C)`` — identical in shape and content (at
+    every position below the request's fill) to the stacked dense
+    cache's row, so the attention math downstream is the same function.
+    Unassigned/garbage entries are gathered from block 0 and must be
+    masked by the caller's length masking, exactly like the dense
+    cache's unwritten tail.
+    """
+    B, W = tables.shape
+    _, BS, C = pool.shape
+    got = jnp.take(pool, jnp.clip(tables, 0), axis=0)    # (B, W, BS, C)
+    return got.reshape(B, W * BS, C)
+
+
+def scatter_kv_paged(pool: jax.Array, new: jax.Array, cur: jax.Array,
+                     active: jax.Array, tables: jax.Array) -> jax.Array:
+    """Masked per-request KV append into a paged pool.
+
+    The paged twin of :func:`scatter_kv`: write ``new (B, 1, C)`` at
+    request ``b``'s logical position ``cur[b]`` — pool block
+    ``tables[b, cur[b] // BS]``, offset ``cur[b] % BS`` — for every row
+    with ``active[b]``.  Inactive rows, rows whose position falls on an
+    unassigned (``-1``) table entry, and rows past their table's width
+    are dropped via an out-of-bounds index (XLA ``mode="drop"``), so a
+    frozen or unallocated slot can never corrupt a live block.
+    """
+    NB, BS, _ = pool.shape
+    B, W = tables.shape
+    cur = jnp.asarray(cur, jnp.int32)
+    widx = jnp.clip(cur // BS, 0, W - 1)
+    blk = jnp.take_along_axis(tables, widx[:, None], axis=1)[:, 0]
+    ok = (jnp.asarray(active).astype(bool) & (blk >= 0)
+          & (cur < W * BS))
+    blk = jnp.where(ok, blk, NB)                 # OOB -> dropped write
+    return pool.at[blk, cur % BS].set(new[:, 0].astype(pool.dtype),
+                                      mode="drop")
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, tables: jax.Array,
+                           cur_len: jax.Array) -> jax.Array:
+    """Single-token decode attention reading K/V through block tables.
+
+    ``q (B, 1, H, hd)`` against one layer's paged pools ``(NB, BS, C)``
+    where ``C = KV*hd``: the per-request views are gathered
+    (:func:`gather_kv_paged`) and fed to the one true
+    :func:`decode_attention` with per-row length masking — positions at
+    or beyond ``cur_len[b]`` (including every gathered garbage entry)
+    are masked, so the result equals dense decode attention over a
+    ``max_len = W*BS`` cache row holding the same sequence.
+    """
+    B = q.shape[0]
+    hd = q.shape[-1]
+    k = gather_kv_paged(k_pool, tables)          # (B, W*BS, C)
+    v = gather_kv_paged(v_pool, tables)
+    S = k.shape[1]
+    kv_heads = k.shape[-1] // hd
+    return decode_attention(
+        q, k.reshape(B, S, kv_heads, hd).astype(q.dtype),
+        v.reshape(B, S, kv_heads, hd).astype(q.dtype), cur_len)
 
 
 # ----------------------------------------------------------------- MLPs

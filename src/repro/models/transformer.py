@@ -11,22 +11,26 @@ One implementation, feature-flagged by ``ModelConfig``:
 
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.common import (ParamBuilder, apply_mrope, apply_rope,
-                                 decode_attention, make_rope, mlp_gelu,
+from repro.models.common import (ParamBuilder, _repeat_kv, apply_mrope,
+                                 apply_rope, decode_attention,
+                                 gather_kv_paged, make_rope, mlp_gelu,
                                  mlp_swiglu, rms_norm, scatter_kv,
-                                 sinusoidal_positions)
+                                 scatter_kv_paged, sinusoidal_positions)
 from repro.models.moe import moe_ffn
 from repro.sharding import constrain, current_rules
 
 __all__ = ["init_params", "forward", "init_cache", "init_batched_cache",
            "decode_step", "batched_decode_step", "fused_decode_steps",
-           "insert_prefill", "prefill"]
+           "insert_prefill", "prefill", "init_paged_cache",
+           "paged_decode_step", "fused_paged_decode_steps",
+           "prefill_paged_chunk"]
 
 Tree = Dict[str, Any]
 
@@ -313,13 +317,15 @@ def insert_prefill(cache: Tree, pref: Tree, slot: jax.Array) -> Tree:
 def _decode_forward(params: Tree, cfg: ModelConfig,
                     inputs: Dict[str, jax.Array], cache: Tree,
                     positions: jax.Array, kv_append, attend_len: jax.Array,
-                    cap_e: Optional[jax.Array]
-                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """The one-token decode body shared by the per-slot and batched paths.
+                    cap_e: Optional[jax.Array],
+                    kv_view=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The one-token decode body shared by per-slot, batched and paged paths.
 
-    The two paths differ ONLY in how a layer's new K/V row lands in the
+    The paths differ ONLY in how a layer's new K/V row lands in the
     cache (``kv_append(cache_2d, new_(B,1,kv))``: ``dynamic_update_slice``
-    at a scalar length vs a masked per-row scatter) and in the
+    at a scalar length vs a masked per-row scatter vs a block-table paged
+    scatter), in how the cache is read back (``kv_view``: identity for the
+    dense layouts, a block-table gather for the paged pool), and in the
     position/length values fed to rotary and attention masking — everything
     else (qkv, attention, residual, MLP/MoE, final norm, head) is this one
     function, so the engines cannot drift apart.
@@ -342,13 +348,15 @@ def _decode_forward(params: Tree, cfg: ModelConfig,
         q, k = _position_rotate(cfg, q, k, positions, pos3d)
         kc = kv_append(kc, k.reshape(B, 1, cfg.kv_dim))
         vc = kv_append(vc, v.reshape(B, 1, cfg.kv_dim))
-        S_max = kc.shape[1]
+        kcv = kv_view(kc) if kv_view is not None else kc
+        vcv = kv_view(vc) if kv_view is not None else vc
+        S_max = kcv.shape[1]
         a = decode_attention(
             q,
-            kc.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
-                       ).astype(q.dtype),
-            vc.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
-                       ).astype(q.dtype),
+            kcv.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
+                        ).astype(q.dtype),
+            vcv.reshape(B, S_max, cfg.num_kv_heads, cfg.head_dim
+                        ).astype(q.dtype),
             attend_len)
         a = a.reshape(B, 1, cfg.q_dim)
         x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
@@ -468,6 +476,218 @@ def fused_decode_steps(params: Tree, cfg: ModelConfig,
         body, (tok, cache["k"], cache["v"], cache["len"], act, rem),
         None, length=num_steps)
     return toks.T, {"k": k, "v": v, "len": ln}, act, rem
+
+
+# -------------------------------------------------------------- paged KV
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype: jnp.dtype = jnp.bfloat16,
+                     abstract: bool = False) -> Tuple[Tree, Tree]:
+    """Paged serving cache: one ``(L, num_blocks, block_size, KV*hd)``
+    block pool per k/v, shared by every in-flight request.  There is no
+    per-slot ``len`` here: fills and block tables belong to the host-side
+    manager (``repro.serve_mem``), which renders tables per dispatch —
+    cache *memory* is the scheduled resource, so its bookkeeping lives
+    with the scheduler, not the device state."""
+    dtype = cache_dtype(cfg, dtype)
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.kv_dim)
+    z = (jax.ShapeDtypeStruct if abstract
+         else (lambda s, d: jnp.zeros(s, d)))
+    cache = {"k": z(shape, dtype), "v": z(shape, dtype)}
+    specs = {"k": ("layers", None, "seq_cache", "kv"),
+             "v": ("layers", None, "seq_cache", "kv")}
+    return cache, specs
+
+
+def paged_decode_step(params: Tree, cfg: ModelConfig,
+                      inputs: Dict[str, jax.Array], cache: Tree, *,
+                      tables: jax.Array, lengths: jax.Array,
+                      active: Optional[jax.Array] = None,
+                      cap_e: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Tree, jax.Array]:
+    """One-token decode across every row of a paged-KV pool.
+
+    ``tables (B, W)`` int32 maps each row's logical blocks onto pool
+    blocks (``-1`` = unassigned); ``lengths (B,)`` is each row's fill.
+    The body is the same :func:`_decode_forward` as the dense engines —
+    only the append (block-table scatter) and the cache read (block-table
+    gather to a ``(B, W*BS, C)`` view) differ, so an active row's math is
+    identical to :func:`batched_decode_step` over a dense ``max_len =
+    W*BS`` cache holding the same sequence — the paged-vs-dense
+    equivalence guarantee.
+
+    Returns (logits (B, V), updated cache, updated lengths).
+    """
+    cur = jnp.asarray(lengths, jnp.int32)
+    B = cur.shape[0]
+    active = (jnp.ones((B,), bool) if active is None
+              else jnp.asarray(active).astype(bool))
+    logits, new_k, new_v = _decode_forward(
+        params, cfg, inputs, cache,
+        positions=cur[:, None],
+        kv_append=lambda c, new: scatter_kv_paged(c, new, cur, active,
+                                                  tables),
+        attend_len=cur + 1,
+        cap_e=cap_e,
+        kv_view=lambda c: gather_kv_paged(c, tables))
+    return logits, {"k": new_k, "v": new_v}, cur + active.astype(jnp.int32)
+
+
+def fused_paged_decode_steps(params: Tree, cfg: ModelConfig,
+                             inputs: Dict[str, jax.Array], cache: Tree, *,
+                             num_steps: int, tables: jax.Array,
+                             lengths: jax.Array, limits: jax.Array,
+                             active: Optional[jax.Array] = None,
+                             remaining: Optional[jax.Array] = None,
+                             eos_id: Optional[jax.Array] = None,
+                             cap_e: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, Tree, jax.Array,
+                                        jax.Array, jax.Array]:
+    """Run up to ``num_steps`` greedy tokens per row through the paged
+    pool ON DEVICE — the paged twin of :func:`fused_decode_steps`.
+
+    Block tables are fixed for the duration of a dispatch (the host
+    allocates before dispatching); ``limits (B,)`` is each row's
+    currently-covered capacity in tokens (``allocated_blocks * BS``) —
+    a row whose fill reaches its limit freezes in place rather than
+    scattering into a block it does not own, which is the memory-pressure
+    edge the serve loop turns into a preemption decision.  Budget and EOS
+    freezes behave exactly as in the dense fused engine.
+
+    Returns ``(tokens (B, num_steps), cache, lengths, active,
+    remaining)``; frozen steps emit -1.
+    """
+    tok = inputs["tokens"]                          # (B, 1) int32
+    ln = jnp.asarray(lengths, jnp.int32)
+    B = ln.shape[0]
+    limits = jnp.asarray(limits, jnp.int32)
+    act = (jnp.ones((B,), bool) if active is None
+           else jnp.asarray(active).astype(bool))
+    rem = (jnp.full((B,), num_steps, jnp.int32) if remaining is None
+           else jnp.asarray(remaining).astype(jnp.int32))
+    act = act & (rem > 0) & (ln < limits)
+    eos = (jnp.asarray(-1, jnp.int32) if eos_id is None
+           else jnp.asarray(eos_id).astype(jnp.int32))
+
+    def body(carry, _):
+        tok, k, v, ln, act, rem = carry
+        logits, new_cache, new_ln = paged_decode_step(
+            params, cfg, {"tokens": tok}, {"k": k, "v": v},
+            tables=tables, lengths=ln, active=act, cap_e=cap_e)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B,)
+        emit = jnp.where(act, nxt, -1)
+        rem = rem - act.astype(jnp.int32)
+        act = act & (rem > 0) & (nxt != eos) & (new_ln < limits)
+        tok = jnp.where(act, nxt, tok[:, 0])[:, None]
+        return (tok, new_cache["k"], new_cache["v"], new_ln, act, rem), emit
+
+    (tok, k, v, ln, act, rem), toks = jax.lax.scan(
+        body, (tok, cache["k"], cache["v"], ln, act, rem),
+        None, length=num_steps)
+    return toks.T, {"k": k, "v": v}, ln, act, rem
+
+
+def prefill_paged_chunk(params: Tree, cfg: ModelConfig,
+                        inputs: Dict[str, jax.Array], cache: Tree, *,
+                        tables: jax.Array, start: jax.Array,
+                        length: jax.Array,
+                        cap_e: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Tree]:
+    """Process ONE chunk of one request's prompt through the paged cache.
+
+    This is what makes prefill schedulable: instead of one monolithic
+    prompt pass, the serve loop feeds bucket-padded chunks —
+    ``inputs["tokens"] (1, Cb)`` holding ``length`` real tokens — and
+    interleaves them with decode dispatches.  The chunk's queries attend
+    the request's already-cached prefix (``start`` tokens, gathered from
+    the pool through ``tables (W,)``) plus themselves causally, exactly
+    the keys the full prefill would have seen, and the chunk's rotated
+    K/V are scattered into the request's blocks at positions
+    ``start .. start+length-1`` (pad positions are dropped, never
+    written).  ``length``/``start`` are traced scalars, so one compile
+    serves every chunk of a given padded width ``Cb`` — the
+    one-compile-per-bucket guarantee carries over from dense prefill.
+
+    Returns (logits (1, V) at the chunk's last real position, updated
+    cache) — the logits only matter for the final chunk of a prompt,
+    where they produce the request's first generated token.
+    """
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    Cb = inputs["tokens"].shape[1]
+    positions = start + jnp.arange(Cb, dtype=jnp.int32)[None, :]  # (1, Cb)
+    x, positions, pos3d = _embed_inputs(
+        cfg, params, dict(inputs, positions=positions))
+    B = x.shape[0]
+    W = tables.shape[-1]
+    BS = cache["k"].shape[2]
+    S_past = W * BS
+    tab_b = jnp.broadcast_to(jnp.asarray(tables, jnp.int32)[None, :],
+                             (1, W))
+    # key validity: past pool positions are real iff below the fill at
+    # chunk start; chunk positions attend causally within the chunk
+    past_ok = jnp.arange(S_past)[None, :] < start            # (1, S_past)
+    tri = (jnp.arange(Cb)[:, None] >= jnp.arange(Cb)[None, :])
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(past_ok, (Cb, S_past)), tri], axis=1)
+    mask = mask[None, None]                                  # (1,1,Cb,S)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    chunk_pos = start + jnp.arange(Cb, dtype=jnp.int32)      # (Cb,)
+
+    def body(x, layer):
+        lp, kc, vc = layer                      # kc/vc: (NB, BS, C)
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = _attn_qkv(lp, cfg, h)
+        q, k = _position_rotate(cfg, q, k, positions, pos3d)
+        past_k = gather_kv_paged(kc, tab_b)     # (1, S_past, C)
+        past_v = gather_kv_paged(vc, tab_b)
+        keys = jnp.concatenate(
+            [past_k.reshape(B, S_past, cfg.num_kv_heads, cfg.head_dim
+                            ).astype(q.dtype), k], axis=1)
+        vals = jnp.concatenate(
+            [past_v.reshape(B, S_past, cfg.num_kv_heads, cfg.head_dim
+                            ).astype(q.dtype), v], axis=1)
+        groups = q.shape[2] // keys.shape[2]
+        kk = _repeat_kv(keys, groups)
+        vv = _repeat_kv(vals, groups)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        a = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        a = a.reshape(B, Cb, cfg.q_dim)
+        x = x + jnp.einsum("bsq,qd->bsd", a, lp["attn"]["wo"])
+        h = rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            out, _ = moe_ffn(h, lp["moe"]["router"], lp["moe"]["w_gate"],
+                             lp["moe"]["w_up"], lp["moe"]["w_down"], cfg,
+                             cap_e)
+        elif cfg.mlp == "swiglu":
+            out = mlp_swiglu(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                             lp["mlp"]["wo"])
+        else:
+            out = mlp_gelu(h, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                           lp["mlp"]["wo"], lp["mlp"]["bo"])
+        # scatter the chunk's ROTATED keys (decode appends rotated keys
+        # too) into the request's blocks; positions >= length are pad and
+        # dropped.  Each chunk position is its own "row" of the scatter.
+        write_ok = jnp.arange(Cb) < length
+        kc = scatter_kv_paged(
+            kc, k.reshape(Cb, 1, cfg.kv_dim), chunk_pos, write_ok,
+            jnp.broadcast_to(tables, (Cb, W)))
+        vc = scatter_kv_paged(
+            vc, v.reshape(Cb, 1, cfg.kv_dim), chunk_pos, write_ok,
+            jnp.broadcast_to(tables, (Cb, W)))
+        return x + out, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    x_last = jax.lax.dynamic_index_in_dim(x, length - 1, axis=1,
+                                          keepdims=False)
+    logits = jnp.einsum("bd,dv->bv", x_last, head)[:, :cfg.vocab_size]
+    return logits, {"k": ks, "v": vs}
 
 
 def decode_step(params: Tree, cfg: ModelConfig, inputs: Dict[str, jax.Array],

@@ -1,0 +1,195 @@
+"""Block pool + block tables: KV cache memory as an allocatable resource.
+
+The dense serving cache gives every slot one ``max_len`` KV row, so slot
+count — not memory — caps concurrency.  The paged engine instead carves
+the cache into ``num_blocks`` fixed-size blocks (``block_size`` token
+positions each, all layers of one position in one block) and hands them
+out on demand:
+
+* :class:`BlockPool` — the free list.  ``alloc`` is all-or-nothing (a
+  request never ends up half-grown holding blocks it cannot use),
+  ``free`` returns blocks, and the pool keeps watermark accounting
+  (``used`` / ``peak_used`` / ``utilization``) that admission and
+  preemption decisions read.
+* :class:`BlockTables` — per-request tables mapping logical token
+  positions onto pool blocks.  ``ensure(rid, n_tokens)`` grows a table
+  to cover a prefix of ``n_tokens`` positions; ``release(rid)`` frees
+  every block back to the pool.  ``rows()`` renders tables as the
+  padded ``(B, max_blocks)`` int32 array the device scatter/gather
+  consumes (``-1`` marks unassigned entries).
+
+Everything here is host-side numpy/python — the device never sees the
+free list, only the rendered tables.  Invariants (locked by the
+hypothesis suite in ``tests/test_paged.py``): a live block is owned by
+exactly one table and never on the free list; releasing everything
+returns the pool to full; used/free counts never go negative.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["BlockPool", "BlockTables", "blocks_for_tokens"]
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to cover ``n_tokens`` positions (ceil division)."""
+    if n_tokens <= 0:
+        return 0
+    return -(-int(n_tokens) // int(block_size))
+
+
+class BlockPool:
+    """Fixed-size KV block allocator with watermark accounting.
+
+    The free list is LIFO over sorted ids, so allocation order is
+    deterministic — evict→readmit reproducibility (and every test) rests
+    on the pool never making a random placement decision.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # LIFO stack; initialized descending so .pop() hands out ids in
+        # ascending order from a fresh pool
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.peak_used = 0          # high watermark (blocks)
+        self.alloc_calls = 0
+        self.failed_allocs = 0      # all-or-nothing refusals (pressure)
+        self.freed_blocks = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def utilization(self) -> float:
+        """Live-block fraction of the pool right now."""
+        return self.used / self.num_blocks
+
+    # ---------------------------------------------------------- transfer
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks, or None (and nothing) if the pool is short.
+
+        All-or-nothing: under pressure the caller either preempts a
+        victim to make room or leaves the requester queued — it never
+        holds a useless partial grant.
+        """
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        self.alloc_calls += 1
+        if n > len(self._free):
+            self.failed_allocs += 1
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.used)
+        return got
+
+    def free(self, blocks: List[int]) -> None:
+        """Return blocks to the pool (double-free and alien ids refused)."""
+        for b in blocks:
+            if not (0 <= b < self.num_blocks):
+                raise ValueError(f"free: block {b} not in pool")
+        live = set(self._free)
+        for b in blocks:
+            if b in live:
+                raise ValueError(f"free: block {b} is already free")
+        self._free.extend(sorted(blocks, reverse=True))
+        self.freed_blocks += len(blocks)
+
+
+class BlockTables:
+    """Per-request block tables over one :class:`BlockPool`.
+
+    ``max_blocks`` bounds a single request's table (its max context =
+    ``max_blocks * block_size`` tokens — the paged analogue of the dense
+    engine's ``max_len``).
+    """
+
+    def __init__(self, pool: BlockPool, max_blocks: int):
+        if max_blocks < 1:
+            raise ValueError(f"max_blocks must be >= 1, got {max_blocks}")
+        self.pool = pool
+        self.max_blocks = int(max_blocks)
+        self._tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def block_size(self) -> int:
+        return self.pool.block_size
+
+    @property
+    def max_context(self) -> int:
+        """Longest sequence one table can address (tokens)."""
+        return self.max_blocks * self.pool.block_size
+
+    def holders(self) -> List[int]:
+        return sorted(self._tables)
+
+    def num_blocks_of(self, rid: int) -> int:
+        return len(self._tables.get(rid, ()))
+
+    def capacity(self, rid: int) -> int:
+        """Token positions the request's current blocks cover."""
+        return self.num_blocks_of(rid) * self.pool.block_size
+
+    def row(self, rid: int) -> np.ndarray:
+        """The request's table as a ``(max_blocks,)`` int32 row, ``-1``
+        padding unassigned entries — the device scatter/gather form."""
+        out = np.full((self.max_blocks,), -1, np.int32)
+        tab = self._tables.get(rid, ())
+        out[:len(tab)] = tab
+        return out
+
+    # ---------------------------------------------------------- lifecycle
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow ``rid``'s table to cover ``n_tokens`` positions.
+
+        Returns True when the table already covers them or the growth
+        allocation succeeded; False (table untouched) when the pool is
+        short — the caller's preemption cue.  A request asking for more
+        than ``max_context`` is refused loudly: no table can serve it.
+        """
+        need = blocks_for_tokens(n_tokens, self.pool.block_size)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"request {rid}: {n_tokens} tokens need {need} blocks, "
+                f"table capacity is {self.max_blocks} "
+                f"({self.max_context} tokens)")
+        tab = self._tables.setdefault(rid, [])
+        grow = need - len(tab)
+        if grow <= 0:
+            return True
+        got = self.pool.alloc(grow)
+        if got is None:
+            return False
+        tab.extend(got)
+        return True
+
+    def release(self, rid: int) -> int:
+        """Free every block the request holds; returns the count."""
+        tab = self._tables.pop(rid, None)
+        if not tab:
+            return 0
+        self.pool.free(tab)
+        return len(tab)
+
+    def rows(self, rids) -> np.ndarray:
+        """Stack ``row(rid)`` for each rid — the ``(B, max_blocks)``
+        dispatch-time table array."""
+        if len(rids) == 0:
+            return np.full((0, self.max_blocks), -1, np.int32)
+        return np.stack([self.row(r) for r in rids])

@@ -1,0 +1,392 @@
+"""Paged-KV serving tests: allocator invariants + paged-vs-dense equivalence.
+
+The block-table KV subsystem makes cache memory the scheduled resource, so
+its correctness splits into two layers, each locked here:
+
+* **Allocator invariants** (host side, ``repro.serve_mem``): a live block
+  is owned by exactly one table and never on the free list (no aliasing),
+  releasing everything returns the pool to full, used/free watermarks
+  never go negative, and a refused allocation changes nothing
+  (all-or-nothing).  Checked over long seeded-random op sequences always,
+  and via hypothesis when the dev dependency is installed.
+
+* **Engine equivalence** (device side): the paged engine — chunked
+  prefill through block tables, fused paged decode, preemption with
+  evict→readmit — serves token-for-token the SAME generations as the
+  dense batched :class:`ServeLoop` for every schedule family, including
+  runs where memory pressure forces at least one preemption (greedy
+  decode is deterministic, so a readmitted request must resume exactly
+  where an uninterrupted run would be).
+
+Plus the chunked-prefill bucketing regression: prefill chunks are
+bucket-padded, so compile count is bounded by the BUCKET count no matter
+how many distinct prompt lengths (or UDS chunk sizes) the trace produces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import (PagedServeLoop, Request, ServeLoop,
+                                bucket_length, plan_prefill_chunks)
+from repro.serve_mem import BlockPool, BlockTables, make_mixed_trace
+from repro.serve_mem.blocks import blocks_for_tokens
+
+MAX_LEN = 64
+BLOCK_SIZE = 8
+N_REQUESTS = 6
+
+
+def make_requests(seed: int, n: int = N_REQUESTS, lo: int = 4, hi: int = 12,
+                  max_new: int = 3):
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke_config("qwen2.5-3b")
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(lo, hi))
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants
+# ---------------------------------------------------------------------------
+def check_invariants(pool: BlockPool, tables: BlockTables, mirror) -> None:
+    """The subsystem's safety net, checked after every op:
+
+    no aliasing (every live block in exactly one table, none on the free
+    list), conservation (used + free == pool size), non-negative
+    watermarks, and table/mirror agreement."""
+    held = [b for tab in mirror.values() for b in tab]
+    assert len(held) == len(set(held)), "block aliased across tables"
+    free = set(pool._free)
+    assert not (set(held) & free), "live block on the free list"
+    assert pool.used + pool.num_free == pool.num_blocks
+    assert pool.used == len(held)
+    assert 0 <= pool.used <= pool.num_blocks
+    assert 0 <= pool.num_free <= pool.num_blocks
+    assert 0 <= pool.peak_used <= pool.num_blocks
+    assert pool.peak_used >= pool.used
+    for rid, tab in mirror.items():
+        assert list(tables.row(rid)[:len(tab)]) == tab
+        assert all(b == -1 for b in tables.row(rid)[len(tab):])
+
+
+def run_ops(ops, num_blocks: int, block_size: int, max_blocks: int) -> None:
+    """Drive ensure/release ops against a pool while mirroring the
+    expected table contents in plain python."""
+    pool = BlockPool(num_blocks, block_size)
+    tables = BlockTables(pool, max_blocks=max_blocks)
+    mirror = {}
+    for kind, rid, n_tokens in ops:
+        if kind == "ensure":
+            need = blocks_for_tokens(n_tokens, block_size)
+            if need > max_blocks:
+                with pytest.raises(ValueError):
+                    tables.ensure(rid, n_tokens)
+            else:
+                before = pool.num_free
+                have = len(mirror.get(rid, []))
+                ok = tables.ensure(rid, n_tokens)
+                grow = max(need - have, 0)
+                if ok:
+                    mirror.setdefault(rid, [])
+                    got = tables.row(rid)[have:have + grow]
+                    mirror[rid].extend(int(b) for b in got)
+                    assert pool.num_free == before - grow
+                else:   # all-or-nothing: refusal changes NOTHING
+                    assert grow > before
+                    assert pool.num_free == before
+                    assert tables.num_blocks_of(rid) == have
+        else:           # release
+            freed = tables.release(rid)
+            assert freed == len(mirror.pop(rid, []))
+        check_invariants(pool, tables, mirror)
+    for rid in list(mirror):
+        tables.release(rid)
+        mirror.pop(rid)
+        check_invariants(pool, tables, mirror)
+    assert pool.num_free == pool.num_blocks, "release did not drain pool"
+
+
+def random_ops(rng, n_ops: int, n_rids: int, max_tokens: int):
+    ops = []
+    for _ in range(n_ops):
+        rid = int(rng.integers(0, n_rids))
+        if rng.random() < 0.7:
+            ops.append(("ensure", rid, int(rng.integers(0, max_tokens))))
+        else:
+            ops.append(("release", rid, 0))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_random_sequences(seed):
+    """Long random ensure/release sequences keep every invariant, with
+    pools small enough that refusals and over-capacity asks both occur."""
+    rng = np.random.default_rng(seed)
+    num_blocks = int(rng.integers(1, 24))
+    block_size = int(rng.integers(1, 16))
+    max_blocks = int(rng.integers(1, 12))
+    ops = random_ops(rng, 120, n_rids=6,
+                     max_tokens=(max_blocks + 2) * block_size)
+    run_ops(ops, num_blocks, block_size, max_blocks)
+
+
+def test_allocator_hypothesis():
+    """The same invariant checker under hypothesis-generated op
+    sequences (dev dependency; the seeded suite above always runs)."""
+    pytest.importorskip("hypothesis", reason="dev dependency "
+                        "(pip install -r requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(st.sampled_from(["ensure", "release"]),
+                   st.integers(0, 5), st.integers(0, 40))
+
+    @settings(max_examples=60, deadline=None)
+    @given(num_blocks=st.integers(1, 20), block_size=st.integers(1, 8),
+           max_blocks=st.integers(1, 8), ops=st.lists(op, max_size=60))
+    def inner(num_blocks, block_size, max_blocks, ops):
+        run_ops(ops, num_blocks, block_size, max_blocks)
+
+    inner()
+
+
+def test_alloc_all_or_nothing_and_counters():
+    pool = BlockPool(4, 8)
+    got = pool.alloc(3)
+    assert got is not None and len(got) == 3
+    assert pool.alloc(2) is None            # only 1 free: refused whole
+    assert pool.num_free == 1 and pool.failed_allocs == 1
+    assert pool.peak_used == 3
+    pool.free(got)
+    assert pool.num_free == 4 and pool.peak_used == 3
+
+
+def test_double_free_and_alien_free_refused():
+    pool = BlockPool(4, 8)
+    got = pool.alloc(2)
+    pool.free(got)
+    with pytest.raises(ValueError):
+        pool.free([got[0]])                 # already free
+    with pytest.raises(ValueError):
+        pool.free([99])                     # not a pool block
+
+
+def test_ensure_beyond_table_capacity_raises():
+    pool = BlockPool(16, 8)
+    tables = BlockTables(pool, max_blocks=2)
+    assert tables.max_context == 16
+    with pytest.raises(ValueError):
+        tables.ensure(0, 17)
+    assert pool.num_free == 16              # nothing leaked
+
+
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(0, 8) == 0
+    assert blocks_for_tokens(1, 8) == 1
+    assert blocks_for_tokens(8, 8) == 1
+    assert blocks_for_tokens(9, 8) == 2
+
+
+# ---------------------------------------------------------------------------
+# prefill chunk planning
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("clause", ["static", "dynamic", "guided,2"])
+@pytest.mark.parametrize("n", [1, 7, 16, 53])
+def test_plan_prefill_chunks_tiles_the_prompt(clause, n):
+    sizes = plan_prefill_chunks(clause, n, max_chunk=16)
+    assert sum(sizes) == n
+    assert all(1 <= s <= 16 for s in sizes)
+
+
+def test_plan_prefill_chunks_follows_the_clause():
+    # static: one burst, capped at max_chunk -> equal-ish large chunks
+    assert plan_prefill_chunks("static", 48, max_chunk=16) == [16, 16, 16]
+    # dynamic,1: minimal chunks
+    assert plan_prefill_chunks("dynamic,1", 5, max_chunk=16) == [1] * 5
+    assert plan_prefill_chunks("static", 0, max_chunk=16) == []
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence (module-scoped loops: compile once, swap schedulers)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen2.5-3b")
+
+
+@pytest.fixture(scope="module")
+def dense_loop(cfg):
+    return ServeLoop(cfg, slots=3, max_len=MAX_LEN, batched=True,
+                     decode_steps=2)
+
+
+@pytest.fixture(scope="module")
+def paged_loop(cfg):
+    # pool >= N_REQUESTS * max_context: no pressure, pure equivalence
+    return PagedServeLoop(cfg, num_blocks=64, block_size=BLOCK_SIZE,
+                          max_context=MAX_LEN, concurrency=8,
+                          decode_steps=2, prefill_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def tight_loop(cfg):
+    # pool far below the working set: decode growth MUST preempt
+    return PagedServeLoop(cfg, num_blocks=10, block_size=BLOCK_SIZE,
+                          max_context=MAX_LEN, concurrency=8,
+                          decode_steps=2, prefill_chunk=16)
+
+
+def run_loop(loop, scheduler, requests):
+    from repro.core import LoopHistory
+    loop.scheduler = scheduler
+    loop.history = LoopHistory()
+    return loop.run(requests)
+
+
+@pytest.mark.parametrize("clause", ["static", "guided,2", "awf"])
+def test_paged_dense_token_equivalence(clause, dense_loop, paged_loop):
+    """The tentpole guarantee: where both engines fit the working set,
+    the paged engine serves token-for-token the same generations as the
+    dense batched engine, under every schedule family."""
+    out_d = run_loop(dense_loop, clause, make_requests(42))
+    out_p = run_loop(paged_loop, clause, make_requests(42))
+    assert sorted(out_p) == list(range(N_REQUESTS))
+    assert out_p == out_d
+    assert paged_loop.last_stats["preemptions"] == 0
+    assert paged_loop.pool.used == 0        # every block returned
+
+
+def test_preemption_preserves_tokens(dense_loop, tight_loop):
+    """Memory pressure forces eviction; the evicted request re-prefills
+    its generated prefix on readmission and must resume EXACTLY where an
+    uninterrupted (dense) run would be — token-for-token."""
+    reqs = make_requests(7, lo=8, hi=32, max_new=12)
+    out_d = run_loop(dense_loop, "dynamic", make_requests(7, lo=8, hi=32,
+                                                          max_new=12))
+    out_p = run_loop(tight_loop, "dynamic", reqs)
+    assert tight_loop.last_stats["preemptions"] >= 1
+    assert out_p == out_d
+    assert any(r.preemptions > 0 for r in reqs)
+    # preemption inflates the victim's e2e latency, never its tokens
+    assert tight_loop.pool.used == 0
+
+
+def test_prefill_compiles_bounded_by_buckets(cfg):
+    """Chunked-prefill bucketing regression: a trace of many DISTINCT
+    prompt lengths (and UDS chunk sizes) compiles one prefill program per
+    bucket, not per length.  With max_chunk=16 the only padded widths are
+    8 and 16."""
+    loop = PagedServeLoop(cfg, num_blocks=64, block_size=BLOCK_SIZE,
+                          max_context=MAX_LEN, concurrency=8,
+                          decode_steps=4, prefill_chunk=16)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=1 + i * 3).astype(np.int32),
+                    max_new=2)
+            for i in range(12)]            # lengths 1, 4, 7, ..., 34
+    out = loop.run(reqs)
+    assert len(out) == 12
+    buckets = {bucket_length(s, 16) for s in range(1, 17)}
+    assert loop.prefill_compiles <= len(buckets)
+    assert loop.prefill_compiles <= 2
+
+
+def test_paged_observability(cfg):
+    """Every request carries its lifecycle stamps and last_stats carries
+    the latency percentiles, pool watermarks and preemption count."""
+    loop = PagedServeLoop(cfg, num_blocks=64, block_size=BLOCK_SIZE,
+                          max_context=MAX_LEN, concurrency=8,
+                          decode_steps=2, prefill_chunk=16)
+    reqs = make_requests(11)
+    loop.run(reqs)
+    for r in reqs:
+        assert r.t_arrive is not None
+        assert r.t_arrive <= r.t_admit <= r.t_first <= r.t_finish
+    s = loop.last_stats
+    for key in ("queue_p50_s", "queue_p99_s", "admission_p50_s",
+                "admission_p99_s", "e2e_p99_s"):
+        assert s[key] is not None and s[key] >= 0.0
+    assert 0.0 <= s["kv_util_mean"] <= 1.0
+    assert s["requests_finished"] == N_REQUESTS
+    assert s["preemptions"] == 0
+    assert 0 < s["peak_blocks_used"] <= 64
+    assert s["peak_concurrency"] >= 1
+    assert s["prefill_compiles"] >= 1
+    # the serve_paged loop telemetry flushed into the history
+    assert loop.measured_epoch() >= 1
+
+
+def test_dense_loop_gains_meter(dense_loop):
+    out = run_loop(dense_loop, "static", make_requests(13))
+    assert len(out) == N_REQUESTS
+    meter = dense_loop.last_stats["serve_meter"]
+    assert meter["requests_finished"] == N_REQUESTS
+    assert meter["queue_p99_s"] is not None
+    assert meter["admission_p99_s"] is not None
+    assert meter["preemptions"] == 0
+
+
+def test_truncation_matches_dense(cfg, dense_loop, paged_loop):
+    """A request whose prompt + max_new overflows max_context is admitted
+    with its budget clamped and REPORTED truncated — same rule, same
+    tokens as the dense engine."""
+    def mk():
+        rng = np.random.default_rng(5)
+        return [Request(rid=0,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=60).astype(np.int32),
+                        max_new=20)]
+    out_d = run_loop(dense_loop, "static", mk())
+    reqs = mk()
+    out_p = run_loop(paged_loop, "static", reqs)
+    assert out_p == out_d
+    assert reqs[0].truncated and reqs[0].budget == MAX_LEN - 60 + 1
+    assert paged_loop.last_stats["truncated"] == [0]
+
+
+def test_prompt_exceeding_max_context_refused(cfg, paged_loop):
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=MAX_LEN + 1).astype(np.int32), max_new=2)
+    with pytest.raises(ValueError, match="exceeds max_context"):
+        run_loop(paged_loop, "static", [req])
+
+
+def test_pool_smaller_than_one_prompt_refused(cfg):
+    loop = PagedServeLoop(cfg, num_blocks=2, block_size=BLOCK_SIZE,
+                          max_context=MAX_LEN, concurrency=4,
+                          decode_steps=1, prefill_chunk=16)
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=40).astype(np.int32), max_new=2)
+    with pytest.raises(ValueError, match="raise num_blocks"):
+        loop.run([req])
+
+
+def test_ssm_family_has_no_paged_path():
+    from repro.models import get_model
+    cfg = get_smoke_config("rwkv6-3b")
+    assert get_model(cfg).fused_paged_decode is None
+    with pytest.raises(ValueError, match="no paged-KV path"):
+        PagedServeLoop(cfg, num_blocks=8, block_size=8, max_context=64)
+
+
+# ---------------------------------------------------------------------------
+# shared trace generator (tests and benchmarks must agree on the workload)
+# ---------------------------------------------------------------------------
+def test_mixed_trace_deterministic_and_mixed():
+    a = make_mixed_trace(40, vocab_size=256, seed=9)
+    b = make_mixed_trace(40, vocab_size=256, seed=9)
+    assert len(a) == 40
+    assert all(np.array_equal(x.prompt, y.prompt) and x.max_new == y.max_new
+               for x, y in zip(a, b))
+    longs = [t for i, t in enumerate(a) if i % 4 == 0]
+    shorts = [t for i, t in enumerate(a) if i % 4 != 0]
+    assert min(t.prompt.size for t in longs) > max(
+        t.prompt.size for t in shorts)
+    c = make_mixed_trace(40, vocab_size=256, seed=10)
+    assert any(not np.array_equal(x.prompt, y.prompt) for x, y in zip(a, c))
