@@ -62,6 +62,16 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --hosts 4 \
 	    --straggler-scheduler auto
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 4 --batch 8 --seq-len 64 --hosts 4 --elastic \
+	    --kill-hosts 2,3 --kill-at 2
+	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
+	    --requests 8 --scheduler dynamic --max-new 6 --paged-kv \
+	    --num-blocks 48 --block-size 8 --max-concurrency 8 \
+	    --kill-rows 3 --kill-at-dispatch 2
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) examples/fault_tolerant_train.py
 
 bench:          ## full benchmark harness (CSV stdout, JSON to benchmarks/results/)
 	$(PYTHON) benchmarks/run.py
@@ -73,6 +83,10 @@ bench-gate:     ## CI regression gates: write BENCH_*.json, fail on regression
 	$(PYTHON) benchmarks/plan_engine.py --json BENCH_plan_engine.json --gate
 	$(PYTHON) benchmarks/serve_adapt.py --json BENCH_serve.json --gate
 	$(PYTHON) benchmarks/train_straggler.py --json BENCH_train.json --gate
+	# elastic_recovery MERGES into the bench records the two lines above
+	# overwrite — it must run last
+	$(PYTHON) benchmarks/elastic_recovery.py --json-train BENCH_train.json \
+	    --json-serve BENCH_serve.json --gate
 
 deps:
 	pip install -r requirements.txt

@@ -1,6 +1,6 @@
-"""Fault-tolerance showcase: checkpoint/restart, injected failures, elastic
-downsizing, and AWF straggler mitigation — the large-scale-runnability story
-exercised end to end on CPU.
+"""Fault-tolerance showcase: checkpoint/restart, injected failures, a
+mid-run worker loss (membership replan), and AWF straggler mitigation —
+the large-scale-runnability story exercised end to end on CPU.
 
     PYTHONPATH=src python examples/fault_tolerant_train.py
 """
@@ -40,18 +40,24 @@ def main() -> None:
         return ({"params": params, "opt": opt, "step": metrics["step"]},
                 {"loss": float(metrics["loss"])})
 
-    injector = FailureInjector({8: "transient", 17: "device"})
+    # step 8: flaky (restore + continue); step 17: hosts 2 and 3 are GONE
+    # — a membership event: restore, resize the team, requeue their work
+    injector = FailureInjector({8: "transient", 17: "host_loss:2,3"})
     with tempfile.TemporaryDirectory() as ckpt_dir:
         sup = TrainSupervisor(make_step, init_state, ckpt_dir,
                               ckpt_every=5, injector=injector, num_hosts=4,
-                              on_elastic=lambda n: print(
-                                  f"  [elastic] downsizing to {n} hosts"))
+                              on_membership=lambda ev: print(
+                                  f"  [membership] {ev.kind}: "
+                                  f"{ev.old_size} -> {ev.new_size} hosts "
+                                  f"(lost {list(ev.lost)})"))
         report = sup.run(25)
 
     print(f"steps completed : {report.steps_completed}")
     print(f"restarts        : {report.restarts} "
           f"(injected at {injector.fired})")
     print(f"restored from   : steps {report.restores}")
+    print(f"team            : 4 -> {report.final_hosts} hosts "
+          f"({len(report.membership_events)} membership event)")
     print(f"loss            : {report.losses[0]:.3f} -> "
           f"{report.losses[-1]:.3f}")
 

@@ -35,7 +35,8 @@ from repro.core.interface import (
     three_op_from_six,
 )
 from repro.core.history import ChunkRecord, InvocationRecord, LoopHistory
-from repro.core.telemetry import ChunkLedger, LoopTelemetry, ServeMeter
+from repro.core.telemetry import (ChunkLedger, LoopTelemetry,
+                                  MembershipEvent, ServeMeter)
 from repro.core.plan import PlanProvenance, SchedulePlan
 from repro.core.engine import (
     PlanEngine,
@@ -61,7 +62,7 @@ __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
     "SixOpSchedule", "three_op_from_six", "chunks_cover",
     "ChunkRecord", "InvocationRecord", "LoopHistory",
-    "ChunkLedger", "LoopTelemetry", "ServeMeter",
+    "ChunkLedger", "LoopTelemetry", "MembershipEvent", "ServeMeter",
     "PlanProvenance", "SchedulePlan",
     "PlanEngine", "ScheduleStream", "get_engine", "set_engine",
     "LoopResult", "execute_plan", "run_loop", "simulate_loop",

@@ -624,6 +624,56 @@ class PlanEngine:
                 self.stats.evictions += 1
         return plan
 
+    # --------------------------------------------------- membership requeue
+    def requeue_plan(self, plan: SchedulePlan, sched: SpecLike, *,
+                     lost_workers: Sequence[int], num_workers: int,
+                     completed_chunks: Sequence[int] = (),
+                     history: Optional[LoopHistory] = None,
+                     weights: Optional[Sequence[float]] = None,
+                     loop_id: Optional[str] = None
+                     ) -> tuple:
+        """Replan a dead team member's unfinished work over the survivors.
+
+        ``plan`` is the schedule that was executing when the membership
+        loss landed; ``lost_workers`` are its (old-team) worker ids that
+        left, ``completed_chunks`` the dequeue-order chunk indices already
+        finished.  The stranded iterations are recovered from the plan's
+        chunk→worker provenance (:meth:`SchedulePlan.unfinished_iters`)
+        and planned as a fresh virtual loop ``[0, n_unfinished)`` over the
+        ``num_workers``-strong surviving team under ``sched`` — the
+        paper's contract, literally: re-run ``init`` + ``enqueue`` for the
+        current team.
+
+        Returns ``(new_plan, iter_map)`` where ``iter_map[v]`` is the
+        ORIGINAL iteration index that virtual iteration ``v`` stands for
+        (so ``new_plan``'s coverage invariant holds over the virtual
+        range while callers still know exactly which real work moved
+        where).  No iteration is silently lost:
+        ``len(iter_map) == sum of the lost workers' unfinished sizes``.
+        """
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        iters = plan.unfinished_iters(lost_workers, completed_chunks)
+        lid = loop_id or f"{plan.loop.loop_id}/requeue"
+        loop = LoopSpec(lb=0, ub=int(len(iters)), num_workers=num_workers,
+                        loop_id=lid)
+        if not len(iters):
+            empty = np.empty(0, np.int64)
+            return (SchedulePlan(
+                loop=loop, starts=empty, sizes=empty, workers=empty,
+                wave_ids=empty,
+                provenance=PlanProvenance(scheduler="requeue",
+                                          source="requeue")), iters)
+        sched = resolve(sched)
+        if hasattr(sched, "select"):
+            # schedule(auto): reselect against the post-churn history so
+            # the requeue plan uses the clause auto now favors
+            sched.select(history if history is not None else LoopHistory(),
+                         loop, weights=list(weights) if weights else None)
+        new_plan = self.plan(sched, loop, history=history,
+                             weights=list(weights) if weights else None)
+        return new_plan, iters
+
     # -------------------------------------------------------------- cache
     def _cache_key(self, sched: Any,
                    ctx: SchedulerContext) -> Optional[tuple]:

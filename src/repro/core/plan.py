@@ -216,6 +216,53 @@ class SchedulePlan:
         return np.bincount(self.workers,
                            minlength=self.loop.num_workers).astype(np.int64)
 
+    # ------------------------------------------------- membership requeue
+    def owned_chunk_ids(self, workers: Sequence[int]) -> np.ndarray:
+        """Dequeue-order chunk indices owned by ``workers`` — the plan's
+        chunk→worker provenance, queryable (what a membership-loss
+        requeue starts from)."""
+        lost = np.asarray(sorted({int(w) for w in workers}), np.int64)
+        return np.flatnonzero(np.isin(self.workers, lost)).astype(np.int64)
+
+    def unfinished_iters(self, lost_workers: Sequence[int],
+                         completed_chunks: Sequence[int] = ()
+                         ) -> np.ndarray:
+        """Original iteration indices stranded by a membership loss:
+        every iteration of a chunk owned by ``lost_workers`` whose chunk
+        index is NOT in ``completed_chunks`` — sorted ascending.  This is
+        the requeue payload: chunk→worker ownership is plan provenance,
+        so the dead workers' unfinished work is recoverable without any
+        cooperation from the workers themselves."""
+        ids = self.owned_chunk_ids(lost_workers)
+        if len(ids) and len(completed_chunks):
+            done = np.asarray(sorted({int(i) for i in completed_chunks}),
+                              np.int64)
+            ids = ids[~np.isin(ids, done)]
+        if not len(ids):
+            return np.empty(0, np.int64)
+        starts = self.starts[ids]
+        sizes = self.sizes[ids]
+        offsets = np.cumsum(sizes) - sizes
+        total = int(sizes.sum())
+        out = (np.repeat(starts, sizes)
+               + np.arange(total) - np.repeat(offsets, sizes))
+        return np.sort(out).astype(np.int64)
+
+    def unfinished_ranges(self, lost_workers: Sequence[int],
+                          completed_chunks: Sequence[int] = ()
+                          ) -> List[tuple]:
+        """:meth:`unfinished_iters` merged into maximal contiguous
+        ``(start, stop)`` ranges — the human-auditable form a supervisor
+        report carries ("host 3 died owning [512, 768))")."""
+        its = self.unfinished_iters(lost_workers, completed_chunks)
+        if not len(its):
+            return []
+        breaks = np.flatnonzero(np.diff(its) != 1)
+        starts = np.concatenate([[0], breaks + 1])
+        stops = np.concatenate([breaks, [len(its) - 1]])
+        return [(int(its[a]), int(its[b]) + 1)
+                for a, b in zip(starts, stops)]
+
     def padded_worker_table(self, pad_chunks: Optional[int] = None
                             ) -> Dict[str, np.ndarray]:
         """Dense (P, max_chunks) tables padded with size-0 chunks — the SPMD

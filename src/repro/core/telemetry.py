@@ -42,12 +42,50 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.history import ChunkRecord, LoopHistory
 from repro.core.interface import Chunk
 
-__all__ = ["ChunkLedger", "LoopTelemetry", "ServeMeter"]
+__all__ = ["ChunkLedger", "LoopTelemetry", "MembershipEvent", "ServeMeter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """A team-size change — worker loss or join — as a scheduling event.
+
+    The paper's contract (start = init + enqueue for the *current* team)
+    makes membership change just another replan trigger: the event is
+    recorded into the loop's history as a measured sentinel invocation
+    (:meth:`LoopTelemetry.record_membership`), which bumps the measured
+    epoch that cached adaptive plans key on, so the next ``plan()`` for
+    the loop re-runs ``init`` over the new team size.  ``lost`` /
+    ``joined`` carry OLD-team worker ids; after a loss the surviving
+    team is renumbered densely ``0..new_size-1``.
+    """
+
+    kind: str                       # "loss" | "join"
+    old_size: int
+    new_size: int
+    lost: Tuple[int, ...] = ()      # old-team ids that left
+    joined: Tuple[int, ...] = ()    # new-team ids that joined
+    step: Optional[int] = None      # loop step/dispatch the event landed on
+
+    def __post_init__(self):
+        if self.kind not in ("loss", "join"):
+            raise ValueError(f"kind must be 'loss' or 'join', "
+                             f"got {self.kind!r}")
+        if self.old_size < 1 or self.new_size < 1:
+            raise ValueError(f"team sizes must be >= 1, got "
+                             f"{self.old_size}->{self.new_size}")
+
+    @property
+    def tag(self) -> str:
+        """Invocation provenance string.  Deliberately NOT a schedule
+        clause: ``schedule(auto)`` scores only invocations tagged with
+        candidate clauses, so membership sentinels never pollute its
+        portfolio statistics."""
+        return f"membership({self.old_size}->{self.new_size})"
 
 
 def _percentile(xs: List[float], q: float) -> Optional[float]:
@@ -209,6 +247,33 @@ class LoopTelemetry:
         if self.history is None or self.loop_id is None:
             return 0
         return self.history.measured_invocations(self.loop_id)
+
+    def record_membership(self, event: MembershipEvent) -> int:
+        """Record a team-size change and return the new measured epoch.
+
+        Writes one *measured* zero-size sentinel invocation (worker -1,
+        elapsed 0.0) tagged with the event directly into the history —
+        the same cache-invalidation edge as :meth:`flush`, so every
+        cached adaptive plan for this loop misses on the next ``plan()``
+        and replans over the new team.  The sentinel is invisible to the
+        rate statistics (``worker_rates`` and the straggler mitigator
+        both skip size-0 chunks) and survives history serialization
+        (``from_json`` re-derives ``measured`` from the elapsed field).
+        Also resizes the summary's team width to the new size.
+        """
+        self.num_workers = event.new_size
+        if self.history is not None and self.loop_id is not None:
+            self.history.open_invocation(self.loop_id, scheduler=event.tag)
+            self.history.record(self.loop_id,
+                                ChunkRecord(worker=-1, start=0, stop=0,
+                                            elapsed=0.0))
+            # close the sentinel invocation: ``history.record`` appends to
+            # the LAST open invocation, so without a fresh boundary the
+            # next flush would dump real chunks into the membership-tagged
+            # invocation (polluting its provenance and eating the epoch
+            # bump those chunks should have produced)
+            self.history.open_invocation(self.loop_id)
+        return self.epoch()
 
     # ------------------------------------------------- ledger (stopwatch)
     def begin(self, worker: int, chunk: Chunk) -> ChunkLedger:

@@ -82,7 +82,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
-                        SchedulerContext, ServeMeter, get_engine)
+                        MembershipEvent, SchedulerContext, ServeMeter,
+                        get_engine)
 from repro.core.spec import SpecLike, describe, resolve
 from repro.launch.steps import (make_fused_serve_step, make_paged_prefill_step,
                                 make_paged_serve_step, make_prefill_step,
@@ -503,7 +504,9 @@ class PagedServeLoop:
                  scheduler: SpecLike = "dynamic", seed: int = 0,
                  history: Optional[LoopHistory] = None,
                  decode_steps: int = 1, eos_id: Optional[int] = None,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32,
+                 kill_rows: int = 0,
+                 kill_at_dispatch: Optional[int] = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         if self.model.fused_paged_decode is None:
@@ -521,6 +524,13 @@ class PagedServeLoop:
                 f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if concurrency < 1:
             raise ValueError(f"concurrency must be >= 1, got {concurrency}")
+        if kill_rows < 0 or kill_rows >= concurrency:
+            raise ValueError(
+                f"kill_rows must leave at least one live dispatch row "
+                f"(got kill_rows={kill_rows}, concurrency={concurrency})")
+        if (kill_rows > 0) != (kill_at_dispatch is not None):
+            raise ValueError(
+                "kill_rows and kill_at_dispatch must be given together")
         self.params, _ = self.model.init(jax.random.PRNGKey(seed),
                                          jnp.float32)
         self.scheduler = scheduler
@@ -550,6 +560,18 @@ class PagedServeLoop:
         self._dispatches = 0
         self._decoded = 0
         self._pf_dispatches = 0
+        # elastic slot-set shrink: an injected worker kill marks the top
+        # kill_rows dispatch rows dead at the kill_at_dispatch-th decode
+        # dispatch — their in-flight requests drain through the normal
+        # evict-requeue machinery and readmit on surviving rows
+        self._kill_rows = kill_rows
+        self._kill_at = kill_at_dispatch
+        self._kill_fired = False
+        self._dead_rows: set = set()
+        self.membership_events: List[MembershipEvent] = []
+        # per-dispatch measurement log (elastic_recovery bench splits it
+        # at the kill dispatch): wall time, produced tokens, live rows
+        self.dispatch_log: List[Dict[str, Any]] = []
 
     @property
     def mode(self) -> str:
@@ -594,6 +616,7 @@ class PagedServeLoop:
         self._dispatches = 0
         self._decoded = 0
         self._pf_dispatches = 0
+        self.dispatch_log = []
         C, W = self.concurrency, self.max_blocks_per_seq
         eos_arr = jnp.asarray(-1 if self.eos_id is None else self.eos_id,
                               jnp.int32)
@@ -629,9 +652,44 @@ class PagedServeLoop:
             progressed = False
             ran_prefill = False
 
+            # ---- injected worker kill: a slot-set shrink is a membership
+            # event.  The doomed rows' in-flight requests drain through
+            # the evict-requeue machinery (blocks freed, front of the
+            # line) and readmit on surviving rows; greedy decode makes
+            # every resumed request token-for-token identical to an
+            # unkilled run.  The fused dispatch keeps its compiled
+            # (C, W) shape — dead rows just stay mask-gated off.
+            if (self._kill_at is not None and not self._kill_fired
+                    and self._dispatches >= self._kill_at):
+                self._kill_fired = True
+                doomed = set(range(C - self._kill_rows, C))
+                self._dead_rows |= doomed
+                # evict newest-first so appendleft leaves the requeue in
+                # admit order (oldest victim readmits first)
+                for r in sorted((r for r in doomed if r in self.active),
+                                key=lambda r: self.active[r].admit_seq,
+                                reverse=True):
+                    rq = self.active.pop(r)
+                    self.tables.release(rq.rid)
+                    rq.preemptions += 1
+                    meter.preempt(rq.rid)
+                    requeue.appendleft(rq)
+                meter.blocks(self.pool.used, self.pool.num_blocks,
+                             time.perf_counter())
+                event = MembershipEvent(
+                    kind="loss", old_size=C,
+                    new_size=C - len(self._dead_rows),
+                    lost=tuple(sorted(doomed)), step=self._dispatches)
+                telemetry.record_membership(event)
+                # the serve loop's telemetry worker is the fused
+                # dispatcher, not a row — keep the summary single-worker
+                telemetry.num_workers = 1
+                self.membership_events.append(event)
+
             # ---- admission: memory first (blocks for the prompt), then a
             # dispatch row; preempted requests readmit ahead of the queue
-            if pf is None and (requeue or queue) and len(self.active) < C:
+            if (pf is None and (requeue or queue)
+                    and len(self.active) < C - len(self._dead_rows)):
                 src = requeue if requeue else queue
                 req = src[0]
                 if req.budget == 0:    # first admission: fix the budget
@@ -712,7 +770,8 @@ class PagedServeLoop:
                         finish(req)
                     else:
                         row = min(r for r in range(C)
-                                  if r not in self.active)
+                                  if r not in self.active
+                                  and r not in self._dead_rows)
                         self.active[row] = req
                         peak_conc = max(peak_conc, len(self.active))
 
@@ -767,10 +826,14 @@ class PagedServeLoop:
                 toks = np.asarray(toks)         # sync: true dispatch time
                 rem_out = np.asarray(rem_out)
                 dt = time.perf_counter() - t0
+                produced_total = int(rem[mask].sum() - rem_out[mask].sum())
                 telemetry.record_chunk(0, self._dispatches,
                                        self._dispatches + 1, dt,
-                                       tokens=int(rem[mask].sum()
-                                                  - rem_out[mask].sum()))
+                                       tokens=produced_total)
+                self.dispatch_log.append(
+                    {"dispatch": self._dispatches, "dt_s": dt,
+                     "tokens": produced_total, "rows": len(rows),
+                     "live_rows": C - len(self._dead_rows)})
                 self._dispatches += 1
                 progressed = True
                 for r in rows:
@@ -807,6 +870,12 @@ class PagedServeLoop:
         self.last_stats["block_size"] = self.block_size
         self.last_stats["peak_blocks_used"] = self.pool.peak_used
         self.last_stats["failed_allocs"] = self.pool.failed_allocs
+        self.last_stats["dead_rows"] = sorted(self._dead_rows)
+        self.last_stats["live_rows"] = C - len(self._dead_rows)
+        self.last_stats["membership_events"] = [
+            {"kind": e.kind, "old_size": e.old_size, "new_size": e.new_size,
+             "lost": list(e.lost), "at_dispatch": e.step}
+            for e in self.membership_events]
         return results
 
 
@@ -855,6 +924,13 @@ def main() -> None:
     ap.add_argument("--max-concurrency", type=int, default=8,
                     help="paged mode: fused dispatch batch width (compiled "
                          "once); memory admission happens first")
+    ap.add_argument("--kill-rows", type=int, default=0,
+                    help="paged mode: injected worker kill — mark this "
+                         "many dispatch rows dead mid-run (drain-and-"
+                         "readmit; requires --kill-at-dispatch)")
+    ap.add_argument("--kill-at-dispatch", type=int, default=None,
+                    help="paged mode: decode dispatch count at which the "
+                         "injected kill fires")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -873,7 +949,9 @@ def main() -> None:
                               scheduler=args.scheduler,
                               decode_steps=args.decode_steps,
                               eos_id=args.eos_id,
-                              prefill_chunk=args.prefill_chunk)
+                              prefill_chunk=args.prefill_chunk,
+                              kill_rows=args.kill_rows,
+                              kill_at_dispatch=args.kill_at_dispatch)
     else:
         loop = ServeLoop(cfg, slots=args.slots, scheduler=args.scheduler,
                          batched=args.batched,
@@ -894,6 +972,11 @@ def main() -> None:
               f"{s.get('preemptions')} preemptions, "
               f"{s.get('prefill_compiles')} prefill compiles, "
               f"measured epoch {loop.measured_epoch()}")
+        for ev in loop.membership_events:
+            print(f"membership: {ev.kind} at dispatch {ev.step} — "
+                  f"{ev.old_size} -> {ev.new_size} rows "
+                  f"(lost {list(ev.lost)}); in-flight requests drained "
+                  f"and readmitted on the survivors")
     else:
         print(f"served {len(out)} requests, {toks} tokens in {dt:.2f}s "
               f"({toks/dt:.1f} tok/s, {loop.mode} decode x{loop.decode_steps}) "

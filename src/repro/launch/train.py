@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import Chunk, LoopHistory, LoopTelemetry
+from repro.core import (Chunk, LoopHistory, LoopTelemetry, MembershipEvent,
+                        get_engine)
 from repro.core.spec import SpecLike, resolve
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import (batch_shardings, make_host_mesh, make_mesh,
@@ -65,7 +66,10 @@ class TrainLoop:
                  data_sigma: float = 1.0, hosts: int = 1,
                  straggler_scheduler: SpecLike = "wf2",
                  min_host_share: float = 0.1,
-                 host_skew: Optional[Sequence[float]] = None):
+                 host_skew: Optional[Sequence[float]] = None,
+                 elastic: bool = False,
+                 kill_hosts: Optional[Sequence[int]] = None,
+                 kill_at_step: Optional[int] = None):
         self.cfg = cfg
         self.batch, self.seq_len = batch, seq_len
         self.model = get_model(cfg)
@@ -144,8 +148,29 @@ class TrainLoop:
                 while model_par * 2 <= devs and model_par < 4:
                     model_par *= 2
                 mesh_shape = (max(devs // model_par, 1), model_par)
+            else:
+                model_par = mesh_shape[-1]
             self.mesh = make_mesh(mesh_shape, ("data", "model"))
+        self.model_par = model_par
         self.rules = rules_for(cfg, self.mesh, "train", batch)
+        # elastic scheduling: membership change (worker loss) becomes a
+        # replan event — see apply_membership().  The original clause
+        # strings are kept so the active specs can be RE-RESOLVED over the
+        # new team size after churn (auto reselects from fresh telemetry).
+        self.elastic = bool(elastic)
+        self._scheduler_clause = scheduler
+        self._straggler_clause = straggler_scheduler
+        self.membership_events: list = []
+        self.requeue_audits: list = []
+        self._kill_hosts = (tuple(int(h) for h in kill_hosts)
+                            if kill_hosts else None)
+        self._kill_at = kill_at_step
+        if self._kill_hosts is not None and not self.elastic:
+            raise ValueError("kill_hosts injection requires elastic=True "
+                             "(--elastic)")
+        self._pending_unsplit = None
+        self._churn_shares: Optional[np.ndarray] = None
+        self.step_log: list = []    # per-step {step, dt_s, tokens, hosts}
 
         if cfg.name.startswith("minicpm"):
             sched_fn = wsd_schedule(lr, 20, 10_000, 1_000)   # the WSD paper
@@ -228,6 +253,11 @@ class TrainLoop:
                            (self.batch, 1))
             batch["positions_3d"] = jnp.stack([pos, pos, pos])
         if self.hosts > 1:
+            # the UNSPLIT batch + host-side labels are held until the next
+            # step completes: a membership change mid-step re-splits this
+            # exact batch over the survivors (no step dropped at churn)
+            if self.elastic:
+                self._pending_unsplit = (dict(batch), packed.labels)
             # plan: AWF token shares from the measured per-host rates (the
             # engine's plan cache makes this ~µs in steady state; each
             # observe_step's flush bumps the measured epoch, so changed
@@ -239,6 +269,134 @@ class TrainLoop:
             batch, self._host_tokens = split_batch_by_shares(
                 batch, shares, self.hosts, labels_np=packed.labels)
             self.last_shares = shares
+        return batch
+
+    # ------------------------------------------------------- membership
+    def apply_membership(self, lost: Sequence[int]) -> MembershipEvent:
+        """Worker loss as a replan event: rebuild the spine for the
+        survivors (requires ``elastic=True``).
+
+        The full plan → execute → measure → replan treatment of a kill:
+
+        1. **requeue** — if a scheduler-produced share plan was live, the
+           dead hosts' token budgets are recovered from its chunk→worker
+           provenance and replanned over the surviving team
+           (``PlanEngine.requeue_plan``); survivors keep their own
+           budgets.  Otherwise (uniform shares) the resized mitigator's
+           cold-start shares are exactly uniform over the survivors.
+           Either way the post-churn shares sum to the full token budget
+           — no tokens silently lost.
+        2. **mesh** — ``plan_degraded_mesh`` picks the surviving shape
+           (warning about any idled devices), params/optimizer state are
+           re-sharded onto the new ``("host", "model")`` mesh, and the
+           jitted step recompiles against the new input shardings.
+        3. **measure/replan** — a :class:`MembershipEvent` sentinel bumps
+           the ``train_step`` measured epoch (cached adaptive plans
+           invalidate), the mitigator resizes (rate windows floor at the
+           churn), and the schedule clauses re-resolve over the new team
+           size, so ``auto`` reselects from post-churn telemetry.
+
+        Survivors are renumbered densely ``0..new_hosts-1`` in old-id
+        order; the held unsplit batch (if any) is re-split by
+        ``_resplit_pending`` so the in-flight step runs on the survivors.
+        """
+        from repro.runtime.elastic import plan_degraded_mesh
+        if not self.elastic:
+            raise RuntimeError("membership change requires elastic=True "
+                               "(--elastic)")
+        lost = sorted({int(h) for h in lost})
+        if not lost:
+            raise ValueError("no hosts named in the membership change")
+        bad = [h for h in lost if not 0 <= h < self.hosts]
+        if bad:
+            raise ValueError(f"lost hosts {bad} outside the current team "
+                             f"0..{self.hosts - 1}")
+        survivors = [h for h in range(self.hosts) if h not in lost]
+        if not survivors:
+            raise ValueError("cannot lose every host")
+        old_hosts = self.hosts
+        shape = plan_degraded_mesh(len(survivors) * self.model_par,
+                                   self.model_par)
+        new_hosts = shape[0]
+        while new_hosts > 1 and self.batch % new_hosts:
+            new_hosts //= 2      # keep the global batch divisible
+        event = MembershipEvent(kind="loss", old_size=old_hosts,
+                                new_size=new_hosts, lost=tuple(lost),
+                                step=self.step)
+
+        # -- 1. requeue the dead hosts' unfinished token budget ---------
+        total = self.batch * self.seq_len
+        self._churn_shares = None
+        plan = self.mitigator.last_plan
+        if (plan is not None and self.last_shares is not None
+                and len(survivors) == new_hosts
+                and np.array_equal(plan.worker_iters(), self.last_shares)):
+            new_plan, iters = get_engine().requeue_plan(
+                plan, self._straggler_clause, lost_workers=lost,
+                num_workers=new_hosts, history=self.mitigator.history)
+            carried = np.asarray([self.last_shares[s] for s in survivors],
+                                 np.int64)
+            shares = carried + new_plan.worker_iters()
+            self.requeue_audits.append({
+                "step": self.step, "lost": list(lost),
+                "ranges": plan.unfinished_ranges(lost),
+                "requeued_iters": int(len(iters)),
+                "carried": carried.tolist(),
+                "shares": shares.tolist(),
+            })
+            if int(shares.sum()) != total:
+                raise AssertionError(
+                    f"requeued shares {shares.tolist()} do not cover "
+                    f"{total} tokens — membership requeue lost work")
+            self._churn_shares = shares
+
+        # -- 2. rebuild mesh + resharding for the survivors -------------
+        self.mesh = make_host_mesh(new_hosts, self.model_par)
+        self.rules = rules_for(self.cfg, self.mesh, "train", self.batch)
+        with self.mesh, axis_rules(self.mesh, self.rules):
+            pshard = shardings_for(self.specs, self.rules, self.mesh,
+                                   tree=self.params)
+            self.params = jax.device_put(self.params, pshard)
+            oshard = shardings_for(
+                opt_state_specs(self.cfg.optimizer, self.params, self.specs),
+                self.rules, self.mesh, tree=self.opt_state)
+            self.opt_state = jax.device_put(self.opt_state, oshard)
+        self.pshard, self.oshard = pshard, oshard
+        self.hosts = new_hosts
+        self.host_skew = np.asarray(
+            [self.host_skew[s] for s in survivors[:new_hosts]], float)
+        self._in_shard = None if new_hosts == 1 else "pending"
+
+        # -- 3. epoch bump + resize + re-resolve over the new team ------
+        self.telemetry.record_membership(event)
+        self.mitigator.resize(new_hosts, lost=lost, step=self.step)
+        self.pack_sched = resolve(self._scheduler_clause)
+        self.membership_events.append(event)
+        return event
+
+    def _resplit_pending(self):
+        """Re-split the held unsplit batch over the post-churn team: the
+        in-flight step survives the kill instead of being dropped.  Uses
+        the requeued shares when a plan was live (survivor budgets
+        carried, dead budgets replanned), else the resized mitigator's
+        cold-start shares (exactly uniform — the split is a no-op and
+        every real token of the step survives verbatim)."""
+        if self._pending_unsplit is None:
+            raise RuntimeError("no pending batch to re-split")
+        batch, labels_np = self._pending_unsplit
+        if self.hosts == 1:
+            self._host_tokens = np.asarray([(labels_np >= 0).sum()],
+                                           np.int64)
+            self.last_shares = np.asarray([self.batch * self.seq_len],
+                                          np.int64)
+            return batch
+        shares = self._churn_shares
+        if shares is None:
+            shares = self.mitigator.token_shares(self.batch * self.seq_len)
+        self._churn_shares = None
+        batch, self._host_tokens = split_batch_by_shares(
+            batch, shares, self.hosts, labels_np=labels_np)
+        self.last_shares = shares
         return batch
 
     def _observe_multihost(self, dt: float) -> None:
@@ -270,10 +428,22 @@ class TrainLoop:
                                      for h in range(self.hosts)})
 
     def run(self, steps: int, log_every: int = 10) -> list:
+        """One mesh context per STEP (not per run): a membership change
+        mid-run swaps ``self.mesh`` for the survivors' mesh, and the next
+        step must enter the new one."""
         losses = []
-        with self.mesh, axis_rules(self.mesh, self.rules):
-            for _ in range(steps):
-                batch = self.next_batch()
+        for _ in range(steps):
+            batch = self.next_batch()
+            if (self._kill_at is not None and self._kill_hosts is not None
+                    and self.step == self._kill_at):
+                # injected kill between batch planning and execution — the
+                # worst moment: the step's batch is already split for a
+                # team that no longer exists.  Replan + re-split; the step
+                # still runs (on the survivors), so no step is lost.
+                self._kill_at = None
+                self.apply_membership(self._kill_hosts)
+                batch = self._resplit_pending()
+            with self.mesh, axis_rules(self.mesh, self.rules):
                 if self.hosts > 1:
                     if self._in_shard == "pending":
                         self._in_shard = batch_shardings(self.mesh,
@@ -303,15 +473,18 @@ class TrainLoop:
                     self.telemetry.flush()
                     self.mitigator.observe_step(
                         {0: dt}, host_tokens={0: max(tokens, 1)})
-                losses.append(loss)
-                self.step += 1
-                if self.ckpt and self.step % 10 == 0:
-                    self.ckpt.save(self.step, {"params": self.params,
-                                               "opt": self.opt_state})
-                if self.step % log_every == 0:
-                    print(f"step {self.step:5d} loss {loss:.4f} "
-                          f"({dt*1e3:.0f} ms, {tokens/max(dt,1e-9):.0f} "
-                          f"tok/s)", flush=True)
+            self._pending_unsplit = None    # step survived; drop the hold
+            losses.append(loss)
+            self.step_log.append({"step": self.step, "dt_s": dt,
+                                  "tokens": tokens, "hosts": self.hosts})
+            self.step += 1
+            if self.ckpt and self.step % 10 == 0:
+                self.ckpt.save(self.step, {"params": self.params,
+                                           "opt": self.opt_state})
+            if self.step % log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms, {tokens/max(dt,1e-9):.0f} "
+                      f"tok/s)", flush=True)
         if self.ckpt:
             self.ckpt.wait()
         return losses
@@ -352,8 +525,25 @@ def main() -> None:
                          "even shares)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--elastic", action="store_true",
+                    help="treat worker loss as a replan event: on a "
+                         "membership change the loop rebuilds the mesh "
+                         "for the survivors, requeues the dead hosts' "
+                         "token budgets from plan provenance, and "
+                         "re-resolves the schedule clauses over the new "
+                         "team (see docs/SCHEDULING.md, Elastic "
+                         "scheduling)")
+    ap.add_argument("--kill-hosts", default=None,
+                    help='injected-kill hook: comma-separated host ids to '
+                         'lose at --kill-at (e.g. "2,3"); requires '
+                         "--elastic")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="step index at which the injected kill fires "
+                         "(between batch planning and execution)")
     args = ap.parse_args()
 
+    kill_hosts = ([int(h) for h in args.kill_hosts.split(",")]
+                  if args.kill_hosts else None)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     loop = TrainLoop(cfg, batch=args.batch, seq_len=args.seq_len,
                      scheduler=args.scheduler,
@@ -362,12 +552,19 @@ def main() -> None:
                      fused_microbatches=args.fused_microbatches, lr=args.lr,
                      ckpt_dir=args.ckpt_dir, hosts=args.hosts,
                      straggler_scheduler=args.straggler_scheduler,
-                     min_host_share=args.min_host_share)
+                     min_host_share=args.min_host_share,
+                     elastic=args.elastic, kill_hosts=kill_hosts,
+                     kill_at_step=args.kill_at)
     losses = loop.run(args.steps)
     if args.hosts > 1 and loop.last_shares is not None:
         frac = loop.last_shares / max(int(loop.last_shares.sum()), 1)
         print(f"host token shares: {np.round(frac, 3).tolist()} "
               f"(measured epoch {loop.mitigator.epoch()})")
+    for ev in loop.membership_events:
+        print(f"membership: {ev.kind} at step {ev.step} — "
+              f"{ev.old_size} -> {ev.new_size} hosts (lost "
+              f"{list(ev.lost)}); no step dropped, batch re-split over "
+              f"the survivors")
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

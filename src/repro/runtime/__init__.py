@@ -1,9 +1,12 @@
+from repro.core import MembershipEvent
 from repro.runtime.fault_tolerance import (
     FailureInjector,
     SupervisorReport,
     TrainSupervisor,
+    WorkerLost,
 )
-from repro.runtime.elastic import plan_degraded_mesh, rebuild
+from repro.runtime.elastic import idle_devices, plan_degraded_mesh, rebuild
 
-__all__ = ["FailureInjector", "TrainSupervisor", "SupervisorReport",
+__all__ = ["FailureInjector", "MembershipEvent", "SupervisorReport",
+           "TrainSupervisor", "WorkerLost", "idle_devices",
            "plan_degraded_mesh", "rebuild"]

@@ -7,23 +7,42 @@ device_puts with the new shardings), and re-plans all UDS schedules for
 data' workers — scheduler ``init`` is re-run with the new team size, which
 is exactly the paper's contract (start = init + enqueue for the *current*
 team).
+
+Capacity loss is never silent: a degraded shape that idles healthy devices
+(non-power-of-two survivors) or drops a requested pod axis warns with the
+exact count, so operators see what the downsize costs.
 """
 
 from __future__ import annotations
 
+import math
+import warnings
 from typing import Optional, Tuple
 
 
 from repro.launch.mesh import make_mesh
 
-__all__ = ["plan_degraded_mesh", "rebuild"]
+__all__ = ["idle_devices", "plan_degraded_mesh", "rebuild"]
+
+
+def idle_devices(healthy_devices: int, shape: Tuple[int, ...]) -> int:
+    """Healthy devices a degraded mesh shape leaves unused."""
+    return int(healthy_devices) - math.prod(shape)
 
 
 def plan_degraded_mesh(healthy_devices: int, model_parallel: int,
                        pod_axis: bool = False) -> Tuple[int, ...]:
     """Largest mesh shape (data, model) [or (pod, data, model)] that fits
     the healthy device count while preserving model-parallel degree (model
-    sharding cannot shrink without resharding weights *within* a layer)."""
+    sharding cannot shrink without resharding weights *within* a layer).
+
+    The data degree is rounded DOWN to a power of two (keeps batch
+    divisibility stable across successive downsizes); when that rounding
+    — or a remainder under ``model_parallel`` — idles healthy devices, a
+    ``RuntimeWarning`` reports exactly how many, and a ``pod_axis``
+    request that cannot be honored (fewer than 2 data shards) warns that
+    the axis was dropped instead of silently returning a 2-D shape.
+    """
     if healthy_devices < model_parallel:
         raise ValueError(
             f"{healthy_devices} healthy devices cannot sustain "
@@ -33,16 +52,31 @@ def plan_degraded_mesh(healthy_devices: int, model_parallel: int,
     d = 1
     while d * 2 <= data:
         d *= 2
-    if pod_axis and d >= 2:
-        return (2, d // 2, model_parallel)
-    return (d, model_parallel)
+    if pod_axis and d < 2:
+        warnings.warn(
+            f"pod_axis requested but only {d} data shard(s) fit "
+            f"{healthy_devices} healthy devices at "
+            f"model_parallel={model_parallel}; the pod axis was dropped",
+            RuntimeWarning, stacklevel=2)
+    shape = ((2, d // 2, model_parallel) if pod_axis and d >= 2
+             else (d, model_parallel))
+    idle = idle_devices(healthy_devices, shape)
+    if idle:
+        warnings.warn(
+            f"degraded mesh {shape} idles {idle} of {healthy_devices} "
+            f"healthy devices (data degree rounded down to the largest "
+            f"power of two, {d}, at model_parallel={model_parallel})",
+            RuntimeWarning, stacklevel=2)
+    return shape
 
 
 def rebuild(healthy_devices: int, model_parallel: int,
-            axes: Optional[Tuple[str, ...]] = None):
+            axes: Optional[Tuple[str, ...]] = None,
+            pod_axis: bool = False):
     """Mesh for the degraded fleet. Caller re-derives rules/shardings and
     re-jits steps against it (see examples/fault_tolerant_train.py)."""
-    shape = plan_degraded_mesh(healthy_devices, model_parallel)
+    shape = plan_degraded_mesh(healthy_devices, model_parallel,
+                               pod_axis=pod_axis)
     axes = axes or (("data", "model") if len(shape) == 2
                     else ("pod", "data", "model"))
     return make_mesh(shape, axes)

@@ -5,16 +5,26 @@ The supervisor owns the restart loop a 1000-node deployment needs:
   * periodic async checkpoints (train loop blocks only for device→host);
   * on failure (device loss, preemption, injected fault) — restore from the
     newest committed checkpoint and continue;
-  * on *repeated* failure of the same device set — elastic downsize: rebuild
-    the mesh with fewer data shards, reshard the checkpoint onto it, and
-    re-plan UDS work assignments for the new worker count (the scheduler's
-    ``init`` is simply re-run — paper semantics: start = init + enqueue);
+  * on **worker loss** (:class:`WorkerLost` / an injected ``host_loss``) —
+    a first-class :class:`~repro.core.MembershipEvent`: checkpoint-restore,
+    audit the dead hosts' unfinished token chunks from the mitigator's
+    last share plan (``PlanEngine.requeue_plan`` — chunk→worker ownership
+    is plan provenance, so no chunk is silently lost), resize the
+    mitigator to the surviving team, and hand the event to
+    ``on_membership`` (or the worker count to ``on_elastic``) so the
+    caller rebuilds mesh/steps via ``runtime/elastic.rebuild``;
+  * on *repeated* failure of the same device set — elastic downsize: halve
+    the team and run the same membership path (the scheduler's ``init`` is
+    simply re-run — paper semantics: start = init + enqueue);
+  * a final checkpoint at loop exit, so tail steps past the last periodic
+    save are never re-executed by a later restore;
   * straggler mitigation via AWF weights from measured per-host step times
     (sched/straggler.py).
 
 Failures are injected through ``FailureInjector`` in tests/examples — the
 supervisor logic is identical for real device errors (RuntimeError from the
-runtime surfaces the same way).
+runtime surfaces the same way, and a real control plane raises
+``WorkerLost`` when its health checks expire).
 """
 
 from __future__ import annotations
@@ -26,23 +36,54 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.core import MembershipEvent, get_engine
 from repro.sched.straggler import StragglerMitigator
 
-__all__ = ["FailureInjector", "TrainSupervisor", "SupervisorReport"]
+__all__ = ["FailureInjector", "SupervisorReport", "TrainSupervisor",
+           "WorkerLost"]
+
+
+class WorkerLost(RuntimeError):
+    """A data-parallel worker (host) left the team mid-run.
+
+    ``lost`` carries the departed hosts' (old-team) ids, or ``None`` when
+    the failure source cannot name them (the supervisor then assumes the
+    highest-id host died).
+    """
+
+    def __init__(self, message: str,
+                 lost: Optional[Tuple[int, ...]] = None):
+        super().__init__(message)
+        self.lost = tuple(lost) if lost is not None else None
 
 
 class FailureInjector:
-    """Deterministic fault schedule: fail at given steps (once each)."""
+    """Deterministic fault schedule: fail at given steps (once each).
+
+    Kinds: ``"transient"`` / ``"device"`` raise a plain RuntimeError
+    (restore-and-continue); ``"host_loss"`` raises :class:`WorkerLost`
+    (membership replan) — optionally naming the casualties, e.g.
+    ``"host_loss:2"`` or ``"host_loss:2,3"``.
+    """
 
     def __init__(self, fail_at: Dict[int, str]):
-        self.fail_at = dict(fail_at)        # step -> kind ("transient"|"device")
+        self.fail_at = dict(fail_at)        # step -> kind
         self.fired: List[int] = []
 
     def check(self, step: int) -> None:
         kind = self.fail_at.pop(step, None)
-        if kind is not None:
-            self.fired.append(step)
-            raise RuntimeError(f"injected {kind} failure at step {step}")
+        if kind is None:
+            return
+        self.fired.append(step)
+        if kind.startswith("host_loss"):
+            lost = None
+            if ":" in kind:
+                lost = tuple(int(x) for x in
+                             kind.split(":", 1)[1].split(","))
+            raise WorkerLost(
+                f"injected host loss at step {step}"
+                + (f" (hosts {list(lost)})" if lost else ""), lost=lost)
+        raise RuntimeError(f"injected {kind} failure at step {step}")
 
 
 @dataclasses.dataclass
@@ -53,6 +94,14 @@ class SupervisorReport:
     elastic_events: List[Tuple[int, int]]    # (step, new_data_shards)
     stragglers_flagged: List[int]
     losses: List[float]
+    # membership replans (worker loss / elastic downsize), in order
+    membership_events: List[MembershipEvent] = \
+        dataclasses.field(default_factory=list)
+    # per-event requeue audit: which token ranges the dead hosts owned
+    # and how they were replanned over the survivors (None entries mean
+    # no share plan was live — nothing was stranded)
+    requeued: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    final_hosts: int = 1
 
 
 class TrainSupervisor:
@@ -60,7 +109,10 @@ class TrainSupervisor:
 
     ``make_step(state, step) -> (state, metrics)`` — the compiled step;
     ``state`` is the full restorable pytree (params + opt + UDS history).
-    ``on_elastic(new_workers) -> None`` — callback to rebuild mesh/steps.
+    ``on_membership(event) -> None`` — membership-change callback (mesh +
+    step rebuild for the event's new team; preferred).
+    ``on_elastic(new_workers) -> None`` — legacy worker-count-only form,
+    used when ``on_membership`` is not given.
     """
 
     def __init__(self, make_step: Callable, init_state: Callable[[], Any],
@@ -69,6 +121,8 @@ class TrainSupervisor:
                  num_hosts: int = 1,
                  injector: Optional[FailureInjector] = None,
                  on_elastic: Optional[Callable[[int], None]] = None,
+                 on_membership: Optional[
+                     Callable[[MembershipEvent], None]] = None,
                  elastic_after_failures: int = 2):
         self.make_step = make_step
         self.init_state = init_state
@@ -78,20 +132,74 @@ class TrainSupervisor:
         self.max_restarts = max_restarts
         self.injector = injector
         self.on_elastic = on_elastic
+        self.on_membership = on_membership
         self.elastic_after_failures = elastic_after_failures
+        self.num_hosts = num_hosts
         self.mitigator = StragglerMitigator(num_hosts)
 
+    # ------------------------------------------------------------ helpers
+    def _flush_ckpt(self) -> None:
+        """Settle any in-flight checkpoint commit before acting on a
+        failure (the commit thread may itself be the thing that died)."""
+        try:
+            self.ckpt.wait()
+        except RuntimeError:
+            pass
+
+    def _requeue_audit(self, step: int, lost: Tuple[int, ...],
+                       survivors: int) -> Optional[Dict[str, Any]]:
+        """Recover the dead hosts' unfinished token chunks from the last
+        share plan's chunk→worker provenance and replan them over the
+        surviving team — the no-chunk-silently-lost audit trail.  Must
+        run BEFORE ``mitigator.resize`` (resize drops the old plan)."""
+        plan = self.mitigator.last_plan
+        if plan is None:
+            return None           # uniform/no shares live — nothing owned
+        new_plan, iters = get_engine().requeue_plan(
+            plan, self.mitigator.scheduler, lost_workers=lost,
+            num_workers=survivors, history=self.mitigator.history)
+        return {
+            "step": step,
+            "lost": list(lost),
+            "survivors": survivors,
+            "unfinished_iters": int(len(iters)),
+            "ranges": plan.unfinished_ranges(lost),
+            "requeued_per_survivor": new_plan.worker_iters().tolist(),
+        }
+
+    def _membership_change(self, step: int, lost: Tuple[int, ...],
+                           survivors: int, membership: List[MembershipEvent],
+                           requeued: List[Dict[str, Any]],
+                           elastic: List[Tuple[int, int]]) -> None:
+        """The membership replan, in order: requeue audit off the OLD
+        plan, resize the mitigator (epoch bump → every cached share plan
+        invalidates), then the rebuild callback against the new team."""
+        audit = self._requeue_audit(step, lost, survivors)
+        if audit is not None:
+            requeued.append(audit)
+        event = self.mitigator.resize(survivors, lost=lost, step=step)
+        self.num_hosts = survivors
+        membership.append(event)
+        elastic.append((step, survivors))
+        if self.on_membership is not None:
+            self.on_membership(event)
+        elif self.on_elastic is not None:
+            self.on_elastic(survivors)
+
+    # ---------------------------------------------------------------- run
     def run(self, total_steps: int) -> SupervisorReport:
         restarts = 0
         restores: List[int] = []
         elastic: List[Tuple[int, int]] = []
+        membership: List[MembershipEvent] = []
+        requeued: List[Dict[str, Any]] = []
         losses: List[float] = []
         consecutive_failures = 0
-        num_hosts = self.mitigator.num_hosts
 
         state = None
         step = 0
         steps_since_restore = 0
+        last_saved = latest_step(self.ckpt_dir)
         while step < total_steps:
             try:
                 if state is None:
@@ -118,13 +226,29 @@ class TrainSupervisor:
                     steps_since_restore += 1
                     if step % self.ckpt_every == 0:
                         self.ckpt.save(step, state)
+                        last_saved = step
                 self.ckpt.wait()
+            except WorkerLost as wl:
+                # membership change: a worker is GONE, not flaky — restore
+                # from the newest checkpoint (no step lost) and replan the
+                # whole spine over the surviving team
+                restarts += 1
+                self._flush_ckpt()
+                if restarts > self.max_restarts:
+                    raise
+                lost = tuple(sorted({int(h) for h in (wl.lost or ())
+                                     if 0 <= int(h) < self.num_hosts}))
+                if not lost:
+                    lost = (self.num_hosts - 1,)
+                survivors = max(self.num_hosts - len(lost), 1)
+                self._membership_change(step, lost, survivors,
+                                        membership, requeued, elastic)
+                consecutive_failures = 0
+                steps_since_restore = 0
+                state = None          # force restore on next iteration
             except RuntimeError:
                 restarts += 1
-                try:
-                    self.ckpt.wait()       # flush any in-flight commit
-                except RuntimeError:
-                    pass
+                self._flush_ckpt()
                 # failures count as consecutive unless real progress
                 # (>= 2 checkpoint periods) happened since the last restore
                 if steps_since_restore >= 2 * self.ckpt_every:
@@ -135,12 +259,20 @@ class TrainSupervisor:
                 if restarts > self.max_restarts:
                     raise
                 if (consecutive_failures >= self.elastic_after_failures
-                        and self.on_elastic is not None and num_hosts > 1):
-                    num_hosts //= 2
-                    self.on_elastic(num_hosts)
-                    elastic.append((step, num_hosts))
+                        and (self.on_elastic is not None
+                             or self.on_membership is not None)
+                        and self.num_hosts > 1):
+                    new_hosts = self.num_hosts // 2
+                    lost = tuple(range(new_hosts, self.num_hosts))
+                    self._membership_change(step, lost, new_hosts,
+                                            membership, requeued, elastic)
                     consecutive_failures = 0
                 state = None          # force restore on next iteration
+        # final checkpoint: without it, tail steps past the last periodic
+        # save (total_steps % ckpt_every != 0) are re-executed by ANY
+        # subsequent restore of this directory
+        if state is not None and step > 0 and last_saved != step:
+            self.ckpt.save(step, state)
         self.ckpt.wait()
         return SupervisorReport(
             steps_completed=step,
@@ -149,4 +281,7 @@ class TrainSupervisor:
             elastic_events=elastic,
             stragglers_flagged=self.mitigator.stragglers(),
             losses=losses,
+            membership_events=membership,
+            requeued=requeued,
+            final_hosts=self.num_hosts,
         )

@@ -18,7 +18,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core import LoopHistory, LoopSpec, LoopTelemetry, get_engine
+from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
+                        MembershipEvent, get_engine)
 from repro.core.engine import schedule_tag
 from repro.core.history import awf_weights_from_rates
 from repro.core.spec import resolve
@@ -51,6 +52,50 @@ class StragglerMitigator:
         # provenance of the shares the NEXT observe_step measures: which
         # schedule produced them (schedule(auto) scores candidates by it)
         self._share_tag: Optional[str] = None
+        # invocation index of the last membership change: rate windows
+        # never reach past it (old-team measurements carry dead ids and
+        # pre-churn speed ratios)
+        self._churn_floor = 0
+        # the plan behind the last scheduler-produced shares (None on the
+        # exact-uniform path) — its chunk→worker provenance is what a
+        # membership-loss requeue recovers the dead hosts' tokens from
+        self.last_plan = None
+        self.membership_events: List[MembershipEvent] = []
+
+    # --------------------------------------------------------- membership
+    def resize(self, new_num_hosts: int, *, lost=(),
+               step: Optional[int] = None) -> MembershipEvent:
+        """Membership change: re-point every statistic at the new team.
+
+        Records a :class:`MembershipEvent` sentinel through the telemetry
+        (one measured-epoch bump, so cached adaptive share plans for this
+        loop are invalidated and the next ``token_shares`` re-runs the
+        scheduler's ``init`` over the new team size), floors the rate
+        window at the churn (surviving hosts are renumbered densely, so
+        pre-churn measurements attribute to the wrong ids), and drops the
+        share provenance (the old plan's team no longer exists).
+        """
+        if new_num_hosts < 1:
+            raise ValueError(f"new_num_hosts must be >= 1, "
+                             f"got {new_num_hosts}")
+        old = self.num_hosts
+        kind = "loss" if new_num_hosts <= old else "join"
+        lost = tuple(sorted(int(h) for h in lost))
+        if kind == "loss" and not lost and new_num_hosts < old:
+            # unspecified casualties: assume the highest ids left
+            lost = tuple(range(new_num_hosts, old))
+        joined = (tuple(range(old, new_num_hosts))
+                  if kind == "join" else ())
+        event = MembershipEvent(kind=kind, old_size=old,
+                                new_size=new_num_hosts, lost=lost,
+                                joined=joined, step=step)
+        self.num_hosts = new_num_hosts
+        self.telemetry.record_membership(event)   # epoch bump + team width
+        self._churn_floor = self.history.num_invocations(self.loop_id)
+        self._share_tag = None
+        self.last_plan = None
+        self.membership_events.append(event)
+        return event
 
     # ------------------------------------------------------------ measure
     def observe_step(self, host_times: Dict[int, float],
@@ -59,6 +104,14 @@ class StragglerMitigator:
         telemetry recorder: each step flushes as one measured invocation,
         advancing the history epoch that invalidates cached adaptive
         plans keyed on this mitigator's history."""
+        bad = [h for h in host_times if not 0 <= int(h) < self.num_hosts]
+        if bad:
+            # a caller still sized for the dead fleet: refusing beats
+            # silently attributing times to hosts that no longer exist
+            raise ValueError(
+                f"host ids {sorted(bad)} outside the current team "
+                f"0..{self.num_hosts - 1} (resize() the mitigator after "
+                f"a membership change)")
         self.history.open_invocation(self.loop_id, scheduler=self._share_tag)
         for h, t in host_times.items():
             n = (host_tokens or {}).get(h, 1)
@@ -92,10 +145,15 @@ class StragglerMitigator:
         an expensive step looks slower forever.  Equal-step means keep the
         rate RATIOS exactly the per-host slowdown ratios."""
         per: Dict[int, List[float]] = {}
-        invs = self.history.invocations(self.loop_id)[-self.window:]
-        for inv in invs:
+        invs = self.history.invocations(self.loop_id)
+        # the window never reaches past the last membership change: the
+        # surviving team is renumbered densely, so pre-churn records
+        # attribute to the wrong (possibly dead) host ids
+        lo = max(len(invs) - self.window, self._churn_floor)
+        for inv in invs[lo:]:
             for c in inv.chunks:
-                if c.elapsed is not None and c.size > 0:
+                if (c.elapsed is not None and c.size > 0
+                        and 0 <= c.worker < self.num_hosts):
                     per.setdefault(c.worker, []).append(c.elapsed / c.size)
         return {h: sum(rs) / len(rs) for h, rs in per.items() if rs}
 
@@ -149,6 +207,7 @@ class StragglerMitigator:
             # exact-uniform shares are produced by the identity split, not
             # by the scheduler — leave the step unattributed
             self._share_tag = None
+            self.last_plan = None
             shares = self._uniform_shares(total_tokens)
         else:
             loop = LoopSpec(lb=0, ub=total_tokens,
@@ -162,8 +221,16 @@ class StragglerMitigator:
                 sched.select(self.history, loop, weights=w.tolist())
             self._share_tag = schedule_tag(sched)
             plan = get_engine().plan(sched, loop, weights=w.tolist())
+            self.last_plan = plan
             shares = plan.worker_iters().astype(np.int64)
-        return self._enforce_min_share(shares, total_tokens)
+        shares = self._enforce_min_share(shares, total_tokens)
+        if shares.shape != (self.num_hosts,) or \
+                int(shares.sum()) != total_tokens:
+            raise AssertionError(
+                f"token shares {shares.tolist()} do not cover "
+                f"{total_tokens} tokens over {self.num_hosts} hosts — "
+                f"mitigator/team size mismatch after a membership change?")
+        return shares
 
     def _enforce_min_share(self, shares: np.ndarray,
                            total_tokens: int) -> np.ndarray:

@@ -1,0 +1,314 @@
+"""Fault-tolerance runtime + elastic membership replan.
+
+The supervisor/requeue tests are pure host (no JAX model).  The e2e
+elastic TrainLoop test needs 4 emulated hosts — run it (and the CI leg
+does) with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest -q tests/test_fault_tolerance.py
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.core import (LoopHistory, LoopSpec, LoopTelemetry,
+                        MembershipEvent, make_scheduler)
+from repro.core.engine import PlanEngine
+from repro.core.schedulers import AWF
+from repro.runtime import (FailureInjector, TrainSupervisor, WorkerLost,
+                           plan_degraded_mesh)
+from repro.sched import StragglerMitigator
+
+needs_hosts = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+           "(the multi-host CI leg)")
+
+
+def _counter_step(log=None):
+    """Deterministic (state, step) -> state: w += step + 1, loss = f(w).
+    Restore-equivalence holds iff the checkpoint round-trips exactly."""
+    def make_step(state, step):
+        w = state["w"] + float(step + 1)
+        loss = float(np.sum(w) / (step + 1))
+        if log is not None:
+            log[step] = loss
+        return {"w": w}, {"loss": loss}
+    return make_step
+
+
+def _init():
+    return {"w": np.zeros(3)}
+
+
+# --------------------------------------------------------------- supervisor
+def test_transient_and_device_faults_restore(tmp_path):
+    sup = TrainSupervisor(_counter_step(), _init, str(tmp_path),
+                          ckpt_every=4, num_hosts=1,
+                          injector=FailureInjector({3: "transient",
+                                                    9: "device"}))
+    rep = sup.run(11)
+    assert rep.steps_completed == 11
+    assert rep.restarts == 2
+    # step-3 fault predates any checkpoint (fresh re-init, not a restore);
+    # the step-9 fault restores from the step-8 checkpoint
+    assert rep.restores == [8]
+    assert rep.membership_events == [] and rep.requeued == []
+
+
+def test_final_checkpoint_saved_when_steps_not_multiple(tmp_path):
+    """Regression: total_steps % ckpt_every != 0 must still leave a
+    checkpoint at the final step — otherwise ANY later restore of the
+    directory silently re-executes the tail."""
+    sup = TrainSupervisor(_counter_step(), _init, str(tmp_path),
+                          ckpt_every=5, num_hosts=1)
+    sup.run(13)
+    assert latest_step(str(tmp_path)) == 13
+    # a resume of the finished run must re-execute ZERO steps
+    log = {}
+    sup2 = TrainSupervisor(_counter_step(log), _init, str(tmp_path),
+                           ckpt_every=5, num_hosts=1)
+    rep2 = sup2.run(13)
+    assert rep2.steps_completed == 13 and log == {}
+
+
+def test_loss_trajectory_equivalence_under_faults(tmp_path):
+    """Every step's recomputed loss after a restore must equal the
+    uninterrupted run's — the checkpoint round-trips the exact state."""
+    clean = {}
+    TrainSupervisor(_counter_step(clean), _init,
+                    str(tmp_path / "clean"), ckpt_every=4).run(14)
+    faulted = {}
+    rep = TrainSupervisor(
+        _counter_step(faulted), _init, str(tmp_path / "faulted"),
+        ckpt_every=4,
+        injector=FailureInjector({5: "transient", 11: "device"})).run(14)
+    assert rep.steps_completed == 14
+    assert faulted == clean
+
+
+def test_elastic_downsize_resizes_mitigator(tmp_path):
+    """Regression: repeated faults halve the team — the mitigator MUST
+    follow (it used to keep the old num_hosts, so share vectors and
+    observe_step validation ran against a dead team size)."""
+    sizes = []
+    sup = TrainSupervisor(_counter_step(), _init, str(tmp_path),
+                          ckpt_every=4, num_hosts=4,
+                          injector=FailureInjector({3: "device",
+                                                    4: "device"}),
+                          on_elastic=lambda n: sizes.append(n),
+                          elastic_after_failures=2)
+    rep = sup.run(9)
+    assert rep.steps_completed == 9
+    assert sizes == [2]
+    assert sup.mitigator.num_hosts == 2 == rep.final_hosts
+    assert len(rep.membership_events) == 1
+    ev = rep.membership_events[0]
+    assert ev.kind == "loss" and ev.old_size == 4 and ev.new_size == 2
+    assert ev.lost == (2, 3)
+    # shares over the survivors: uniform cold start, sums exactly
+    shares = sup.mitigator.token_shares(1000)
+    assert shares.tolist() == [500, 500]
+    # feeding a dead host id must fail loudly, not mis-attribute
+    with pytest.raises(ValueError, match="resize"):
+        sup.mitigator.observe_step({3: 0.1})
+
+
+def test_host_loss_membership_callback_ordering(tmp_path):
+    """on_membership fires AFTER the requeue audit and mitigator resize:
+    the callback sees the new team everywhere it looks."""
+    seen = []
+
+    def on_membership(event):
+        seen.append((event.lost, sup.mitigator.num_hosts, sup.num_hosts))
+
+    sup = TrainSupervisor(_counter_step(), _init, str(tmp_path),
+                          ckpt_every=3, num_hosts=4,
+                          injector=FailureInjector({7: "host_loss:1,2"}),
+                          on_membership=on_membership)
+    rep = sup.run(10)
+    assert rep.steps_completed == 10
+    assert seen == [((1, 2), 2, 2)]
+    assert rep.restores and rep.restores[0] == 6   # newest ckpt, no step lost
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_injector_host_loss_parses_ids():
+    inj = FailureInjector({2: "host_loss:2,3", 5: "host_loss",
+                           7: "transient"})
+    with pytest.raises(WorkerLost) as e:
+        inj.check(2)
+    assert e.value.lost == (2, 3)
+    with pytest.raises(WorkerLost) as e:
+        inj.check(5)
+    assert e.value.lost is None       # unnamed: supervisor picks a default
+    with pytest.raises(RuntimeError):
+        inj.check(7)
+    assert inj.check(3) is None       # non-fault steps pass through
+
+
+# ---------------------------------------------------------- requeue + plans
+def test_requeue_covers_lost_work_exactly():
+    """completed-by-the-dead + survivors' own + requeued == [0, N),
+    disjointly — no iteration lost, none double-run."""
+    eng = PlanEngine()
+    loop = LoopSpec(0, 500, num_workers=4, loop_id="rq")
+    plan = eng.plan(make_scheduler("fac2"), loop)
+    lost = (1, 3)
+    done_chunks = plan.owned_chunk_ids(lost)[:3]   # they finished 3 chunks
+    new_plan, iter_map = eng.requeue_plan(
+        plan, "fac2", lost_workers=lost, num_workers=2,
+        completed_chunks=done_chunks)
+    assert new_plan.coverage_ok()
+    assert len(iter_map) == new_plan.loop.ub
+    survivors_iters = {i for c in plan.owned_chunk_ids((0, 2))
+                       for i in range(int(plan.starts[c]),
+                                      int(plan.starts[c] + plan.sizes[c]))}
+    done_iters = {i for c in done_chunks
+                  for i in range(int(plan.starts[c]),
+                                 int(plan.starts[c] + plan.sizes[c]))}
+    requeued = set(iter_map)
+    assert survivors_iters | done_iters | requeued == set(range(500))
+    assert not (survivors_iters & requeued) and not (done_iters & requeued)
+
+
+def test_membership_event_bumps_adaptive_plan_cache():
+    """A membership change must invalidate cached adaptive plans — the
+    sentinel invocation is the same epoch edge as a measured flush."""
+    eng = PlanEngine()
+    hist = LoopHistory()
+    loop = LoopSpec(0, 800, num_workers=2, loop_id="mb")
+    sched = AWF(variant="timestep")
+    p1 = eng.plan(sched, loop, history=hist)
+    assert eng.plan(sched, loop, history=hist) is p1       # cached
+    tel = LoopTelemetry(hist, loop_id="mb", num_workers=2)
+    tel.record_membership(MembershipEvent(kind="loss", old_size=2,
+                                          new_size=1, lost=(1,)))
+    assert eng.plan(sched, loop, history=hist) is not p1   # epoch bumped
+
+
+def test_membership_sentinel_survives_json_and_rates():
+    hist = LoopHistory()
+    tel = LoopTelemetry(hist, loop_id="loop", num_workers=4)
+    tel.record_chunk(0, 0, 10, 0.5)
+    tel.record_chunk(1, 10, 20, 0.5)
+    tel.flush()
+    before = hist.measured_invocations("loop")
+    tel.record_membership(MembershipEvent(kind="loss", old_size=4,
+                                          new_size=2, lost=(2, 3)))
+    assert hist.measured_invocations("loop") == before + 1
+    restored = LoopHistory.from_json(hist.to_json())
+    assert (restored.measured_invocations("loop")
+            == hist.measured_invocations("loop"))
+    tags = [inv.scheduler for inv in restored.invocations("loop")]
+    assert "membership(4->2)" in tags
+    # the zero-size sentinel is invisible to the rate statistics
+    assert restored.worker_rates("loop") == hist.worker_rates("loop")
+    assert -1 not in restored.worker_rates("loop")
+
+
+def test_mitigator_resize_floors_history_window():
+    """Post-churn shares come from the NEW team's measurements only —
+    pre-churn invocations (4-host rates) never leak into a 2-host split."""
+    m = StragglerMitigator(num_hosts=4, min_share=0.1)
+    for _ in range(4):
+        shares = m.token_shares(1000)
+        m.observe_step({h: 0.1 * (2.0 if h == 3 else 1.0)
+                        for h in range(4)},
+                       host_tokens={h: max(int(shares[h]), 1)
+                                    for h in range(4)})
+    ev = m.resize(2, lost=(2, 3), step=4)
+    assert ev.tag == "membership(4->2)"
+    assert m.token_shares(1000).tolist() == [500, 500]   # uniform cold start
+    m.observe_step({0: 0.1, 1: 0.2})
+    shares = m.token_shares(1000)
+    assert shares.sum() == 1000 and shares[0] > shares[1]
+
+
+def test_plan_degraded_mesh_warns_on_capacity_loss():
+    with pytest.warns(RuntimeWarning, match="idles 3 of 7"):
+        assert plan_degraded_mesh(7, 1) == (4, 1)
+    with pytest.warns(RuntimeWarning, match="pod axis was dropped"):
+        assert plan_degraded_mesh(2, 2, pod_axis=True) == (1, 2)
+    # clean shapes stay silent
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert plan_degraded_mesh(8, 2) == (4, 2)
+        assert plan_degraded_mesh(8, 2, pod_axis=True) == (2, 2, 2)
+
+
+# ------------------------------------------------------------- e2e (model)
+def test_paged_serve_kill_token_for_token():
+    """3 of 8 dispatch rows die mid-run: every request survives
+    token-for-token through drain-and-readmit (greedy decode + replay
+    prefix), and the slot shrink is a recorded membership event."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import PagedServeLoop, Request
+
+    cfg = get_smoke_config("qwen2.5-3b")
+
+    def mk():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=rng.integers(4, 20)
+                                            ).astype(np.int32),
+                        max_new=6)
+                for i in range(8)]
+
+    kw = dict(num_blocks=48, block_size=8, max_context=64, concurrency=8,
+              scheduler="dynamic", prefill_chunk=16)
+    ref = PagedServeLoop(cfg, **kw).run(mk())
+    loop = PagedServeLoop(cfg, **kw, kill_rows=3, kill_at_dispatch=1)
+    out = loop.run(mk())
+    assert out == ref
+    s = loop.last_stats
+    assert s["dead_rows"] == [5, 6, 7] and s["live_rows"] == 5
+    assert len(loop.membership_events) == 1
+    assert loop.membership_events[0].new_size == 5
+    assert s["preemptions"] >= 1
+
+
+def test_paged_serve_kill_validation():
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import PagedServeLoop
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    with pytest.raises(ValueError, match="live dispatch row"):
+        PagedServeLoop(cfg, concurrency=4, kill_rows=4, kill_at_dispatch=1)
+    with pytest.raises(ValueError, match="together"):
+        PagedServeLoop(cfg, concurrency=4, kill_rows=2)
+
+
+@needs_hosts
+def test_trainloop_elastic_kill_e2e():
+    """Injected kill of hosts {2,3} mid-run: no step dropped, the batch
+    re-splits over the survivors, the mesh/mitigator follow."""
+    from repro.configs import get_smoke_config
+    from repro.launch.train import TrainLoop
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    loop = TrainLoop(cfg, batch=8, seq_len=64, seed=0, hosts=4,
+                     elastic=True, kill_hosts=[2, 3], kill_at_step=2)
+    losses = loop.run(5, log_every=10 ** 9)
+    assert len(losses) == 5 and np.isfinite(losses).all()
+    assert loop.hosts == 2 == loop.mitigator.num_hosts
+    assert [e["hosts"] for e in loop.step_log] == [4, 4, 2, 2, 2]
+    assert len(loop.membership_events) == 1
+    ev = loop.membership_events[0]
+    assert ev.lost == (2, 3) and ev.new_size == 2
+    assert loop.last_shares is None or sum(loop.last_shares) > 0
+
+
+@needs_hosts
+def test_trainloop_kill_requires_elastic():
+    from repro.configs import get_smoke_config
+    from repro.launch.train import TrainLoop
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    with pytest.raises(ValueError, match="elastic"):
+        TrainLoop(cfg, batch=8, seq_len=64, hosts=4,
+                  kill_hosts=[3], kill_at_step=1)
