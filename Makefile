@@ -56,6 +56,10 @@ smoke:          ## public-API smoke: quickstart + clause-string dry runs (CI job
 	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
 	    --steps 2 --batch 4 --seq-len 64 --hosts 4 \
 	    --straggler-scheduler "wf2"
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PYTHON) -m repro.launch.train --arch qwen2.5-3b --smoke \
+	    --steps 2 --batch 8 --seq-len 64 --hosts 4 --microbatches 2 \
+	    --scheduler "hier(host=awf, device=guided,4)"
 	$(PYTHON) -m repro.launch.serve --arch qwen2.5-3b --smoke \
 	    --requests 4 --slots 2 --scheduler auto --max-new 4
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \

@@ -14,11 +14,17 @@ Run directly (``python benchmarks/plan_engine.py``) or through the harness
 (``python benchmarks/run.py``), which prints the same
 ``name,us_per_call,derived`` CSV rows.
 
+A third stage times **hierarchical composition**: a cold ``hier(...)``
+plan against the sum of the flat plans it comprises (host plan plus one
+child plan per block, recursively) — the ratio is pure composition
+overhead and must stay small for ``hier`` to be a free abstraction.
+
 CI runs this with ``--json BENCH_plan_engine.json --gate``: the JSON is
 the machine-readable benchmark trajectory (per-family speedups, cache hit
-rate) uploaded as an artifact, and ``--gate`` turns the acceptance floors
-(min speedup >= 8x on the gated families, cache hit rate >= 95%) into the
-process exit code — a perf regression fails the build.
+rate, composition overhead) uploaded as an artifact, and ``--gate`` turns
+the acceptance floors (min speedup >= 8x on the gated families, cache hit
+rate >= 95%, hier overhead <= 2x its flat levels) into the process exit
+code — a perf regression fails the build.
 """
 
 from __future__ import annotations
@@ -33,9 +39,19 @@ RESULTS = Path(__file__).parent / "results"
 
 SPEEDUP_FLOOR = 8.0       # CI gate: min vectorized-vs-generic speedup
 HIT_RATE_FLOOR = 0.95     # CI gate: steady-state plan cache hit rate
+HIER_OVERHEAD_CEIL = 2.0  # CI gate: composed plan <= 2x its flat levels
 # families the speedup gate is enforced on (the issue's named targets);
 # every compiled family is still measured and reported
 GATED = ("guided", "fac2", "taper")
+
+# composed-plan stage: the hier clauses measured, with the flat plans
+# each composition comprises (level clause, level team size)
+HIER_CASES = {
+    "hier(host=awf, device=guided,4, workers=8:32)":
+        (("awf", 8), ("guided,4", 32)),
+    "hier(host=awf, device=guided,4, tile=static, workers=8:8:4)":
+        (("awf", 8), ("guided,4", 8), ("static", 4)),
+}
 
 N_ITER = 1_000_000        # the issue's 1M-iteration loop
 WORKERS = 256             # a pod-scale team (one worker per chip)
@@ -127,20 +143,81 @@ def cache_hit_rate(steps: int = 200, n_iter: int = N_ITER,
     return _cache_hit_rate(steps, n_iter, workers)[0]
 
 
+def _composed_overhead(n_iter: int = N_ITER, reps: int = 3):
+    """Cold ``hier(...)`` composition cost vs the sum of the flat plans
+    it comprises (the host plan over [0, n) plus one child plan per
+    outer block, recursively).  The ratio is pure composition overhead —
+    ComposedPlan assembly, blockify, recursion — and CI gates it at
+    ``HIER_OVERHEAD_CEIL``.  Every timing uses a fresh engine so nothing
+    comes from the plan cache; the steady state is a cache hit anyway
+    (``plan_key`` covers the whole spec tree), reported alongside."""
+    from repro.core import LoopSpec, resolve
+    from repro.core.engine import PlanEngine
+
+    def cold(clause, n, workers):
+        best = None
+        plan = None
+        for _ in range(reps):
+            eng = PlanEngine()
+            loop = LoopSpec(0, n, num_workers=workers, loop_id="bench")
+            t0 = time.perf_counter()
+            plan = eng.plan(resolve(clause), loop)
+            best = min(best or 1e9, time.perf_counter() - t0)
+        return best, plan
+
+    def constituents(levels, n):
+        (clause, p), rest = levels[0], levels[1:]
+        t, plan = cold(clause, n, p)
+        for blk in (plan.worker_iters() if rest else ()):
+            t += constituents(rest, int(blk))
+        return t
+
+    rows = []
+    table = {}
+    for clause, levels in HIER_CASES.items():
+        t_hier, plan = cold(clause, n_iter, levels[0][1])
+        t_flat = constituents(list(levels), n_iter)
+        eng = PlanEngine()
+        loop = LoopSpec(0, n_iter, num_workers=levels[0][1],
+                        loop_id="bench")
+        eng.plan(resolve(clause), loop)
+        t_hit = _timeit(lambda: eng.plan(resolve(clause), loop), 20)
+        ratio = t_hier / t_flat
+        short = f"hier{len(levels)}"
+        table[clause] = {"levels": len(levels),
+                         "hier_ms": round(t_hier * 1e3, 3),
+                         "flat_levels_ms": round(t_flat * 1e3, 3),
+                         "overhead": round(ratio, 2),
+                         "hit_us": round(t_hit * 1e6, 2)}
+        rows.append((f"plan_engine/composed/{short}", t_hier * 1e6,
+                     f"overhead={ratio:.2f}x;levels={len(levels)};"
+                     f"flat_us={t_flat*1e6:.0f};hit_us={t_hit*1e6:.1f}"))
+    return rows, table
+
+
+def composed_overhead(n_iter: int = N_ITER) -> list:
+    return _composed_overhead(n_iter)[0]
+
+
 def collect(n_iter: int = N_ITER, workers: int = WORKERS) -> dict:
     """Full machine-readable benchmark record (what CI serializes)."""
     speed_rows, table = _planning_speedup(n_iter, workers)
     cache_rows, cache = _cache_hit_rate(n_iter=n_iter, workers=workers)
+    hier_rows, hier = _composed_overhead(n_iter)
     gated = {k: table[k]["speedup"] for k in GATED if k in table}
     min_speedup = min(gated.values()) if gated else 0.0
+    max_overhead = max(v["overhead"] for v in hier.values())
     gate = {
         "gated_families": sorted(gated),
         "min_speedup": min_speedup,
         "speedup_floor": SPEEDUP_FLOOR,
         "hit_rate": cache["hit_rate"],
         "hit_rate_floor": HIT_RATE_FLOOR,
+        "max_hier_overhead": max_overhead,
+        "hier_overhead_ceil": HIER_OVERHEAD_CEIL,
         "pass": bool(min_speedup >= SPEEDUP_FLOOR
-                     and cache["hit_rate"] >= HIT_RATE_FLOOR),
+                     and cache["hit_rate"] >= HIT_RATE_FLOOR
+                     and max_overhead <= HIER_OVERHEAD_CEIL),
     }
     return {
         "bench": "plan_engine",
@@ -148,8 +225,9 @@ def collect(n_iter: int = N_ITER, workers: int = WORKERS) -> dict:
         "workers": workers,
         "schedulers": table,
         "cache": cache,
+        "composed": hier,
         "gate": gate,
-        "rows": [list(r) for r in speed_rows + cache_rows],
+        "rows": [list(r) for r in speed_rows + cache_rows + hier_rows],
     }
 
 
@@ -174,7 +252,9 @@ def main(argv=None) -> int:
     print(f"# gate: min({','.join(gate['gated_families'])}) speedup = "
           f"{gate['min_speedup']:.1f}x (floor {gate['speedup_floor']}x), "
           f"cache hit rate = {gate['hit_rate']:.3f} "
-          f"(floor {gate['hit_rate_floor']}) -> {status}")
+          f"(floor {gate['hit_rate_floor']}), "
+          f"max hier overhead = {gate['max_hier_overhead']:.2f}x "
+          f"(ceil {gate['hier_overhead_ceil']}x) -> {status}")
     if args.json is not None:
         args.json.write_text(json.dumps(record, indent=1))
         print(f"# wrote {args.json}")

@@ -14,8 +14,9 @@ Framework tables:
   * packing             — UDS document packing vs first-fit
   * moe_capacity        — WF2 capacity planning vs uniform (drop rates)
   * straggler           — AWF mitigation under a slow host
-  * plan_engine         — vectorized-vs-generic planning speedup + plan
-                          cache hit rate (see plan_engine.py)
+  * plan_engine         — vectorized-vs-generic planning speedup, plan
+                          cache hit rate, and hier(...) composition
+                          overhead (see plan_engine.py)
   * roofline            — per-cell dry-run terms (reads dryrun JSONs)
 """
 
@@ -229,7 +230,8 @@ def plan_engine() -> list:
     import sys
     sys.path.insert(0, str(Path(__file__).parent))
     import plan_engine as pe
-    return pe.planning_speedup() + pe.cache_hit_rate()
+    return (pe.planning_speedup() + pe.cache_hit_rate()
+            + pe.composed_overhead())
 
 
 def serve_adapt() -> list:

@@ -20,6 +20,9 @@ JAX/TPU training & inference framework:
                      the single driver of the three-op state machine
 * ``auto``         — schedule(auto): online portfolio selection over the
                      registry from LoopHistory telemetry (reselect stage)
+* ``hier``         — schedule(hier): hierarchical composition — one clause
+                     per mesh level, compiled to a ComposedPlan of
+                     contiguous blocks
 * ``executor``     — host-side OpenMP-semantics team executor / plan replay
 * ``wave``         — SPMD wave views of engine plans
 * ``schedulers``   — STATIC/SS/GSS/TSS/FAC/FAC2/WF2/AWF*/AF/RAND/FSC/steal
@@ -37,7 +40,7 @@ from repro.core.interface import (
 from repro.core.history import ChunkRecord, InvocationRecord, LoopHistory
 from repro.core.telemetry import (ChunkLedger, LoopTelemetry,
                                   MembershipEvent, ServeMeter)
-from repro.core.plan import PlanProvenance, SchedulePlan
+from repro.core.plan import ComposedPlan, PlanProvenance, SchedulePlan
 from repro.core.engine import (
     PlanEngine,
     ScheduleStream,
@@ -57,17 +60,19 @@ from repro.core.spec import (
 )
 from repro.core.spec import parse as parse_schedule
 from repro.core.auto import AutoScheduler
+from repro.core.hier import HierSchedule
 
 __all__ = [
     "Chunk", "LoopSpec", "SchedulerContext", "UserDefinedSchedule",
     "SixOpSchedule", "three_op_from_six", "chunks_cover",
     "ChunkRecord", "InvocationRecord", "LoopHistory",
     "ChunkLedger", "LoopTelemetry", "MembershipEvent", "ServeMeter",
-    "PlanProvenance", "SchedulePlan",
+    "ComposedPlan", "PlanProvenance", "SchedulePlan",
     "PlanEngine", "ScheduleStream", "get_engine", "set_engine",
     "LoopResult", "execute_plan", "run_loop", "simulate_loop",
     "plan_schedule", "plan_waves",
     "ScheduleSpec", "SpecLike", "parse_schedule", "resolve", "describe",
     "register_schedule", "registered_names", "AutoScheduler",
+    "HierSchedule",
     "SCHEDULER_FACTORIES", "make_scheduler",
 ]

@@ -579,7 +579,20 @@ class PlanEngine:
 
         t0 = time.perf_counter()
         plan: Optional[SchedulePlan] = None
-        if mode in ("auto", "vectorized") and cost_model is None:
+        hier_levels = getattr(sched, "hier_levels", None)
+        if hier_levels:
+            # hierarchical composition (core/hier.py): plan the outer
+            # level over this loop, then re-plan every contiguous block
+            # with the next level — never the flat backends directly
+            if cost_model is not None:
+                raise ValueError(
+                    "hier plans take no cost_model (model the level "
+                    "clauses' plans individually instead)")
+            plan = self._plan_hier(sched, ctx, mode, key, t0)
+            if ctx.history is not None:
+                ctx.history.open_invocation(
+                    ctx.loop.loop_id, scheduler=schedule_tag(sched))
+        elif mode in ("auto", "vectorized") and cost_model is None:
             compiler = _COMPILERS.get(type(sched))
             if compiler is not None:
                 sizes = compiler(sched, ctx)
@@ -777,6 +790,88 @@ class PlanEngine:
                             workers=np.asarray(workers, np.int64),
                             wave_ids=np.asarray(wave_ids, np.int64),
                             provenance=prov)
+
+    # ------------------------------------------------- hierarchical plans
+    def _plan_hier(self, sched: Any, ctx: SchedulerContext, mode: str,
+                   key: Optional[tuple], t0: float) -> SchedulePlan:
+        """Compose a ``hier(...)`` scheduler into a ComposedPlan (see
+        core/hier.py for the clause; core/plan.py for the IR)."""
+        levels = tuple(sched.hier_levels)
+        lw = tuple(getattr(sched, "hier_level_workers", ()) or ())
+        if len(lw) < len(levels):
+            lw = lw + (None,) * (len(levels) - len(lw))
+        return self._compose_levels(ctx, levels, lw, mode, key, t0,
+                                    schedule_tag(sched))
+
+    def _compose_levels(self, ctx: SchedulerContext, levels: tuple,
+                        lvl_workers: tuple, mode: str,
+                        key: Optional[tuple], t0: float,
+                        tag: Optional[str]) -> SchedulePlan:
+        """One composition step: plan ``levels[0]`` over the context's
+        loop (the SAME loop — a single-level hier is chunk-for-chunk the
+        flat plan, sharing its cache entry), derive each outer worker's
+        contiguous block from the per-worker iteration totals, and
+        re-plan every block with the remaining levels over a virtual
+        child loop ``[0, block)`` whose loop_id extends the parent's
+        (``train_step/host2`` — telemetry and adaptive replanning
+        attribute per block).  Block plans go through ``self.plan``, so
+        each level rides the ordinary plan cache."""
+        from repro.core.plan import ComposedPlan
+
+        name0, spec0 = levels[0]
+        loop0 = ctx.loop
+        p0 = lvl_workers[0] or loop0.num_workers
+        if p0 != loop0.num_workers:
+            loop0 = dataclasses.replace(loop0, num_workers=p0)
+        weights = (list(ctx.weights)
+                   if ctx.weights is not None else None)
+        base = self.plan(resolve(spec0), loop0, history=ctx.history,
+                         user_data=ctx.user_data, weights=weights,
+                         mode=mode)
+        starts, sizes = base.starts, base.sizes
+        workers, wave_ids = base.workers, base.wave_ids
+        children: List[SchedulePlan] = []
+        if len(levels) > 1:
+            totals = base.worker_iters()
+            # BLOCKIFY the outer level: composition semantics are "worker
+            # h owns the contiguous block [bounds[h], bounds[h+1])" sized
+            # by its planned total.  Central-queue chunk layouts (AWF/AF
+            # dequeue order interleaves workers) keep their per-worker
+            # TOTALS but are rearranged into one contiguous span per
+            # worker, so membership requeue recovers exactly a dead
+            # worker's block.  A single-level hier skips this and stays
+            # chunk-for-chunk identical to the flat plan.
+            bounds = np.concatenate([[0], np.cumsum(totals)]).astype(
+                np.int64)
+            live = np.flatnonzero(totals > 0)
+            starts = bounds[live].astype(np.int64)   # 0-based trip offsets
+            sizes = totals[live].astype(np.int64)
+            workers = live.astype(np.int64)
+            wave_ids = np.zeros(live.shape[0], np.int64)
+            child_p = lvl_workers[1] or loop0.num_workers
+            for h in range(loop0.num_workers):
+                child_loop = LoopSpec(
+                    lb=0, ub=int(totals[h]), num_workers=child_p,
+                    loop_id=f"{loop0.loop_id}/{name0}{h}")
+                child_ctx = SchedulerContext(loop=child_loop,
+                                             history=ctx.history,
+                                             user_data=ctx.user_data)
+                if len(levels) == 2:
+                    child = self.plan(resolve(levels[1][1]), child_ctx,
+                                      mode=mode)
+                else:
+                    child = self._compose_levels(
+                        child_ctx, levels[1:], lvl_workers[1:], mode,
+                        None, t0, tag)
+                children.append(child)
+        prov = PlanProvenance(
+            scheduler=tag or "hier", source="composed", cache_key=key,
+            plan_time_s=time.perf_counter() - t0)
+        return ComposedPlan(loop=loop0, starts=starts, sizes=sizes,
+                            workers=workers, wave_ids=wave_ids,
+                            provenance=prov,
+                            level_names=tuple(n for n, _ in levels),
+                            children=tuple(children))
 
 
 _register_builtin_compilers()

@@ -1,0 +1,135 @@
+"""``schedule(hier)`` — hierarchical composition of schedule clauses.
+
+The paper's interface assumes one flat team, but this framework schedules
+across nested levels: hosts of a pod, devices (or microbatch slots) of a
+host, kernel tile lanes of a device.  Following "An Efficient OpenMP
+Runtime System for Hierarchical Architectures" (arxiv 0706.2073, bubble
+scheduling — a scheduler tree whose levels own contiguous work blocks)
+and "OpenMP Loop Scheduling Revisited" (arxiv 1809.03188 — reuse the
+existing clauses rather than inventing per-level ones), a ``hier`` clause
+names one *registered* clause per mesh level::
+
+    hier(host=awf, device=guided,4, tile=static)
+    hier(host=wf2(weights=2:1:1), device=dynamic, workers=3:2)
+
+Compilation lives in ``PlanEngine._plan_hier``: the outermost level plans
+the parent loop as-is (so a single-level ``hier(host=X)`` is
+chunk-for-chunk identical to flat ``X``), its per-worker iteration totals
+become contiguous row blocks ``[bounds[h], bounds[h+1])``, and every
+remaining level re-plans each block recursively.  The result is a
+:class:`~repro.core.plan.ComposedPlan`: host-level arrays on the outside
+(``worker_iters`` still feeds the batch splitter and membership requeue
+provenance), per-block child plans inside (``tile_order`` feeds the
+Pallas front-ends a host-block-major leaf order).
+
+``workers=a:b`` pins per-level team sizes; an unpinned level inherits its
+parent's worker count (the top level inherits the planned LoopSpec's).
+
+This module must stay importable without JAX (the docs gate imports the
+registry under a numpy-only interpreter) and imports the engine lazily —
+it is imported from the bottom of ``core/spec.py``, mirroring ``auto``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple, Union
+
+from repro.core.interface import Chunk, SchedulerContext
+from repro.core.spec import (HIER_LEVELS, ScheduleSpec,
+                             _normalize_level_workers, parse,
+                             register_schedule, resolve)
+
+__all__ = ["HierSchedule"]
+
+
+def _as_level_spec(name: str, val: Union[str, ScheduleSpec]) -> ScheduleSpec:
+    spec = val if isinstance(val, ScheduleSpec) else parse(str(val))
+    if spec.kind == "hier":
+        raise ValueError(
+            "hier levels cannot nest another hier (name the levels "
+            "host/device/tile in one clause instead)")
+    if spec.is_runtime:
+        raise ValueError(
+            "hier levels must name a concrete schedule ('runtime' "
+            "late-binds a whole clause, not one level)")
+    return spec
+
+
+class HierSchedule:
+    """Composition of per-level clauses implementing the three-op interface.
+
+    The engine recognizes this scheduler by its ``hier_levels`` attribute
+    and compiles it with ``_plan_hier`` instead of a flat backend.  The
+    three-op fallback (streams: packing, microbatch LPT, admission)
+    delegates to the *outermost* level — the level that owns the
+    substrate's workers — so a stream over ``hier(host=awf, ...)``
+    behaves exactly like a stream over ``awf``.
+    """
+
+    name = "hier"
+
+    def __init__(self, host: Union[None, str, ScheduleSpec] = None,
+                 device: Union[None, str, ScheduleSpec] = None,
+                 tile: Union[None, str, ScheduleSpec] = None,
+                 workers: Union[None, int, str, Tuple[int, ...]] = None):
+        by_name = {"host": host, "device": device, "tile": tile}
+        levels = tuple((n, _as_level_spec(n, by_name[n]))
+                       for n in HIER_LEVELS if by_name[n] is not None)
+        if not levels:
+            raise ValueError(
+                "hier needs at least one level (host=, device=, tile=)")
+        # canonical spec = plan-cache identity (resolve() will overwrite
+        # _spec with an equal value; direct construction stays cacheable)
+        kwargs = dict(levels)
+        if workers is not None:
+            kwargs["workers"] = _normalize_level_workers(workers)
+        self.spec = ScheduleSpec(kind="hier",
+                                 kwargs=tuple(sorted(kwargs.items())))
+        self._spec = self.spec       # provenance tag for direct construction
+        self.hier_levels: Tuple[Tuple[str, ScheduleSpec], ...] = \
+            self.spec.levels
+        self.hier_level_workers: Tuple[Optional[int], ...] = \
+            self.spec.level_workers
+        # adaptive iff any level is (AWF/AF/auto/...): the engine then
+        # keys the composed plan on the measured history epoch
+        self.adaptive = any(getattr(resolve(s), "adaptive", False)
+                            for _, s in self.hier_levels)
+
+    # ------------------------------------------------------------ identity
+    def plan_key(self) -> tuple:
+        """Composed plans cache on the full nested spec (each level's
+        block plans are additionally cached on their own flat keys)."""
+        return ("hier", self.spec)
+
+    @property
+    def level_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.hier_levels)
+
+    def level(self, name: str) -> Optional[ScheduleSpec]:
+        """The named level's nested spec, or None if the clause omits it."""
+        return dict(self.hier_levels).get(name)
+
+    # ------------------------------------------------------------ three-op
+    def start(self, ctx: SchedulerContext) -> Any:
+        inner = resolve(self.hier_levels[0][1])
+        return (inner, inner.start(ctx))
+
+    def next(self, state: Any, worker: int,
+             elapsed: Optional[float] = None) -> Optional[Chunk]:
+        inner, inner_state = state
+        return inner.next(inner_state, worker, elapsed)
+
+    def finish(self, state: Any) -> None:
+        inner, inner_state = state
+        inner.finish(inner_state)
+
+    def __repr__(self) -> str:
+        return f"HierSchedule({str(self.spec)!r})"
+
+
+register_schedule(
+    "hier", source="builtin", chunk_param=None,
+    doc="hierarchical composition: one registered clause per mesh level "
+        "(host/device/tile), compiled to a ComposedPlan of contiguous "
+        "blocks",
+)(HierSchedule)

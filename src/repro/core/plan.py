@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core.interface import Chunk, LoopSpec
 
-__all__ = ["PlanProvenance", "SchedulePlan"]
+__all__ = ["PlanProvenance", "SchedulePlan", "ComposedPlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,5 +314,125 @@ class SchedulePlan:
         offsets = np.cumsum(sizes) - sizes
         out = (np.repeat(starts, sizes)
                + np.arange(total) - np.repeat(offsets, sizes))
+        out = out[out < n]
+        return out.astype(np.int32)
+
+
+# =========================================================================
+# Hierarchical composition
+# =========================================================================
+@dataclasses.dataclass(eq=False)
+class ComposedPlan(SchedulePlan):
+    """A plan tree: one level's plan outside, per-block child plans inside.
+
+    Compiled by ``PlanEngine._plan_hier`` from a ``hier(...)`` clause.
+    The *base* arrays (``starts``/``sizes``/``workers``/``wave_ids``) are
+    the OUTERMOST level's plan over the parent loop — verbatim for a
+    single-level composition (``identical()`` against the flat clause
+    holds), BLOCKIFIED to one contiguous span per worker when children
+    exist (composition semantics: worker h owns block h, whatever the
+    flat family's dequeue-order chunk layout was).  Every flat-plan
+    consumer keeps working unchanged: ``worker_iters()`` is the host
+    batch-share vector, and membership requeue recovers a dead host's
+    whole contiguous block from the base chunk→worker provenance.
+
+    ``block_bounds[h] : block_bounds[h+1]`` is worker *h*'s contiguous
+    iteration block (the outer level's per-worker totals, cumulated in
+    worker-id order); ``children[h]`` is the next level's plan over that
+    block in LOCAL coordinates ``[0, block size)`` — itself a
+    ``ComposedPlan`` when more than one level remains.  ``level_names``
+    are the level names from this node down (``("host", "device",
+    "tile")`` at the root, ``("device", "tile")`` inside its children).
+    A single-level composition has no children and behaves exactly like
+    the flat plan.
+    """
+
+    level_names: tuple = ()
+    block_bounds: Optional[np.ndarray] = None
+    children: tuple = ()
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.block_bounds is None:
+            totals = np.bincount(self.workers, weights=self.sizes,
+                                 minlength=self.loop.num_workers)
+            self.block_bounds = np.concatenate(
+                [[0], np.cumsum(totals)]).astype(np.int64)
+        self.block_bounds = _freeze_array(self.block_bounds)
+        if self.children and len(self.children) != \
+                self.block_bounds.shape[0] - 1:
+            raise ValueError(
+                f"composed plan has {len(self.children)} children for "
+                f"{self.block_bounds.shape[0] - 1} blocks")
+        for h, child in enumerate(self.children):
+            n_h = int(self.block_bounds[h + 1] - self.block_bounds[h])
+            if child.loop.trip_count != n_h:
+                raise ValueError(
+                    f"child plan {h} covers {child.loop.trip_count} "
+                    f"iterations, block is {n_h}")
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_levels(self) -> int:
+        child = self.children[0] if self.children else None
+        return 1 + (child.num_levels if isinstance(child, ComposedPlan)
+                    else 1 if child is not None else 0)
+
+    def host_block(self, worker: int) -> tuple:
+        """Outer worker ``worker``'s contiguous block as global
+        ``(start, stop)`` iteration indices (``loop.lb``-based, like the
+        flat plan's chunk starts)."""
+        lb = int(self.loop.lb)
+        return (lb + int(self.block_bounds[worker]),
+                lb + int(self.block_bounds[worker + 1]))
+
+    def leaf_chunks(self) -> List[dict]:
+        """Leaf-level chunks in GLOBAL coordinates, each carrying its
+        full per-level ownership path — the provenance the conformance
+        suite (and a pod debugger) walks: ``{"start", "size", "owners":
+        {"host": h, "device": d, ...}}`` in block-major order."""
+        if not self.children:
+            lvl = self.level_names[0] if self.level_names else "worker"
+            lb = int(self.loop.lb)
+            return [{"start": lb + int(s), "size": int(z),
+                     "owners": {lvl: int(w)}}
+                    for s, z, w in zip(self.starts, self.sizes,
+                                       self.workers)]
+        lvl = self.level_names[0] if self.level_names else "worker"
+        out: List[dict] = []
+        for h, child in enumerate(self.children):
+            # children are planned over LOCAL [0, block) loops; lift their
+            # leaves into this loop's (lb-based) iteration coordinates
+            off = int(self.loop.lb) + int(self.block_bounds[h])
+            if isinstance(child, ComposedPlan):
+                leaves = child.leaf_chunks()
+            else:
+                nxt = (self.level_names[1]
+                       if len(self.level_names) > 1 else "worker")
+                leaves = [{"start": int(s), "size": int(z),
+                           "owners": {nxt: int(w)}}
+                          for s, z, w in zip(child.starts, child.sizes,
+                                             child.workers)]
+            for leaf in leaves:
+                out.append({"start": leaf["start"] + off,
+                            "size": leaf["size"],
+                            "owners": {lvl: h, **leaf["owners"]}})
+        return out
+
+    def tile_order(self, n_tiles: Optional[int] = None,
+                   order: str = "dequeue") -> np.ndarray:
+        """Leaf tile-visit order, host-block-major: outer workers in id
+        order, each block visited in its OWN child plan's ``order`` —
+        the per-host-block leaf orders the Pallas front-ends consume.
+        Without children this is exactly the flat plan's order."""
+        if not self.children:
+            return super().tile_order(n_tiles, order=order)
+        n = self.loop.trip_count if n_tiles is None else n_tiles
+        parts = []
+        for h, child in enumerate(self.children):
+            sub = child.tile_order(child.loop.trip_count, order=order)
+            parts.append(sub.astype(np.int64) + int(self.block_bounds[h]))
+        out = (np.concatenate(parts) if parts
+               else np.empty(0, np.int64))
         out = out[out < n]
         return out.astype(np.int32)

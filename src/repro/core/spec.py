@@ -32,6 +32,13 @@ Clause grammar, mapped to the OpenMP syntax each form mirrors::
     "auto(candidates=a:b:c),4"   schedule(auto): the kind is selected
                                  ONLINE from LoopHistory telemetry by the
                                  portfolio selector in core/auto.py
+    "hier(host=awf,
+          device=guided,4,
+          tile=static)"          hierarchical composition: one clause per
+                                 mesh level (outer -> inner), each level
+                                 any registered clause; the spec NESTS —
+                                 level values are themselves ScheduleSpecs
+                                 (core/hier.py, compiled to a ComposedPlan)
 
 Resolution accepts a spec, a clause string, an already-built scheduler
 instance, or a zero-argument factory callable; it returns a scheduler
@@ -69,6 +76,7 @@ __all__ = [
     "registered_names",
     "lookup",
     "describe",
+    "HIER_LEVELS",
     "RUNTIME_ENV_VAR",
     "UDS_MODULES_ENV_VAR",
     "DEFAULT_RUNTIME_SCHEDULE",
@@ -81,6 +89,10 @@ DEFAULT_RUNTIME_SCHEDULE = "dynamic"
 # the "uds:" namespace restricts lookup to user-defined registrations
 # (declare-style, lambda-style templates, @register_schedule users)
 _UDS_SOURCES = ("declare", "template", "user")
+
+# hierarchical composition: the mesh levels a "hier(...)" clause may name,
+# in OUTER -> INNER order (the order the composed plan partitions in)
+HIER_LEVELS = ("host", "device", "tile")
 
 _Scalar = Union[None, bool, int, float, str]
 
@@ -123,6 +135,11 @@ class ScheduleSpec:
     def __post_init__(self) -> None:
         if not isinstance(self.kind, str) or not self.kind:
             raise ValueError("schedule kind must be a non-empty string")
+        if self.kind == "hier":
+            # level values normalize to nested ScheduleSpecs before the
+            # clause-safe token check below (their clause strings may
+            # carry commas/parens that only the hier grammar accepts)
+            self._normalize_hier()
         # string parameter values must be clause-safe tokens, or the
         # documented parse(str(spec)) round-trip would break
         for v in self.params + tuple(v for _, v in self.kwargs):
@@ -179,6 +196,90 @@ class ScheduleSpec:
             weights=weights if weights is not None else base.weights,
         )
 
+    # ----------------------------------------------------------- hier nesting
+    def _normalize_hier(self) -> None:
+        """Validate + canonicalize a ``hier`` spec: every level value
+        becomes a nested :class:`ScheduleSpec` (clause strings are parsed
+        recursively), ``workers`` becomes a canonical ``":"``-joined count
+        string, and the kwargs tuple is re-sorted — so two hier specs
+        built from equivalent inputs compare (and hash) equal."""
+        if self.params:
+            raise ValueError(
+                "hier takes only named levels (host=, device=, tile=)")
+        if self.chunk is not None:
+            raise ValueError(
+                "hier itself takes no chunksize (set it on a level clause: "
+                "hier(device=guided,4))")
+        if self.weights is not None:
+            raise ValueError(
+                "hier itself takes no weights (set them on a level clause: "
+                "hier(host=wf2(weights=2:1:1)))")
+        levels: Dict[str, "ScheduleSpec"] = {}
+        workers: Optional[str] = None
+        for k, v in self.kwargs:
+            if k == "workers":
+                workers = _normalize_level_workers(v)
+                continue
+            if k not in HIER_LEVELS:
+                raise ValueError(
+                    f"unknown hier level {k!r} (levels: "
+                    f"{', '.join(HIER_LEVELS)}; plus 'workers')")
+            if k in levels:
+                raise ValueError(f"duplicate hier level {k!r}")
+            if isinstance(v, ScheduleSpec):
+                sub = v
+            elif isinstance(v, str):
+                sub = parse(v)
+            else:
+                raise ValueError(
+                    f"hier level {k!r} must be a clause string or "
+                    f"ScheduleSpec, got {type(v).__name__}")
+            if sub.kind == "hier":
+                raise ValueError(
+                    "hier levels cannot nest another hier (name the "
+                    "levels host/device/tile in one clause instead)")
+            if sub.is_runtime:
+                raise ValueError(
+                    "hier levels must name a concrete schedule ('runtime' "
+                    "late-binds a whole clause, not one level)")
+            levels[k] = sub
+        if not levels:
+            raise ValueError(
+                "hier needs at least one level (host=, device=, tile=)")
+        if workers is not None \
+                and len(workers.split(":")) != len(levels):
+            raise ValueError(
+                f"hier workers={workers!r} must give one count per level "
+                f"({len(levels)} level(s) named)")
+        merged: Dict[str, Any] = dict(levels)
+        if workers is not None:
+            merged["workers"] = workers
+        object.__setattr__(self, "kwargs", tuple(sorted(merged.items())))
+
+    @property
+    def is_hier(self) -> bool:
+        return self.kind == "hier"
+
+    @property
+    def levels(self) -> Tuple[Tuple[str, "ScheduleSpec"], ...]:
+        """A hier spec's ``(name, nested spec)`` pairs in outer -> inner
+        order (``HIER_LEVELS`` order); ``()`` for flat specs."""
+        if not self.is_hier:
+            return ()
+        d = dict(self.kwargs)
+        return tuple((n, d[n]) for n in HIER_LEVELS if n in d)
+
+    @property
+    def level_workers(self) -> Tuple[Optional[int], ...]:
+        """Per-level worker counts from the ``workers=a:b`` kwarg, aligned
+        with :attr:`levels`; all ``None`` (inherit from the planned
+        LoopSpec) when the clause doesn't pin them."""
+        lv = self.levels
+        w = dict(self.kwargs).get("workers")
+        if w is None:
+            return (None,) * len(lv)
+        return tuple(int(x) for x in str(w).split(":"))
+
     # ------------------------------------------------------------ accessors
     @property
     def is_runtime(self) -> bool:
@@ -199,6 +300,14 @@ class ScheduleSpec:
     # ------------------------------------------------------------ rendering
     def __str__(self) -> str:
         """Canonical clause string; ``parse(str(spec)) == spec``."""
+        if self.is_hier:
+            # levels render outer -> inner (parse re-sorts the kwargs
+            # tuple, so the cosmetic order round-trips losslessly)
+            inner = [f"{n}={s}" for n, s in self.levels]
+            w = dict(self.kwargs).get("workers")
+            if w is not None:
+                inner.append(f"workers={w}")
+            return "hier(" + ", ".join(inner) + ")"
         inner = [_render_value(v) for v in self.params]
         inner += [f"{k}={_render_value(v)}" for k, v in self.kwargs]
         if self.weights is not None:
@@ -229,6 +338,35 @@ def _render_value(v: Any) -> str:
     if isinstance(v, (int, float)):
         return repr(v)
     return str(v)
+
+
+def _normalize_level_workers(v: Any) -> str:
+    """Canonicalize a hier ``workers`` value (int, ``"4:2"`` string, or a
+    sequence of ints) to the ``":"``-joined clause form."""
+    if isinstance(v, bool):
+        raise ValueError(f"hier workers must be positive ints, got {v!r}")
+    if isinstance(v, int):
+        counts: Sequence[Any] = (v,)
+    elif isinstance(v, str):
+        counts = [x for x in v.split(":") if x.strip()]
+    elif isinstance(v, (list, tuple)):
+        counts = v
+    else:
+        raise ValueError(
+            f"hier workers must be an int, 'a:b' string, or int sequence, "
+            f"got {type(v).__name__}")
+    out: List[int] = []
+    for c in counts:
+        try:
+            i = int(c)
+        except (TypeError, ValueError):
+            i = 0
+        if i < 1 or isinstance(c, bool):
+            raise ValueError(f"hier workers must be positive ints, got {v!r}")
+        out.append(i)
+    if not out:
+        raise ValueError("hier workers must be non-empty when given")
+    return ":".join(str(i) for i in out)
 
 
 # =========================================================================
@@ -267,6 +405,80 @@ def _split_args(args: str) -> List[str]:
     return [a for a in (p.strip() for p in args.split(",")) if a]
 
 
+# hier is the one nesting point of the grammar: "hier(" starts a level
+# list; everything else (including a stray "hier,4" / bare "hier") is
+# rejected with the hier-specific message
+_HIER_HEAD_RE = re.compile(r"^\s*hier\s*($|[(,])")
+_HIER_BODY_RE = re.compile(r"^\s*hier\s*\((?P<args>.*)\)\s*$", re.DOTALL)
+_HIER_SEG_RE = re.compile(r"\s*[A-Za-z_]\w*\s*=")
+
+
+def _split_hier_args(args: str) -> List[str]:
+    """Split a hier level list at depth-0 commas that start a new
+    ``name=`` segment.  Level clauses keep their own commas and parens
+    (``device=guided,4``, ``host=taper(mu=1.0,sigma=0.5)``): a comma only
+    separates levels when what follows looks like the next assignment."""
+    segs: List[str] = []
+    cur: List[str] = []
+    depth = 0
+    i, n = 0, len(args)
+    while i < n:
+        ch = args[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                raise ValueError("unbalanced ')' in hier level list")
+        elif ch == "," and depth == 0 \
+                and _HIER_SEG_RE.match(args, i + 1):
+            segs.append("".join(cur).strip())
+            cur = []
+            i += 1
+            continue
+        cur.append(ch)
+        i += 1
+    if depth != 0:
+        raise ValueError("unbalanced '(' in hier level list")
+    tail = "".join(cur).strip()
+    if tail:
+        segs.append(tail)
+    return segs
+
+
+def _parse_hier(clause: str) -> ScheduleSpec:
+    """Parse one ``hier(level=<clause>, ...)`` composition clause; level
+    values are full sub-clauses, parsed recursively by
+    ``ScheduleSpec.__post_init__``."""
+    m = _HIER_BODY_RE.match(clause)
+    if m is None:
+        raise ValueError(
+            f"malformed hier clause {clause!r} (expected "
+            f"'hier(host=<clause>, device=<clause>, tile=<clause>)'; "
+            f"hier itself takes no chunksize)")
+    kwargs: Dict[str, Any] = {}
+    try:
+        segs = _split_hier_args(m.group("args"))
+    except ValueError as e:
+        raise ValueError(f"hier clause {clause!r}: {e}") from None
+    for seg in segs:
+        key, eq, val = seg.partition("=")
+        key, val = key.strip(), val.strip()
+        if not eq or not key.isidentifier() or not val:
+            raise ValueError(
+                f"hier clause {clause!r}: expected 'level=<clause>' "
+                f"segments, got {seg!r}")
+        if key in kwargs:
+            raise ValueError(
+                f"hier clause {clause!r}: duplicate level {key!r}")
+        kwargs[key] = val
+    try:
+        return ScheduleSpec(kind="hier",
+                            kwargs=tuple(sorted(kwargs.items())))
+    except ValueError as e:
+        raise ValueError(f"hier clause {clause!r}: {e}") from None
+
+
 def parse(clause: str) -> ScheduleSpec:
     """Parse one OpenMP-style schedule clause string into a spec.
 
@@ -277,6 +489,8 @@ def parse(clause: str) -> ScheduleSpec:
     if not isinstance(clause, str):
         raise TypeError(f"expected a clause string, got "
                         f"{type(clause).__name__}")
+    if _HIER_HEAD_RE.match(clause):
+        return _parse_hier(clause)
     m = _CLAUSE_RE.match(clause)
     if (m is None or clause.count("(") != clause.count(")")
             # the grammar has no nesting: parens inside the arg list mean
@@ -601,6 +815,10 @@ _register_builtins()
 # the auto selector registers itself on import; it lives in its own
 # module (it depends on the engine/executor, which depend on this one)
 import repro.core.auto  # noqa: F401,E402  (registers "auto")
+
+# hierarchical composition registers itself the same way (it resolves
+# its level clauses through this module and plans through the engine)
+import repro.core.hier  # noqa: F401,E402  (registers "hier")
 
 # declare-style and lambda-style registrations mirror themselves in at
 # declaration time (declare_schedule / schedule_template import this

@@ -42,7 +42,10 @@ def plan_q_block_order(sched: SpecLike,
     string like ``"tss"`` / ``"guided,4"``, or scheduler instance),
     planned (and cached) by the engine: each of the ``num_workers``
     kernel lanes (default 2 = megacore) gets its worker's contiguous
-    block run, so the lanes inherit the schedule's load balance.
+    block run, so the lanes inherit the schedule's load balance.  A
+    hierarchical clause (``"hier(host=static, tile=tss)"``) yields a
+    host-block-major leaf order — each outer block's Q-blocks visited in
+    its own child plan's order (``ComposedPlan.tile_order``).
     ``device=True`` returns the plan's cached device array (one upload
     per plan, reused across launches)."""
     return plan_worker_order(sched, q_blocks, num_workers=num_workers,

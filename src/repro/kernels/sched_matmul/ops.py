@@ -38,6 +38,9 @@ def plan_tile_order(sched: SpecLike, m_tiles: int,
     scheduler instance), planned — and cached across kernel launches — by
     the engine: each of the ``num_workers`` kernel lanes (default 2 = TPU
     megacore) gets the contiguous tile run the UDS assigned to it.
+    A hierarchical clause (``"hier(host=static, tile=guided,2)"``) yields
+    a host-block-major leaf order: each outer block's tiles are visited
+    in its own child plan's order (``ComposedPlan.tile_order``).
     ``device=True`` returns the plan's cached device array (one upload
     per plan, reused across launches)."""
     return plan_worker_order(sched, m_tiles, num_workers=num_workers,

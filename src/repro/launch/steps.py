@@ -212,10 +212,19 @@ def _make_microbatch_grads(model: Model, *, remat: str, ce_chunk: int,
                            num_microbatches: int) -> Callable:
     """The shared loss/grad core of the train-step factories: full-batch
     gradients, or a ``lax.scan`` gradient accumulation over
-    ``num_microbatches`` equal splits (one compiled shape)."""
+    ``num_microbatches`` equal splits (one compiled shape).
+
+    The accumulation is GROUPING-INVARIANT: every microbatch's objective
+    is its CE *sum* normalized by the GLOBAL real-token count (computed
+    before the scan) plus its 1/M share of the aux loss, so summing the
+    per-microbatch gradients reproduces the full-batch gradient exactly
+    (in exact arithmetic) no matter which rows land in which microbatch.
+    This is the invariant that lets a hierarchical host-block-aligned
+    microbatch grouping match the flat single-host grouping's loss
+    trajectory — and makes ``num_microbatches`` itself loss-neutral."""
     cfg = model.cfg
 
-    def loss_fn(params, batch):
+    def _losses(params, batch):
         inputs = {k: v for k, v in batch.items()
                   if k in ("tokens", "embeds", "positions_3d", "segment_ids")}
         hidden, loads = model.forward(params, inputs, remat=remat,
@@ -228,24 +237,33 @@ def _make_microbatch_grads(model: Model, *, remat: str, ce_chunk: int,
             mask, chunk=ce_chunk,
             valid_vocab=(cfg.vocab_size
                          if cfg.padded_vocab != cfg.vocab_size else None))
-        ce = loss_sum / jnp.maximum(cnt, 1.0)
         aux = jnp.zeros((), jnp.float32)
         if cfg.is_moe:
             # switch-style balance loss from measured hard loads
             # (aux = E * sum_e f_e^2; f = p approximation documented)
             f = loads.mean(axis=0)
             aux = cfg.num_experts * jnp.sum(f * f)
-        return ce + aux_loss_weight * aux, (ce, aux, loads, cnt)
+        return loss_sum, cnt, aux
+
+    def loss_fn(params, batch):
+        loss_sum, cnt, aux = _losses(params, batch)
+        ce = loss_sum / jnp.maximum(cnt, 1.0)
+        return ce + aux_loss_weight * aux, (ce, aux, cnt)
+
+    def mb_loss_fn(params, batch, denom):
+        # one microbatch's share of the GLOBAL objective
+        loss_sum, cnt, aux = _losses(params, batch)
+        obj = loss_sum / denom + aux_loss_weight * aux / num_microbatches
+        return obj, (loss_sum, aux, cnt)
 
     def microbatch_grads(params, batch):
         if num_microbatches == 1:
-            grads, (ce, aux, loads, cnt) = jax.grad(
+            grads, (ce, aux, cnt) = jax.grad(
                 loss_fn, has_aux=True)(params, batch)
             return grads, ce, aux, cnt
         # static equal split (UDS plans sizes host-side by permuting work
         # into the microbatches; compiled shapes stay uniform)
         def split(v):
-            b = v.shape[0] if v.ndim >= 1 else None
             if v.ndim >= 2 and v.shape[0] % num_microbatches == 0:
                 return v.reshape(num_microbatches,
                                  v.shape[0] // num_microbatches, *v.shape[1:])
@@ -254,19 +272,21 @@ def _make_microbatch_grads(model: Model, *, remat: str, ce_chunk: int,
                   v.reshape(3, num_microbatches, -1, v.shape[-1])
                   .swapaxes(0, 1))
               for k, v in batch.items()}
+        denom = jnp.maximum(
+            (batch["labels"] >= 0).sum().astype(jnp.float32), 1.0)
 
         def one(carry, mbi):
-            g_acc, ce_acc, aux_acc, cnt_acc = carry
-            grads, (ce, aux, _, cnt) = jax.grad(
-                loss_fn, has_aux=True)(params, mbi)
+            g_acc, ls_acc, aux_acc, cnt_acc = carry
+            grads, (ls, aux, cnt) = jax.grad(
+                mb_loss_fn, has_aux=True)(params, mbi, denom)
             g_acc = jax.tree.map(jnp.add, g_acc, grads)
-            return (g_acc, ce_acc + ce, aux_acc + aux, cnt_acc + cnt), None
+            return (g_acc, ls_acc + ls, aux_acc + aux, cnt_acc + cnt), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (g, ce, aux, cnt), _ = jax.lax.scan(
+        (g, ls, aux, cnt), _ = jax.lax.scan(
             one, (zeros, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), mb)
-        inv = 1.0 / num_microbatches
-        return jax.tree.map(lambda x: x * inv, g), ce * inv, aux * inv, cnt
+        # reported loss = global token mean (what the full batch reports)
+        return g, ls / denom, aux / num_microbatches, cnt
 
     return microbatch_grads
 

@@ -41,13 +41,15 @@ from repro.core.spec import SpecLike, resolve
 from repro.data import SyntheticCorpus
 from repro.launch.mesh import (batch_shardings, make_host_mesh, make_mesh,
                                rules_for, shardings_for)
-from repro.launch.steps import (make_fused_train_step, make_train_step,
-                                opt_state_specs, plan_microbatches,
-                                split_batch_by_shares)
+from repro.launch.steps import (apply_microbatch_plan, make_fused_train_step,
+                                make_train_step, opt_state_specs,
+                                plan_microbatches, split_batch_by_shares)
 from repro.models import get_model
 from repro.optim import cosine_schedule, make_optimizer, wsd_schedule
 from repro.sched import (CapacityPlanner, StragglerMitigator,
                          pack_with_scheduler)
+from repro.sched.microbatch import (plan_hier_microbatch_permutation,
+                                    plan_microbatch_permutation)
 from repro.sharding import axis_rules
 from repro.checkpoint import AsyncCheckpointer
 
@@ -79,16 +81,36 @@ class TrainLoop:
         if batch % hosts != 0:
             raise ValueError(f"global batch {batch} not divisible by "
                              f"{hosts} hosts")
+        # ``scheduler`` accepts any schedule clause form, including a
+        # hierarchical composition hier(host=..., device=..., tile=...).
+        # A hier clause threads through every loop surface: the outermost
+        # (host) level packs documents and drives the straggler token
+        # shares, the device level assigns microbatch rows per host block.
+        self.pack_sched = resolve(scheduler)
+        self.hier = (self.pack_sched
+                     if getattr(self.pack_sched, "hier_levels", None)
+                     else None)
         if hosts > 1 and num_microbatches > 1:
-            # the splitter's host model is "host h owns contiguous row
-            # block h" of the (B, S) input; the microbatch reshape
-            # (B,S) -> (M, B/M, S) inside jit lets GSPMD re-shard each
-            # microbatch over the hosts, so physical row ownership is no
-            # longer that block and shares/attribution would land on the
-            # wrong hosts.  Refuse rather than silently mis-attribute
-            # (microbatch-aware host row mapping is a ROADMAP item).
-            raise ValueError("hosts > 1 does not compose with "
-                             "num_microbatches > 1 yet")
+            if self.hier is None:
+                # the splitter's host model is "host h owns contiguous row
+                # block h" of the (B, S) input; the microbatch reshape
+                # (B,S) -> (M, B/M, S) inside jit lets GSPMD re-shard each
+                # microbatch over the hosts, so for a FLAT clause physical
+                # row ownership is no longer that block and shares /
+                # attribution would land on the wrong hosts.  A hier
+                # clause's host level owns the blocks and the microbatch
+                # permutation is planned PER BLOCK, interleaved so every
+                # microbatch's host-h shard holds only host-h rows
+                # (plan_hier_microbatch_permutation).
+                raise ValueError(
+                    "hosts > 1 does not compose with num_microbatches > 1 "
+                    "for a flat schedule clause — use a hierarchical one, "
+                    "e.g. hier(host=awf, device=static) "
+                    "(docs/SCHEDULING.md, Hierarchical composition)")
+            if (batch // hosts) % num_microbatches != 0:
+                raise ValueError(
+                    f"per-host row block ({batch // hosts}) not divisible "
+                    f"by num_microbatches ({num_microbatches})")
         self.hosts = hosts
         # per-host slowdown multipliers — the EMULATION's measurement model
         # (one process cannot clock N emulated hosts separately): host h's
@@ -108,11 +130,13 @@ class TrainLoop:
         # step's wall time split by ``add_time_weighted`` attribution.
         self.telemetry = LoopTelemetry(self.history, loop_id="train_step",
                                        num_workers=hosts)
-        # ``scheduler`` / ``microbatch_scheduler`` accept any schedule
-        # clause form: a spec, "guided,4", "uds:name(args)", "runtime"
-        # (late-bound from $REPRO_SCHEDULE), or a scheduler instance
-        self.pack_sched = resolve(scheduler)
-        self.microbatch_sched = microbatch_scheduler
+        # ``microbatch_scheduler`` accepts any schedule clause form: a
+        # spec, "guided,4", "uds:name(args)", "runtime", or a scheduler
+        # instance.  A hier clause's device level (when present) takes
+        # over the microbatch assignment.
+        dev_level = self.hier.level("device") if self.hier else None
+        self.microbatch_sched = (dev_level if dev_level is not None
+                                 else microbatch_scheduler)
         self.num_microbatches = num_microbatches
         # fused: apply the UDS microbatch permutation ON DEVICE inside the
         # jitted step (one dispatch per optimizer step) instead of as a
@@ -159,7 +183,12 @@ class TrainLoop:
         # new team size after churn (auto reselects from fresh telemetry).
         self.elastic = bool(elastic)
         self._scheduler_clause = scheduler
-        self._straggler_clause = straggler_scheduler
+        # a hierarchical --scheduler owns the host-share policy too: the
+        # mitigator plans the FULL hier clause (its worker_iters are the
+        # host level's shares, and the ComposedPlan's provenance is what a
+        # membership requeue recovers a dead host's block from)
+        self._straggler_clause = (self.hier.spec if self.hier is not None
+                                  else straggler_scheduler)
         self.membership_events: list = []
         self.requeue_audits: list = []
         self._kill_hosts = (tuple(int(h) for h in kill_hosts)
@@ -209,7 +238,7 @@ class TrainLoop:
         # shares.  min_host_share floors every host at 10% of the even
         # share so a throttled host keeps reporting (and can rehabilitate).
         self.mitigator = StragglerMitigator(num_hosts=hosts,
-                                            scheduler=straggler_scheduler,
+                                            scheduler=self._straggler_clause,
                                             min_share=min_host_share)
         # per-host input placement (batch rows block-split over "host")
         self._in_shard = None if hosts == 1 else "pending"
@@ -226,13 +255,13 @@ class TrainLoop:
         batch = {"tokens": jnp.asarray(packed.tokens),
                  "labels": jnp.asarray(packed.labels),
                  "segment_ids": jnp.asarray(packed.segment_ids)}
-        if self.num_microbatches > 1:
-            costs = (packed.segment_ids > 0).sum(axis=1).astype(float)
+        costs = ((packed.segment_ids > 0).sum(axis=1).astype(float)
+                 if self.num_microbatches > 1 else None)
+        if self.num_microbatches > 1 and self.hosts == 1:
             if self.fused_microbatches:
                 # plan host-side (the UDS still decides the assignment),
                 # but only ship the permutation — the gather itself runs
                 # inside the fused jitted step, not as an eager dispatch
-                from repro.sched.microbatch import plan_microbatch_permutation
                 perm = plan_microbatch_permutation(
                     self.microbatch_sched, costs, self.num_microbatches)
                 self._perm = jnp.asarray(perm)
@@ -257,18 +286,31 @@ class TrainLoop:
             # step completes: a membership change mid-step re-splits this
             # exact batch over the survivors (no step dropped at churn)
             if self.elastic:
-                self._pending_unsplit = (dict(batch), packed.labels)
+                self._pending_unsplit = (dict(batch), packed.labels, costs)
             # plan: AWF token shares from the measured per-host rates (the
             # engine's plan cache makes this ~µs in steady state; each
             # observe_step's flush bumps the measured epoch, so changed
             # rates miss the cache and the shares REPLAN) -> uneven split.
             # The packer's numpy labels let the splitter count per-host
-            # real tokens without a device round-trip (rows are never
-            # permuted here: multi-host excludes microbatching).
+            # real tokens without a device round-trip.  Splitting happens
+            # BEFORE any microbatch permutation: shares and attribution
+            # are defined over the ORIGINAL contiguous host blocks.
             shares = self.mitigator.token_shares(self.batch * self.seq_len)
             batch, self._host_tokens = split_batch_by_shares(
                 batch, shares, self.hosts, labels_np=packed.labels)
             self.last_shares = shares
+            if self.num_microbatches > 1:
+                # hier path (flat clauses were refused in __init__): the
+                # device level permutes each host's block independently,
+                # interleaved so microbatch m's host-h shard holds only
+                # host-h rows — block ownership survives the reshape
+                perm = plan_hier_microbatch_permutation(
+                    self.microbatch_sched, costs, self.num_microbatches,
+                    self.hosts, history=self.history)
+                if self.fused_microbatches:
+                    self._perm = jnp.asarray(perm)
+                else:
+                    batch = apply_microbatch_plan(batch, perm)
         return batch
 
     # ------------------------------------------------------- membership
@@ -318,8 +360,11 @@ class TrainLoop:
         shape = plan_degraded_mesh(len(survivors) * self.model_par,
                                    self.model_par)
         new_hosts = shape[0]
-        while new_hosts > 1 and self.batch % new_hosts:
-            new_hosts //= 2      # keep the global batch divisible
+        while new_hosts > 1 and (
+                self.batch % new_hosts
+                or (self.num_microbatches > 1
+                    and (self.batch // new_hosts) % self.num_microbatches)):
+            new_hosts //= 2      # keep batch AND per-host blocks divisible
         event = MembershipEvent(kind="loss", old_size=old_hosts,
                                 new_size=new_hosts, lost=tuple(lost),
                                 step=self.step)
@@ -371,6 +416,8 @@ class TrainLoop:
         self.telemetry.record_membership(event)
         self.mitigator.resize(new_hosts, lost=lost, step=self.step)
         self.pack_sched = resolve(self._scheduler_clause)
+        if self.hier is not None:
+            self.hier = self.pack_sched
         self.membership_events.append(event)
         return event
 
@@ -383,13 +430,13 @@ class TrainLoop:
         every real token of the step survives verbatim)."""
         if self._pending_unsplit is None:
             raise RuntimeError("no pending batch to re-split")
-        batch, labels_np = self._pending_unsplit
+        batch, labels_np, costs = self._pending_unsplit
         if self.hosts == 1:
             self._host_tokens = np.asarray([(labels_np >= 0).sum()],
                                            np.int64)
             self.last_shares = np.asarray([self.batch * self.seq_len],
                                           np.int64)
-            return batch
+            return self._replan_microbatches(batch, costs)
         shares = self._churn_shares
         if shares is None:
             shares = self.mitigator.token_shares(self.batch * self.seq_len)
@@ -397,6 +444,26 @@ class TrainLoop:
         batch, self._host_tokens = split_batch_by_shares(
             batch, shares, self.hosts, labels_np=labels_np)
         self.last_shares = shares
+        return self._replan_microbatches(batch, costs)
+
+    def _replan_microbatches(self, batch, costs):
+        """Re-plan the microbatch permutation for the post-churn team: the
+        held batch was stored UNPERMUTED, and the block-aligned interleave
+        geometry depends on the (now changed) host count."""
+        if self.num_microbatches <= 1 or costs is None:
+            return batch
+        if self.hosts > 1:
+            perm = plan_hier_microbatch_permutation(
+                self.microbatch_sched, costs, self.num_microbatches,
+                self.hosts, history=self.history)
+        else:
+            perm = plan_microbatch_permutation(
+                self.microbatch_sched, costs, self.num_microbatches,
+                history=self.history)
+        if self.fused_microbatches:
+            self._perm = jnp.asarray(perm)
+        else:
+            batch = apply_microbatch_plan(batch, perm)
         return batch
 
     def _observe_multihost(self, dt: float) -> None:
@@ -501,8 +568,12 @@ def main() -> None:
     ap.add_argument("--scheduler", default="fac2",
                     help='schedule clause: "fac2", "guided,4", '
                          '"uds:name(args)", "runtime" (late-bound from '
-                         '$REPRO_SCHEDULE), or "auto" (selected online '
-                         "from telemetry; see docs/SCHEDULING.md)")
+                         '$REPRO_SCHEDULE), "auto" (selected online from '
+                         'telemetry), or a hierarchical composition '
+                         '"hier(host=awf, device=guided,4)" whose host '
+                         "level drives packing + token shares and whose "
+                         "device level assigns microbatch rows per host "
+                         "block (see docs/SCHEDULING.md)")
     ap.add_argument("--microbatch-scheduler", default="dynamic,1",
                     help="schedule clause for the microbatch assignment")
     ap.add_argument("--microbatches", type=int, default=1)

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core import LoopHistory, LoopSpec, SchedulerContext, get_engine
 from repro.core.spec import SpecLike, resolve
 
-__all__ = ["plan_microbatch_permutation"]
+__all__ = ["plan_hier_microbatch_permutation", "plan_microbatch_permutation"]
 
 
 def plan_microbatch_permutation(sched: SpecLike,
@@ -72,3 +72,54 @@ def plan_microbatch_permutation(sched: SpecLike,
     perm = [r for b in buckets for r in b]
     assert sorted(perm) == list(range(B))
     return np.asarray(perm, dtype=np.int32)
+
+
+def plan_hier_microbatch_permutation(sched: SpecLike,
+                                     row_costs: Sequence[float],
+                                     num_microbatches: int,
+                                     num_hosts: int,
+                                     history: Optional[LoopHistory] = None
+                                     ) -> np.ndarray:
+    """Host-block-aligned microbatch permutation for hierarchical clauses.
+
+    Multi-host training owns the (B, S) batch as ``num_hosts`` contiguous
+    row blocks (the splitter masks per block), while the compiled
+    microbatch reshape ``(B, S) -> (M, B/M, S)`` re-shards every
+    microbatch's rows over the hosts again — within microbatch ``m`` host
+    ``h`` physically runs rows ``m*B/M + [h*B/(M*H), (h+1)*B/(M*H))``.
+    This planner keeps BOTH owners aligned: each host block is permuted
+    *independently* (the hier device-level clause balances row cost
+    across the M slots inside the block), and the per-host slot runs are
+    interleaved so host ``h``'s rows land exactly in host ``h``'s shard
+    of every microbatch.  Row ownership never crosses hosts, so token
+    shares, straggler attribution, and membership requeue of a host's
+    block all stay valid with microbatching on.
+
+    Returns a (B,) int32 permutation with
+    ``perm[m*B/M + h*rpm + j] = h*B/H + local_perm_h[m*rpm + j]``
+    where ``rpm = B/(M*H)`` and ``local_perm_h`` is the flat planner's
+    permutation of host ``h``'s block.
+    """
+    B = len(row_costs)
+    if num_hosts <= 0 or B % num_hosts != 0:
+        raise ValueError(
+            f"batch rows ({B}) must divide evenly over hosts ({num_hosts})")
+    rows_per_host = B // num_hosts
+    if rows_per_host % num_microbatches != 0:
+        raise ValueError(
+            f"rows per host ({rows_per_host}) must divide evenly over "
+            f"num_microbatches ({num_microbatches})")
+    rpm = rows_per_host // num_microbatches  # rows per (microbatch, host)
+    costs = np.asarray(row_costs, dtype=float)
+    perm = np.empty(B, dtype=np.int32)
+    for h in range(num_hosts):
+        lo = h * rows_per_host
+        local = plan_microbatch_permutation(
+            sched, costs[lo:lo + rows_per_host], num_microbatches,
+            history=history)
+        # local[m*rpm:(m+1)*rpm] are host h's rows for microbatch m
+        for m in range(num_microbatches):
+            dst = m * (B // num_microbatches) + h * rpm
+            perm[dst:dst + rpm] = lo + local[m * rpm:(m + 1) * rpm]
+    assert sorted(perm.tolist()) == list(range(B))
+    return perm

@@ -1,0 +1,217 @@
+"""Cross-level conformance suite for hierarchical schedule composition.
+
+``hier(host=..., device=..., tile=...)`` compiles to a ComposedPlan whose
+outermost level partitions the loop into contiguous blocks and whose
+inner levels re-plan every block.  The suite pins the composition laws:
+
+* single-level identity — ``hier(host=X)`` is chunk-for-chunk identical
+  to flat ``X`` for EVERY registered builtin family;
+* exact partition — composed leaves cover ``[lb, ub)`` with no overlap;
+* provenance — every leaf chunk maps back through its host block;
+* leaf orders — ``tile_order`` is an exact permutation, host-block-major;
+* membership — requeue on a composed plan recovers exactly the dead
+  host's contiguous block.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ComposedPlan, HierSchedule, LoopSpec
+from repro.core.engine import PlanEngine
+from repro.core.spec import parse, registered_names, resolve
+from repro.sched.microbatch import plan_hier_microbatch_permutation
+
+P = 4
+
+# one representative clause per registered builtin family (weights sized
+# for P workers).  The completeness assertion below keeps this map honest:
+# a newly registered family fails the suite until it gets a row here.
+FAMILY_CLAUSES = {
+    "af": "af",
+    "auto": "auto(candidates=guided:fac2)",
+    "awf": "awf",
+    "awf_b": "awf_b",
+    "awf_c": "awf_c",
+    "awf_d": "awf_d",
+    "awf_e": "awf_e",
+    "dynamic": "dynamic,2",
+    "fac": "fac",
+    "fac2": "fac2",
+    "fsc": "fsc",
+    "gss": "gss",
+    "guided": "guided,4",
+    "rand": "rand(seed=7)",
+    "ss": "ss",
+    "static": "static",
+    "static_block": "static_block",
+    "static_cyclic": "static_cyclic",
+    "static_steal": "static_steal",
+    "taper": "taper(mu=2.0,sigma=0.5)",
+    "tfss": "tfss",
+    "tss": "tss(64,8)",
+    "wf2": "wf2(weights=2.0:1.0:1.0:1.0)",
+}
+
+
+def test_family_map_covers_registry():
+    builtin = set(registered_names(source="builtin")) - {"hier"}
+    assert builtin == set(FAMILY_CLAUSES), (
+        "FAMILY_CLAUSES out of sync with the builtin registry — add a "
+        "representative clause for every new family")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CLAUSES))
+def test_single_level_hier_identical_to_flat(family):
+    """hier(host=X) == flat X, chunk for chunk, for every builtin."""
+    clause = FAMILY_CLAUSES[family]
+    loop = LoopSpec(lb=0, ub=1000, num_workers=P, loop_id="hier_id")
+    eng = PlanEngine()
+    flat = eng.plan(resolve(clause), loop)
+    hier = eng.plan(resolve(f"hier(host={clause})"), loop)
+    assert isinstance(hier, ComposedPlan) and not hier.children
+    assert hier.identical(flat), f"hier(host={clause}) diverged from flat"
+    # and the leaf order every kernel front-end consumes matches too
+    np.testing.assert_array_equal(hier.tile_order(order="worker"),
+                                  flat.tile_order(order="worker"))
+
+
+def test_composed_plan_partitions_exactly():
+    loop = LoopSpec(lb=7, ub=1007, num_workers=P, loop_id="hier_part")
+    plan = PlanEngine().plan(
+        resolve("hier(host=wf2(weights=4.0:2.0:1.0:1.0), device=guided,4, "
+                "tile=static)"), loop)
+    assert isinstance(plan, ComposedPlan)
+    assert plan.num_levels == 3
+    assert plan.level_names == ("host", "device", "tile")
+    leaves = plan.leaf_chunks()
+    assert sum(leaf["size"] for leaf in leaves) == loop.trip_count
+    intervals = sorted((leaf["start"], leaf["start"] + leaf["size"])
+                       for leaf in leaves)
+    assert intervals[0][0] == loop.lb
+    assert intervals[-1][1] == loop.ub
+    for (_, stop), (start, _) in zip(intervals, intervals[1:]):
+        assert stop == start, "composed leaves overlap or leave a gap"
+
+
+def test_leaf_provenance_maps_through_host_blocks():
+    loop = LoopSpec(lb=0, ub=997, num_workers=P, loop_id="hier_prov")
+    plan = PlanEngine().plan(
+        resolve("hier(host=static, device=fac2, tile=static)"), loop)
+    seen_per_host = {h: 0 for h in range(P)}
+    for leaf in plan.leaf_chunks():
+        owners = leaf["owners"]
+        assert set(owners) == {"host", "device", "tile"}
+        h = owners["host"]
+        lo, hi = plan.host_block(h)
+        assert lo <= leaf["start"] and leaf["start"] + leaf["size"] <= hi
+        seen_per_host[h] += leaf["size"]
+    for h in range(P):
+        lo, hi = plan.host_block(h)
+        assert seen_per_host[h] == hi - lo, (
+            f"host {h}'s leaves do not reassemble its block")
+    # blocks themselves tile the loop in host-id order
+    assert plan.host_block(0)[0] == loop.lb
+    assert plan.host_block(P - 1)[1] == loop.ub
+    for h in range(P - 1):
+        assert plan.host_block(h)[1] == plan.host_block(h + 1)[0]
+
+
+def test_composed_tile_order_is_block_major_permutation():
+    loop = LoopSpec(lb=0, ub=257, num_workers=P, loop_id="hier_tiles")
+    plan = PlanEngine().plan(
+        resolve("hier(host=static, device=guided,2)"), loop)
+    for order in ("dequeue", "worker"):
+        got = plan.tile_order(order=order)
+        assert sorted(got.tolist()) == list(range(257))
+        # host-block-major: block h's tiles appear as one contiguous run
+        pos = 0
+        for h in range(P):
+            lo, hi = plan.host_block(h)
+            run = got[pos:pos + (hi - lo)]
+            assert sorted(run.tolist()) == list(range(lo, hi))
+            pos += hi - lo
+
+
+def test_level_workers_pin_per_level_team_sizes():
+    loop = LoopSpec(lb=0, ub=600, num_workers=P, loop_id="hier_workers")
+    plan = PlanEngine().plan(
+        resolve("hier(host=static, device=dynamic, workers=2:3)"), loop)
+    assert plan.loop.num_workers == 2          # host level pinned to 2
+    assert len(plan.children) == 2
+    for child in plan.children:
+        assert child.loop.num_workers == 3     # device level pinned to 3
+        assert set(child.workers.tolist()) <= {0, 1, 2}
+
+
+def test_composed_plan_is_cacheable():
+    eng = PlanEngine()
+    loop = LoopSpec(lb=0, ub=1000, num_workers=P, loop_id="hier_cache")
+    a = eng.plan(resolve("hier(host=static, device=guided,4)"), loop)
+    b = eng.plan(resolve("hier(host=static, device=guided,4)"), loop)
+    assert a is b, "equal hier clauses must hit the plan cache"
+
+
+def test_requeue_recovers_exactly_the_dead_hosts_block():
+    eng = PlanEngine()
+    loop = LoopSpec(lb=0, ub=1000, num_workers=P, loop_id="hier_requeue")
+    clause = "hier(host=wf2(weights=1.0:1.0:2.0:4.0), device=static)"
+    plan = eng.plan(resolve(clause), loop)
+    lost = [2]
+    lo, hi = plan.host_block(2)
+    assert plan.unfinished_ranges(lost) == [(lo, hi)]
+    new_plan, iter_map = eng.requeue_plan(
+        plan, clause, lost_workers=lost, num_workers=P - 1)
+    assert len(iter_map) == hi - lo
+    assert sorted(iter_map) == list(range(lo, hi)), (
+        "requeue must move ONLY the dead host's contiguous block")
+    # survivors' blocks are untouched by construction (their ids never
+    # appear in the requeued iteration map)
+    for h in (0, 1, 3):
+        slo, shi = plan.host_block(h)
+        assert not (set(range(slo, shi)) & set(iter_map))
+
+
+def test_hier_spec_roundtrip_and_accessors():
+    clause = "hier(host=awf, device=guided,4, tile=static, workers=4:2:2)"
+    spec = parse(clause)
+    assert spec.is_hier
+    assert parse(str(spec)) == spec
+    assert [n for n, _ in spec.levels] == ["host", "device", "tile"]
+    assert spec.level_workers == (4, 2, 2)
+    sched = resolve(spec)
+    assert isinstance(sched, HierSchedule)
+    assert sched.level("device") == parse("guided,4")
+    assert sched.adaptive          # awf host level => epoch-keyed plans
+    assert not resolve("hier(host=static)").adaptive
+
+
+@pytest.mark.parametrize("clause,msg", [
+    ("hier()", "at least one level"),
+    ("hier(host=static, host=guided)", "duplicate"),
+    ("hier(pod=static)", "unknown hier level"),
+    ("hier(host=runtime)", "concrete schedule"),
+    ("hier(host=hier(device=static))", "cannot nest"),
+    ("hier(host=static, workers=2:2)", "workers"),
+    ("hier(host=static),8", "chunksize"),
+])
+def test_hier_grammar_rejections(clause, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse(clause)
+
+
+def test_hier_microbatch_permutation_is_block_aligned():
+    rng = np.random.default_rng(0)
+    B, M, H = 32, 4, 4
+    costs = rng.integers(1, 100, size=B).astype(float)
+    perm = plan_hier_microbatch_permutation("dynamic,1", costs, M, H)
+    assert sorted(perm.tolist()) == list(range(B))
+    rows_per_host, rpm = B // H, B // (M * H)
+    for m in range(M):
+        for h in range(H):
+            sl = perm[m * (B // M) + h * rpm:
+                      m * (B // M) + (h + 1) * rpm]
+            assert all(h * rows_per_host <= r < (h + 1) * rows_per_host
+                       for r in sl), (
+                "microbatch shard rows crossed a host block")
+    with pytest.raises(ValueError, match="divide evenly"):
+        plan_hier_microbatch_permutation("static", costs, 3, H)

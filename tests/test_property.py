@@ -285,3 +285,66 @@ def test_chunked_linear_attention_matches_sequential(b, h, t, dk, dv, chunk,
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical composition
+# ---------------------------------------------------------------------------
+@st.composite
+def hier_clauses(draw):
+    """Random 1–3-level hier clauses over resolvable flat clauses, with
+    per-level worker counts pinned (weight-carrying levels need their own
+    team size): returns (clause, [(p, min_chunk), ...] per level)."""
+    n_levels = draw(st.integers(1, 3))
+    names = ("host", "device", "tile")[:n_levels]
+    parts, metas = [], []
+    for nm in names:
+        clause, p, mc = draw(resolvable_clauses())
+        parts.append(f"{nm}={clause}")
+        metas.append((p, mc))
+    parts.append("workers=" + ":".join(str(p) for p, _ in metas))
+    return "hier(" + ", ".join(parts) + ")", metas
+
+
+@given(hc=hier_clauses())
+@settings(max_examples=100, deadline=None)
+def test_hier_clause_roundtrip(hc):
+    """Random multi-level hier clauses are lossless through the parser:
+    parse -> str -> parse is the identity and rendering is a fixed point
+    (nested specs are plan-cache identities like flat ones)."""
+    clause, _ = hc
+    spec = parse(clause)
+    assert spec.is_hier
+    assert parse(str(spec)) == spec
+    assert str(parse(str(spec))) == str(spec)
+
+
+@given(hc=hier_clauses(), n=st.integers(0, 1500))
+@settings(max_examples=80, deadline=None)
+def test_hier_composed_plans_conserve_iterations(hc, n):
+    """Any hier clause, any loop: the composed leaves exactly partition
+    [0, n) (iteration count is conserved through every level), and each
+    level's declared min-chunk holds for its non-final chunks."""
+    from repro.core.engine import PlanEngine
+    clause, metas = hc
+    loop = LoopSpec(lb=0, ub=n, num_workers=metas[0][0],
+                    loop_id="prop_hier")
+    plan = PlanEngine().plan(resolve(clause), loop)
+    leaves = plan.leaf_chunks()
+    assert sum(leaf["size"] for leaf in leaves) == n
+    ivals = sorted((leaf["start"], leaf["start"] + leaf["size"])
+                   for leaf in leaves)
+    for (_, stop), (start, _) in zip(ivals, ivals[1:]):
+        assert stop == start, "leaves overlap or leave a gap"
+    if n:
+        assert ivals[0][0] == 0 and ivals[-1][1] == n
+
+    def check_min_chunks(p, level):
+        _, mc = metas[level]
+        if mc is not None:
+            by_start = sorted(zip(p.starts.tolist(), p.sizes.tolist()))
+            assert all(size >= mc for _, size in by_start[:-1])
+        for child in getattr(p, "children", ()):
+            check_min_chunks(child, level + 1)
+
+    check_min_chunks(plan, 0)

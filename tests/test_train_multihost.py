@@ -201,11 +201,85 @@ def test_fused_microbatches_noop_at_one_microbatch():
     assert not loop.fused_microbatches
 
 
-def test_multihost_rejects_microbatching():
+def test_multihost_rejects_microbatching_for_flat_clauses():
     """Physical row ownership under the (M, B/M, S) microbatch reshape is
-    not the splitter's contiguous-block host model, so the combination is
-    refused instead of silently mis-attributing work (ROADMAP item)."""
+    not the splitter's contiguous-block host model, so for a FLAT clause
+    the combination is refused instead of silently mis-attributing work.
+    A hierarchical clause composes: its host level owns the blocks and
+    the microbatch permutation is planned per block."""
     from repro.launch.train import TrainLoop
     cfg = get_smoke_config("qwen2.5-3b")
     with pytest.raises(ValueError, match="microbatches"):
         TrainLoop(cfg, batch=8, seq_len=32, hosts=4, num_microbatches=2)
+    if jax.device_count() >= 4:
+        loop = TrainLoop(cfg, batch=8, seq_len=32, hosts=4,
+                         num_microbatches=2,
+                         scheduler="hier(host=awf, device=static)")
+        assert loop.hier is not None
+        # the device level took over the microbatch assignment
+        assert loop.microbatch_sched == loop.hier.level("device")
+    # hier still validates the block geometry: every host block must
+    # split evenly into microbatches
+    with pytest.raises(ValueError, match="not divisible"):
+        TrainLoop(cfg, batch=8, seq_len=32, hosts=4, num_microbatches=3,
+                  scheduler="hier(host=awf, device=static)")
+
+
+@needs_hosts
+def test_multihost_hier_microbatching_matches_single_host_losses():
+    """The acceptance equivalence: a 4-host hier(host=awf, device=static)
+    loop WITH gradient accumulation matches the single-host trajectory —
+    uniform shares make the split a no-op, the block-aligned permutation
+    keeps every microbatch shard inside its host's block, and the
+    grouping-invariant accumulation makes the grouping loss-neutral."""
+    from repro.launch.train import TrainLoop
+    cfg = get_smoke_config("qwen2.5-3b")
+    kw = dict(batch=8, seq_len=32, seed=3, num_microbatches=2,
+              scheduler="hier(host=awf, device=static)")
+    multi = TrainLoop(cfg, hosts=4, **kw)
+    a = multi.run(5, log_every=100)
+    single = TrainLoop(cfg, mesh_shape=(1, 1), **kw)
+    b = single.run(5, log_every=100)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=2e-3)
+    assert multi.last_shares.tolist() == [64, 64, 64, 64]
+    # fused on-device permutation is the same numbers again
+    fused = TrainLoop(cfg, hosts=4, fused_microbatches=True, **kw)
+    c = fused.run(5, log_every=100)
+    np.testing.assert_allclose(c, a, rtol=1e-3, atol=2e-3)
+
+
+@needs_hosts
+def test_membership_requeues_only_dead_hosts_blocks():
+    """Elastic churn on a composed plan: the dead hosts' contiguous row
+    blocks (and ONLY those) are requeued over the survivors — the host
+    level's chunk→worker provenance is the recovery map."""
+    from repro.launch.train import TrainLoop
+    cfg = get_smoke_config("qwen2.5-3b")
+    loop = TrainLoop(cfg, batch=8, seq_len=64, seed=0, hosts=4,
+                     num_microbatches=2,
+                     scheduler="hier(host=awf, device=static)",
+                     host_skew=[1.0, 1.0, 1.0, 2.0],
+                     elastic=True, kill_hosts=[2, 3], kill_at_step=3)
+    losses = loop.run(5, log_every=10 ** 9)
+    assert len(losses) == 5 and np.isfinite(losses).all()
+    assert loop.hosts == 2
+    assert loop.requeue_audits, (
+        "skewed shares must come from a live composed plan, so the kill "
+        "must exercise the requeue path")
+    audit = loop.requeue_audits[-1]
+    from repro.core.plan import ComposedPlan
+    plan = loop.mitigator.last_plan
+    assert plan is None or isinstance(plan, ComposedPlan)
+    # the requeued ranges are exactly the union of the dead hosts' blocks:
+    # blocks sit in host-id order, so hosts 2+3 own one contiguous tail
+    total = loop.batch * loop.seq_len
+    requeued = {i for lo, hi in audit["ranges"] for i in range(lo, hi)}
+    assert audit["lost"] == [2, 3]
+    assert len(requeued) == audit["requeued_iters"]
+    assert max(requeued) + 1 == total
+    assert requeued == set(range(min(requeued), total))
+    # survivors carried their own budgets untouched; requeued tokens are
+    # redistributed on top, covering the full budget
+    assert len(audit["carried"]) == 2
+    assert sum(audit["carried"]) + len(requeued) == total
+    assert sum(audit["shares"]) == total
